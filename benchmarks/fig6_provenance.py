@@ -1,0 +1,55 @@
+"""Fig. 6 analogue: origin-traceability of protected operands, per arch.
+
+Paper: >95 % of FP arithmetic instructions in SPEC binaries can be
+back-traced to the ``mov`` that loaded the faulting operand, enabling
+memory-origin repair; the rest fall back to (costlier) register-mode repair.
+
+Here the program is a dataflow graph, so the measurement is structural
+(core/provenance.py): the fraction of FLOP-carrying ops whose protected
+operand reaches them through address-preserving ops only.  Measured over the
+REDUCED config of every assigned architecture's forward pass with the
+parameters marked protected.
+
+CSV: name,us_per_call,derived  (the count column carries the percentage).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY
+from repro.core import provenance
+from repro.data import batch_for_step
+from repro.models import build_model
+
+
+def run():
+    rows = []
+    for name, full in REGISTRY.items():
+        cfg = full.reduced()
+        model = build_model(cfg)
+        batch = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            batch_for_step(cfg, jax.random.PRNGKey(0), 0, batch=2, seq=32),
+        )
+        params = model.abstract_params()
+        report = provenance.analyze(
+            lambda p, b: model.forward(p, b), [0], params, batch
+        )
+        rows.append((name, report))
+    return rows
+
+
+def main():
+    print("# fig6_provenance: % of FLOP-carrying ops whose protected operand")
+    print("# is repairable at its memory origin (paper: >95% on SPEC)")
+    print("name,us_per_call,derived")
+    for name, r in run():
+        print(
+            f"fig6_{name},{100.0 * r.fraction:.1f},"
+            f"traceable={r.origin_traceable}/{r.total_arith}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""§Roofline table: read the dry-run JSON records and print the three-term
+analysis per (arch × shape × mesh).
+
+Sources: launch/dryrun.py wrote one record per cell under
+benchmarks/results/.  The terms are static HLO-derived seconds-per-step per
+chip (launch/hlo.py accounting, launch/roofline.py constants).
+
+CSV: name,us_per_call,derived — us_per_call carries the dominant-term
+seconds; derived carries the full breakdown.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(mesh="16x16"):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS, "dryrun_*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh or not rec.get("ok") or not rec.get("report"):
+            continue
+        rows.append(rec["report"])
+    return rows
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("# roofline: no dry-run records found — run:")
+        print("#   PYTHONPATH=src python -m repro.launch.dryrun --all --out benchmarks/results")
+        print("name,us_per_call,derived")
+        return
+    print("# roofline (single-pod 16x16, per-chip seconds/step, static HLO)")
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = f"roofline_{r['arch']}_{r['cell']}"
+        print(
+            f"{name},{r['bound_s']*1e6:.0f},"
+            f"comp={r['compute_s']*1e3:.1f}ms;mem={r['memory_s']*1e3:.1f}ms;"
+            f"coll={r['collective_s']*1e3:.1f}ms;dom={r['dominant']};"
+            f"useful={r['useful_ratio']:.3f};frac={r['roofline_fraction']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

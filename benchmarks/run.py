@@ -1,0 +1,38 @@
+"""Benchmark harness — one section per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Each section prints ``name,us_per_call,derived`` CSV (see the individual
+modules for the exact semantics of the middle column).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import energy_model, fig6_provenance, fig7_overhead, roofline, table3_counts
+
+SECTIONS = (
+    ("fig7_overhead (paper Fig. 7)", fig7_overhead.main),
+    ("table3_counts (paper Table 3)", table3_counts.main),
+    ("fig6_provenance (paper Fig. 6)", fig6_provenance.main),
+    ("energy_model (paper §2.1)", energy_model.main),
+    ("roofline (assignment §Roofline)", roofline.main),
+)
+
+
+def main() -> None:
+    failures = 0
+    for title, fn in SECTIONS:
+        print(f"\n===== {title} =====")
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Serving under approximate memory: batched greedy decoding with a
+protected KV cache.
+
+The KV cache is the dominant approximate-memory resident in serving
+(DESIGN.md §4).  This example decodes a token batch while bit flips strike
+the cache between steps, in two conditions:
+
+  --repair register   every cache read repairs in-flight (per-step cost)
+  --repair memory     reactive scrub of the cache when repairs fired
+                      (one-shot, then clean — serving Table 3)
+
+Run:  PYTHONPATH=src python examples/serve_approx.py [--tokens 48] [--ber 1e-6]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import repair as repair_lib
+from repro.core import stats as stats_lib
+from repro.core.regions import annotate
+from repro.core.repair import RepairConfig
+from repro.launch.serve import build_serve_step, scrub_cache
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=48)
+    ap.add_argument("--ber", type=float, default=1e-4)
+    ap.add_argument("--repair", default="memory", choices=["register", "memory"])
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config(args.arch).reduced(),
+        repair=RepairConfig(mode=args.repair, policy="neighbor_mean",
+                            max_magnitude=1e3),
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_seq = args.tokens + 8
+
+    cache = model.init_cache(args.batch, max_seq)
+    region_tree = annotate(cache)
+    step_fn = jax.jit(build_serve_step(model))
+    stats = stats_lib.zeros()
+
+    tok = jnp.ones((args.batch, 1), jnp.int32)
+    out_tokens = [tok]
+    t0 = time.time()
+    n_scrubs = 0
+    for t in range(args.tokens):
+        # approximate-memory window strikes the resident cache (simulation)
+        cache = repair_lib.inject_pytree(
+            cache, jax.random.fold_in(jax.random.PRNGKey(9), t), args.ber,
+            region_tree,
+        )
+        if args.repair == "memory":
+            # reactive: scrub only when the previous step found something
+            cache, stats2 = scrub_cache(model, cache, stats)
+            fired = int(stats2["events"]) > int(stats["events"])
+            n_scrubs += int(fired)
+            stats = stats2
+        nxt, logits, cache = step_fn(
+            params, cache, {"tokens": tok}, jnp.asarray(t, jnp.int32)
+        )
+        assert bool(jnp.isfinite(logits).all()), "NaN reached the logits!"
+        tok = nxt[:, None]
+        out_tokens.append(tok)
+    dt = time.time() - t0
+
+    seq = jnp.concatenate(out_tokens, axis=1)
+    d = stats_lib.as_dict(stats)
+    print(f"arch={cfg.name} repair={args.repair} BER={args.ber:g}")
+    print(f"decoded {args.tokens} tokens x batch {args.batch} in {dt:.1f}s "
+          f"({1000 * dt / args.tokens:.0f} ms/token)")
+    print(f"cache repairs: nan={d['nan_found']} inf={d['inf_found']} "
+          f"events={d['events']} scrub_passes={n_scrubs}")
+    print(f"sample continuation (batch 0): {seq[0, :16].tolist()} ...")
+    print("all logits finite: True")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,263 @@
+"""Checkpointing: npz shards + JSON manifest, scrub-on-save, async save,
+elastic reshard on restore, preemption hook.
+
+Fault-tolerance contract (DESIGN.md §5):
+
+  * **scrub-on-save** — state is NaN/Inf-repaired *before* serialization, so
+    a checkpoint is always a clean repair source for the ``last_checkpoint``
+    policy (core/checkpoint_repair.py).  A NaN that slipped into approximate
+    memory between scrubs must never be persisted: the checkpoint is the
+    ground truth of last resort.
+  * **elastic reshard** — checkpoints store *global* arrays keyed by tree
+    path plus logical-axis metadata; ``load_checkpoint`` device_puts onto
+    whatever mesh/sharding the restarted job uses.  A job may come back on a
+    different topology (fewer pods after a failure, more after repair) and
+    restore without conversion.
+  * **atomic + versioned** — write to ``step_XXXX.tmp`` then rename; the
+    manifest is written last, so a torn save is invisible to ``latest``.
+  * **async save** — serialization happens on a worker thread after
+    ``jax.device_get`` (the only sync point); training continues during the
+    filesystem write.  ``wait()`` joins before the next save or exit.
+  * **preemption hook** — ``install_preemption_hook`` registers a SIGTERM
+    handler that runs one synchronous save (cluster schedulers send SIGTERM
+    before eviction).
+  * **stateless data** — nothing about the data pipeline is stored; batches
+    are pure functions of (seed, step) (data/pipeline.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import signal
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core import repair as repair_lib
+from ..core import stats as stats_lib
+from ..core.regions import annotate
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+def _flatten_with_paths(tree: Any) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_part(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_part(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return f"[{p.idx}]"
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(getattr(p, "key", p))
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree: Any,
+    *,
+    scrub: bool = True,
+    repair_cfg: Optional[repair_lib.RepairConfig] = None,
+    extra_meta: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Synchronous checkpoint write.  Returns the checkpoint path."""
+    if scrub:
+        cfg = repair_cfg or repair_lib.RepairConfig(mode="memory", policy="zero")
+        # force memory mode for the save-scrub regardless of run mode
+        cfg = repair_lib.RepairConfig(
+            mode="memory", policy=cfg.policy, include_inf=cfg.include_inf
+        )
+        tree, _ = repair_lib.scrub_pytree(
+            tree, cfg, stats_lib.zeros(), annotate(tree)
+        )
+
+    host = jax.device_get(tree)
+    return _write(directory, step, host, extra_meta)
+
+
+def _write(directory, step, host_tree, extra_meta) -> str:
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat = _flatten_with_paths(host_tree)
+    arrays = {}
+    meta_leaves = {}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        arrays[k] = arr
+        meta_leaves[k] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    np.savez(os.path.join(tmp, _ARRAYS), **arrays)
+
+    manifest = {
+        "step": int(step),
+        "leaves": meta_leaves,
+        "extra": extra_meta or {},
+        "format": 1,
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def load_checkpoint(
+    directory: str,
+    step: Optional[int] = None,
+    *,
+    like: Any = None,
+    shardings: Any = None,
+) -> Tuple[Any, int]:
+    """Restore (tree, step).  ``like`` supplies the treedef (and target
+    dtypes); ``shardings`` (same structure) triggers the elastic reshard:
+    every global array is device_put onto the new mesh's sharding."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, _ARRAYS))
+
+    if like is None:
+        # return a flat dict when no treedef is given
+        tree = {k: data[k] for k in data.files}
+        return tree, manifest["step"]
+
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten_with_paths(like).keys())
+    assert len(keys) == len(flat_like)
+    flat_sh = (
+        jax.tree.leaves(shardings) if shardings is not None
+        else [None] * len(flat_like)
+    )
+    leaves = []
+    for key, proto, sh in zip(keys, flat_like, flat_sh):
+        arr = data[key]
+        want = getattr(proto, "dtype", None)
+        if want is not None and str(arr.dtype) != str(want):
+            arr = arr.astype(want)
+        if sh is not None:
+            leaves.append(jax.device_put(arr, sh))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for n in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d{8})", n)
+        if m and os.path.exists(os.path.join(directory, n, _MANIFEST)):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Async, retention-managed checkpointing with a preemption hook."""
+
+    def __init__(
+        self,
+        directory: str,
+        *,
+        keep: int = 3,
+        scrub: bool = True,
+        repair_cfg: Optional[repair_lib.RepairConfig] = None,
+    ):
+        self.directory = directory
+        self.keep = keep
+        self.scrub = scrub
+        self.repair_cfg = repair_cfg
+        self._thread: Optional[threading.Thread] = None
+        self._last_state: Optional[Tuple[int, Any]] = None
+
+    # -------------------------------------------------------------- saving
+    def save(self, step: int, tree: Any, *, blocking: bool = False):
+        """Scrub + device_get synchronously; serialize on a worker thread."""
+        self.wait()
+        if self.scrub:
+            cfg = self.repair_cfg or repair_lib.RepairConfig(
+                mode="memory", policy="zero"
+            )
+            cfg = repair_lib.RepairConfig(
+                mode="memory", policy=cfg.policy, include_inf=cfg.include_inf
+            )
+            tree, _ = repair_lib.scrub_pytree(
+                tree, cfg, stats_lib.zeros(), annotate(tree)
+            )
+        host = jax.device_get(tree)
+        self._last_state = (step, host)
+
+        def work():
+            _write(self.directory, step, host, None)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(m.group(1))
+            for n in os.listdir(self.directory)
+            if (m := re.fullmatch(r"step_(\d{8})", n))
+        )
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True
+            )
+
+    # ------------------------------------------------------------- restore
+    def restore(self, like: Any = None, shardings: Any = None):
+        return load_checkpoint(self.directory, like=like, shardings=shardings)
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    # ---------------------------------------------------------- preemption
+    def install_preemption_hook(self, get_state: Callable[[], Tuple[int, Any]]):
+        """SIGTERM → one synchronous save of ``get_state()`` then re-raise."""
+        prev = signal.getsignal(signal.SIGTERM)
+
+        def handler(signum, frame):
+            step, tree = get_state()
+            self.wait()
+            save_checkpoint(
+                self.directory, step, tree,
+                scrub=self.scrub, repair_cfg=self.repair_cfg,
+            )
+            if callable(prev):
+                prev(signum, frame)
+
+        signal.signal(signal.SIGTERM, handler)
+        return handler

@@ -1,0 +1,54 @@
+"""Config registry: one module per assigned architecture (+ the paper's own
+matmul workload).  ``get_config(name)`` resolves assignment ids."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .base import (  # noqa: F401
+    SHAPES,
+    ArchConfig,
+    ShapeCell,
+    cells_for,
+    LONG_CONTEXT_FAMILIES,
+)
+
+from . import (  # noqa: F401
+    llava_next_mistral_7b,
+    mistral_large_123b,
+    paper_mmm,
+    phi35_moe_42b,
+    qwen2_1_5b,
+    qwen3_moe_30b,
+    seamless_m4t_large_v2,
+    stablelm_1_6b,
+    starcoder2_15b,
+    xlstm_1_3b,
+    zamba2_7b,
+)
+
+_MODULES = (
+    starcoder2_15b,
+    qwen2_1_5b,
+    mistral_large_123b,
+    stablelm_1_6b,
+    phi35_moe_42b,
+    qwen3_moe_30b,
+    llava_next_mistral_7b,
+    seamless_m4t_large_v2,
+    zamba2_7b,
+    xlstm_1_3b,
+)
+
+REGISTRY: Dict[str, ArchConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+
+def arch_names() -> List[str]:
+    return list(REGISTRY)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(
+            f"unknown architecture {name!r}; known: {sorted(REGISTRY)}"
+        )
+    return REGISTRY[name]

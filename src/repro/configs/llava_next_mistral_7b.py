@@ -1,0 +1,27 @@
+"""llava-next-mistral-7b — VLM backbone
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified].
+
+Mistral-7B backbone: 32L, d_model 4096, 32 heads (GQA kv=8), d_ff 14336,
+vocab 32000.  Per the assignment the vision frontend (anyres tiling + CLIP
+tower) is a STUB — ``input_specs`` feeds precomputed patch embeddings
+(B, P, d_model) that prefix the token sequence; loss is over text positions.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv=8,
+    d_ff=14336,
+    vocab=32000,
+    head_dim=128,
+    rope_theta=1000000.0,
+    norm="rms",
+    mlp="swiglu",
+    tie_embeddings=False,
+    frontend="patches",
+    frontend_fraction=0.125,
+)

@@ -1,0 +1,24 @@
+"""mistral-large-123b — dense GQA LM
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified].
+
+88L, d_model 12288, 96 heads (GQA kv=8), d_ff 28672, vocab 32768.
+The FSDP/TP stress case of the assignment: 123 B params — the dry-run must
+shard parameters over both mesh axes to fit (DESIGN.md §5).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv=8,
+    d_ff=28672,
+    vocab=32768,
+    head_dim=128,
+    rope_theta=1000000.0,
+    norm="rms",
+    mlp="swiglu",
+    tie_embeddings=False,
+)

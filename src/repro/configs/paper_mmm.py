@@ -1,0 +1,23 @@
+"""The paper's own evaluation workload (§4): N×N matrix-matrix multiply with
+an injected NaN, in three conditions (normal / register / memory).
+
+Not an ArchConfig — a small workload descriptor consumed by
+benchmarks/fig7_overhead.py, benchmarks/table3_counts.py and
+examples/quickstart.py.  Matrix sizes follow the paper (1000…5000), scaled
+to CPU-feasible N by default.
+"""
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperMMMConfig:
+    sizes: Tuple[int, ...] = (256, 512, 1024, 2048)   # CPU-scaled N
+    paper_sizes: Tuple[int, ...] = (1000, 2000, 3000, 4000, 5000)
+    n_injected: int = 1            # paper injects exactly one NaN
+    dtype_name: str = "float32"
+    repeats: int = 10              # paper: "measured 10 times, average"
+    blocks: Tuple[int, int, int] = (128, 128, 256)
+
+
+CONFIG = PaperMMMConfig()

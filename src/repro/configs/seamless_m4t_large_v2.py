@@ -1,0 +1,28 @@
+"""seamless-m4t-large-v2 — speech/text enc-dec [arXiv:2308.11596; hf].
+
+24L encoder + 24L decoder, d_model 1024, 16 heads (MHA, kv=16), d_ff 8192,
+vocab 256206.  The speech frontend (fbank + conformer conv modules) is a
+STUB per the assignment — ``input_specs`` feeds precomputed frame embeddings
+(B, S, d_model).  The giant vocab makes the embedding table the dominant
+approximate-memory resident for this arch.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv=16,
+    d_ff=8192,
+    vocab=256206,
+    head_dim=64,
+    rope_theta=10000.0,
+    norm="ln",
+    mlp="gelu",
+    tie_embeddings=True,
+    enc_layers=24,
+    dec_layers=24,
+    frontend="frames",
+)

@@ -1,0 +1,23 @@
+"""xlstm-1.3b — sLSTM + mLSTM stack [arXiv:2405.04517; unverified].
+
+48 blocks, d_model 2048, 4 heads, vocab 50304, d_ff=0 (blocks carry their
+own projections).  Every 8th block is sLSTM (sequential scalar memory), the
+rest mLSTM (chunked-parallel matrix memory).  Sub-quadratic: runs the
+long_500k cell; the mLSTM matrix memory C is the long-lived decode state
+(KV-cache analogue) protected by the repair machinery.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv=4,
+    d_ff=0,
+    vocab=50304,
+    norm="rms",
+    tie_embeddings=True,
+    slstm_every=8,
+)

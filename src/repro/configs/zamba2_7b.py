@@ -1,0 +1,30 @@
+"""zamba2-7b — hybrid Mamba2 + shared-attention [arXiv:2411.15242; unverified].
+
+81 Mamba2 layers, d_model 3584, ssm_state 64; shared transformer block
+(on concat(h, emb) = 7168 wide, 32 heads → head_dim 224, d_ff 14336)
+applied every 6 Mamba layers, alternating between 2 shared parameter sets,
+with a per-invocation down-projection.  vocab 32000.
+
+Sub-quadratic: runs the long_500k cell (SSM state is O(1) in context; the
+shared-attn KV is a thin slice of the stack).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv=32,
+    d_ff=14336,
+    vocab=32000,
+    rope_theta=10000.0,
+    norm="rms",
+    mlp="swiglu",
+    tie_embeddings=True,
+    ssm_state=64,
+    ssm_head_dim=64,
+    mamba_per_attn=6,
+    n_shared_blocks=2,
+)

@@ -1,0 +1,24 @@
+"""Reactive NaN repair for approximate memory — the paper's contribution.
+
+Public surface:
+
+  detect       bit-pattern NaN/Inf detection (shared with Pallas kernels)
+  policies     repair-value policy lattice (paper §5.2 design space)
+  injection    approximate-memory simulator (BER model + bit flips)
+  regions      exact/approximate memory partitioning of state pytrees
+  repair       register/memory repair modes (paper §3.3/§3.4)
+  stats        repair-event counters (Table 3 analogue)
+  provenance   origin-traceability analysis (Fig. 6 analogue)
+  checkpoint_repair  repair-from-checkpoint policy (answers §5.2)
+"""
+from . import (  # noqa: F401
+    checkpoint_repair,
+    detect,
+    injection,
+    policies,
+    provenance,
+    regions,
+    repair,
+    stats,
+)
+from .repair import RepairConfig, repair_tensor, scrub_pytree, use  # noqa: F401

@@ -1,0 +1,67 @@
+"""``last_checkpoint`` repair policy — repair NaNs from checkpoint shards.
+
+The strongest answer to the paper's open question (§5.2, "values to which
+NaNs are fixed"): at framework scale we *have* a recent good value for every
+protected buffer — the latest checkpoint.  Repairing a flipped weight from
+its checkpointed value restores it exactly, up to one checkpoint interval of
+optimizer drift; for inference (frozen weights) it is exact.
+
+This is only available at pytree granularity (the reference must be resident
+or fetchable); the in-kernel fused path uses the cheap statistical policies
+and this pass covers anything they mis-estimate, at checkpoint-load and
+periodic-scrub boundaries.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import detect, regions as regions_lib, stats as stats_lib
+
+
+def scrub_with_reference(
+    tree: Any,
+    ref_tree: Any,
+    stats: stats_lib.Stats,
+    region_tree: Optional[Any] = None,
+    *,
+    include_inf: bool = True,
+) -> Tuple[Any, stats_lib.Stats]:
+    """Replace fatal lanes of approximate-region leaves with the values from
+    ``ref_tree`` (same treedef, e.g. the last checkpoint)."""
+    if region_tree is None:
+        region_tree = regions_lib.annotate(tree)
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    refs = jax.tree.leaves(ref_tree)
+    regs = jax.tree.leaves(region_tree)
+    assert len(leaves) == len(refs) == len(regs), "treedef mismatch"
+
+    nan_tot = jnp.zeros((), jnp.int32)
+    inf_tot = jnp.zeros((), jnp.int32)
+    out = []
+    for leaf, ref, region in zip(leaves, refs, regs):
+        if (
+            region is regions_lib.Region.APPROX
+            and hasattr(leaf, "dtype")
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+        ):
+            bits = detect.bits_of(leaf)
+            nan_m = detect.is_nan_bits(bits, leaf.dtype)
+            inf_m = (
+                detect.is_inf_bits(bits, leaf.dtype)
+                if include_inf
+                else jnp.zeros_like(nan_m)
+            )
+            mask = nan_m | inf_m
+            out.append(jnp.where(mask, ref.astype(leaf.dtype), leaf))
+            nan_tot = nan_tot + jnp.sum(nan_m.astype(jnp.int32))
+            inf_tot = inf_tot + jnp.sum(inf_m.astype(jnp.int32))
+        else:
+            out.append(leaf)
+    return (
+        jax.tree_util.tree_unflatten(treedef, out),
+        stats_lib.record_repair(stats, nan_tot, inf_tot),
+    )

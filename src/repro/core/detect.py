@@ -1,0 +1,168 @@
+"""NaN/Inf detection via explicit bit patterns.
+
+The paper defines a NaN structurally: *"Changing a floating-point number to a
+NaN requires to flip all bits of the exponent part to 1"* (§2.2) — plus a
+non-zero mantissa; all-ones exponent with zero mantissa is ±Inf.  We detect
+at the bit level rather than with ``jnp.isnan`` for two reasons:
+
+1. It is exactly what approximate-memory bit flips produce — we classify the
+   *stored pattern*, which also lets us distinguish NaN from Inf and apply
+   different policies to each (Inf can be a legitimate computed value; a
+   *stored* Inf in a weight buffer is almost certainly a flip).
+2. The same mask logic runs inside Pallas kernels on integer views of the
+   loaded tile, where it compiles to cheap VPU compare/ands; keeping one
+   canonical implementation here makes kernel and reference agree bit-for-bit.
+
+All functions are shape-polymorphic and jit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Per-dtype IEEE-754 layout constants.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatLayout:
+    """Bit layout of an IEEE-754 binary float format."""
+
+    width: int            # total bits
+    exp_bits: int         # exponent field width
+    man_bits: int         # mantissa (fraction) field width
+    int_dtype: jnp.dtype  # same-width integer dtype for bitcasts
+
+    @property
+    def exp_mask(self) -> int:
+        return ((1 << self.exp_bits) - 1) << self.man_bits
+
+    @property
+    def man_mask(self) -> int:
+        return (1 << self.man_bits) - 1
+
+    @property
+    def sign_mask(self) -> int:
+        return 1 << (self.width - 1)
+
+    @property
+    def abs_mask(self) -> int:
+        return self.sign_mask - 1  # everything but the sign bit
+
+
+_LAYOUTS = {
+    jnp.dtype(jnp.float64): FloatLayout(64, 11, 52, jnp.dtype(jnp.uint64)),
+    jnp.dtype(jnp.float32): FloatLayout(32, 8, 23, jnp.dtype(jnp.uint32)),
+    jnp.dtype(jnp.bfloat16): FloatLayout(16, 8, 7, jnp.dtype(jnp.uint16)),
+    jnp.dtype(jnp.float16): FloatLayout(16, 5, 10, jnp.dtype(jnp.uint16)),
+}
+
+
+def layout_of(dtype) -> FloatLayout:
+    """Return the IEEE layout for a floating dtype (KeyError if unsupported)."""
+    dt = jnp.dtype(dtype)
+    if dt not in _LAYOUTS:
+        raise TypeError(f"no IEEE layout registered for dtype {dt}")
+    return _LAYOUTS[dt]
+
+
+def supported_dtypes():
+    return tuple(_LAYOUTS.keys())
+
+
+# ---------------------------------------------------------------------------
+# Detection (works on the float view; bit-level, no isnan).
+# ---------------------------------------------------------------------------
+
+
+def bits_of(x: jax.Array) -> jax.Array:
+    """Bitcast a float array to its same-width unsigned-integer view."""
+    return jax.lax.bitcast_convert_type(x, layout_of(x.dtype).int_dtype)
+
+
+def from_bits(bits: jax.Array, dtype) -> jax.Array:
+    """Inverse of :func:`bits_of`."""
+    return jax.lax.bitcast_convert_type(bits, jnp.dtype(dtype))
+
+
+def is_nan_bits(bits: jax.Array, dtype) -> jax.Array:
+    """NaN mask from an integer bit view: exp all-ones AND mantissa != 0."""
+    lay = layout_of(dtype)
+    exp_all_ones = (bits & lay.exp_mask) == lay.exp_mask
+    man_nonzero = (bits & lay.man_mask) != 0
+    return exp_all_ones & man_nonzero
+
+
+def is_inf_bits(bits: jax.Array, dtype) -> jax.Array:
+    """±Inf mask from an integer bit view: exp all-ones AND mantissa == 0."""
+    lay = layout_of(dtype)
+    exp_all_ones = (bits & lay.exp_mask) == lay.exp_mask
+    man_zero = (bits & lay.man_mask) == 0
+    return exp_all_ones & man_zero
+
+
+def nan_mask(x: jax.Array) -> jax.Array:
+    """Boolean mask of NaN lanes, computed from the bit pattern."""
+    return is_nan_bits(bits_of(x), x.dtype)
+
+
+def inf_mask(x: jax.Array) -> jax.Array:
+    """Boolean mask of ±Inf lanes, computed from the bit pattern."""
+    return is_inf_bits(bits_of(x), x.dtype)
+
+
+def exp_field_of(value: float, dtype) -> int:
+    """Exponent-field value of |value| in the given dtype's layout."""
+    import numpy as np
+
+    lay = layout_of(dtype)
+    np_dt = {16: np.uint16, 32: np.uint32, 64: np.uint64}[lay.width]
+    if jnp.dtype(dtype) == jnp.bfloat16:
+        bits = np.float32(abs(value)).view(np.uint32) >> 16
+    else:
+        bits = np.abs(np.array(value, jnp.dtype(dtype))).view(np_dt)
+    return int((int(bits) & lay.exp_mask) >> lay.man_bits)
+
+
+def is_extreme_bits(bits: jax.Array, dtype, threshold: float) -> jax.Array:
+    """Lanes with |x| ≥ threshold — including ±Inf and NaN — via a single
+    integer compare on the exponent field.
+
+    Beyond-paper extension (recorded in DESIGN.md): a bit flip on a high
+    exponent bit produces ~1e38, which is NOT a NaN but destroys a training
+    run within one step (measured in tests/test_e2e_training.py).  The
+    repair machinery therefore optionally treats 'exponent field ≥ that of
+    the threshold' as fatal; on the VPU this is the same compare/and cost as
+    the NaN pattern itself.
+    """
+    lay = layout_of(dtype)
+    field = exp_field_of(threshold, dtype)
+    return (bits & lay.exp_mask) >= (field << lay.man_bits)
+
+
+def extreme_mask(x: jax.Array, threshold: float) -> jax.Array:
+    return is_extreme_bits(bits_of(x), x.dtype, threshold)
+
+
+def nonfinite_mask(x: jax.Array, *, include_inf: bool = True) -> jax.Array:
+    """Mask of lanes the repair machinery considers *fatal*.
+
+    The paper repairs NaNs only; stored ±Inf is optionally included because in
+    an approximate-memory setting an all-ones exponent with a zero mantissa is
+    the same flip event one mantissa-bit away (and Inf·0 = NaN one op later).
+    """
+    bits = bits_of(x)
+    m = is_nan_bits(bits, x.dtype)
+    if include_inf:
+        m = m | is_inf_bits(bits, x.dtype)
+    return m
+
+
+@partial(jax.jit, static_argnames=("include_inf",))
+def count_nonfinite(x: jax.Array, *, include_inf: bool = True) -> jax.Array:
+    """Total number of fatal lanes (int32 scalar) — feeds core.stats."""
+    return jnp.sum(nonfinite_mask(x, include_inf=include_inf).astype(jnp.int32))

@@ -1,0 +1,105 @@
+"""Repair-value policies.
+
+Paper §5.2 leaves "the value to which a NaN is fixed" as future work and
+sketches the design space: 0 is the LetGo choice but breaks divisions; deep
+nets tolerate sign flips because values are symmetric around 0; the right
+value is workload-dependent.  We make the policy a first-class, composable
+object so each protected region can choose independently.
+
+Every policy is a pure function ``(x, mask) -> repaired_values`` where
+``mask`` marks fatal lanes; the caller does the final ``where``.  Policies
+must be jit-safe, shape-polymorphic, and must *not* read the masked lanes'
+values in a way that propagates NaN (hence the masked-mean trick below).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairPolicy:
+    """A named repair-value policy."""
+
+    name: str
+    fn: Callable[[jax.Array, jax.Array], jax.Array]
+
+    def __call__(self, x: jax.Array, mask: jax.Array) -> jax.Array:
+        return self.fn(x, mask)
+
+
+def _zero(x, mask):
+    return jnp.zeros_like(x)
+
+
+def _constant(c):
+    def fn(x, mask):
+        return jnp.full_like(x, c)
+    return fn
+
+
+def _clamp_finite_max(x, mask):
+    """Largest finite magnitude of the dtype, sign-preserving where the sign
+    bit survived (per Li et al. [12] the sign bit rarely matters, but keeping
+    it is free)."""
+    big = jnp.array(jnp.finfo(x.dtype).max, x.dtype)
+    sign = jnp.where(jax.lax.sign(x) < 0, -1.0, 1.0).astype(x.dtype)
+    # sign() of NaN is NaN -> force +1 on fatal lanes via where on the mask.
+    sign = jnp.where(mask & ~(sign == sign), jnp.ones_like(sign), sign)
+    return sign * big
+
+
+def _neighbor_mean(x, mask):
+    """Mean of the *finite* lanes of the same tensor (or tile, inside a
+    kernel).  This is the cheapest statistically-plausible value: weights and
+    activations in trained nets are near-symmetric around a small mean, so the
+    tile mean is a far better guess than 0 for denominator-bearing tensors
+    (addresses the paper's §5.2 division concern)."""
+    ok = ~mask
+    cnt = jnp.maximum(jnp.sum(ok.astype(x.dtype)), jnp.array(1, x.dtype))
+    total = jnp.sum(jnp.where(ok, x, jnp.zeros_like(x)))
+    return jnp.broadcast_to(total / cnt, x.shape).astype(x.dtype)
+
+
+zero = RepairPolicy("zero", _zero)
+clamp_finite_max = RepairPolicy("clamp_finite_max", _clamp_finite_max)
+neighbor_mean = RepairPolicy("neighbor_mean", _neighbor_mean)
+
+
+def constant(c: float) -> RepairPolicy:
+    return RepairPolicy(f"constant({c})", _constant(c))
+
+
+def from_reference(ref: jax.Array) -> RepairPolicy:
+    """Repair from a reference tensor of the same shape — used by the
+    ``last_checkpoint`` policy where ``ref`` is the checkpointed shard
+    (see core/checkpoint_repair.py).  The strongest policy: restores the
+    exact pre-flip value up to one checkpoint interval of staleness."""
+    def fn(x, mask):
+        return ref.astype(x.dtype)
+    return RepairPolicy("from_reference", fn)
+
+
+_REGISTRY = {
+    "zero": zero,
+    "clamp_finite_max": clamp_finite_max,
+    "neighbor_mean": neighbor_mean,
+}
+
+
+def get(name_or_policy) -> RepairPolicy:
+    """Resolve a policy by name (config-friendly) or pass one through."""
+    if isinstance(name_or_policy, RepairPolicy):
+        return name_or_policy
+    if isinstance(name_or_policy, (int, float)):
+        return constant(float(name_or_policy))
+    try:
+        return _REGISTRY[name_or_policy]
+    except KeyError:
+        raise KeyError(
+            f"unknown repair policy {name_or_policy!r}; "
+            f"known: {sorted(_REGISTRY)} or a float constant"
+        ) from None

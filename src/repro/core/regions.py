@@ -1,0 +1,88 @@
+"""Approximate-memory region annotation for pytrees.
+
+Deployment model (paper §2 + Flikker [14]): memory is partitioned into an
+*exact* region (nominal refresh, error-free) and an *approximate* region
+(relaxed refresh, elevated BER, cheaper).  The framework decides which state
+lives where.  Defaults (overridable per config):
+
+  approximate: model weights, KV caches, optimizer moments   (large, drift-
+               tolerant once NaN repair is in place — this is where the
+               energy lives)
+  exact:       step counters, PRNG keys, router/gating tables, loss scalars,
+               LR schedules, shapes/metadata                  (small, fatal
+               if corrupted in ways repair cannot express)
+
+A region spec is a pytree of ``Region`` values with the same treedef as the
+state it annotates, built from ordered path-pattern rules.
+"""
+from __future__ import annotations
+
+import enum
+import re
+from typing import Any, Sequence, Tuple
+
+import jax
+
+
+class Region(enum.Enum):
+    EXACT = "exact"
+    APPROX = "approx"
+
+
+def path_str(path) -> str:
+    """Render a jax tree path as 'a/b/0/c' for pattern matching."""
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:  # FlattenedIndexKey and friends
+            parts.append(str(getattr(p, "key", p)))
+    return "/".join(parts)
+
+
+# Ordered (pattern, region) rules; first match wins.  Patterns are regexes
+# searched against the full 'a/b/c' path.  NB: plain "scale" is NOT exact —
+# norm_scale weight vectors belong in approximate memory; only control-plane
+# scalars (step/schedule/rng/keys/counters) are pinned exact.
+DEFAULT_RULES: Tuple[Tuple[str, Region], ...] = (
+    (r"(^|/)(step|count|counter|schedule|loss_scale)($|/)", Region.EXACT),
+    (r"(^|/)[^/]*(rng|key)[^/]*($|/)", Region.EXACT),
+    (r"(^|/)router($|/)|gate_table", Region.EXACT),
+    (r".*", Region.APPROX),
+)
+
+
+def annotate(tree: Any, rules: Sequence[Tuple[str, Region]] = DEFAULT_RULES):
+    """Return a pytree of Region matching ``tree``'s structure."""
+    compiled = [(re.compile(p), r) for p, r in rules]
+
+    def classify(path, leaf):
+        s = path_str(path)
+        for pat, region in compiled:
+            if pat.search(s):
+                return region
+        return Region.APPROX
+
+    return jax.tree_util.tree_map_with_path(classify, tree)
+
+
+def approx_mask(tree: Any, regions: Any):
+    """Pytree of bools: True where the leaf is in approximate memory."""
+    return jax.tree.map(lambda r: r is Region.APPROX, regions)
+
+
+def count_bytes(tree: Any, regions: Any) -> Tuple[int, int]:
+    """(approx_bytes, exact_bytes) over the annotated tree — feeds the
+    energy model (savings apply only to the approximate fraction)."""
+    approx = exact = 0
+    for leaf, region in zip(jax.tree.leaves(tree), jax.tree.leaves(regions)):
+        nbytes = leaf.size * leaf.dtype.itemsize if hasattr(leaf, "size") else 0
+        if region is Region.APPROX:
+            approx += nbytes
+        else:
+            exact += nbytes
+    return approx, exact

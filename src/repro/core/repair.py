@@ -1,0 +1,198 @@
+"""Reactive NaN repair — the paper's contribution as composable JAX transforms.
+
+Two repair modes mirror the paper's two mechanisms (§3.3 / §3.4):
+
+* **register mode** (`use`) — repair *at the point of use*, every use.  The
+  stored buffer keeps its NaN; each consuming op pays a detect+select.  This
+  is the paper's register-repairing mechanism: the trap fires on every reuse
+  (Table 3: N events for an N×N matmul).
+
+* **memory mode** (`scrub` + buffer replacement) — repair once and write the
+  repaired value back to (approximate) memory, so subsequent uses are clean.
+  In JAX the "write back" is functional: the scrubbed pytree *replaces* the
+  old one as the carried training/serving state, and under jit with donated
+  buffers XLA performs it in place.  This is the paper's memory-repairing
+  mechanism: one event per NaN (Table 3: exactly 1).
+
+The production-grade fused path (detection folded into the HBM→VMEM tile load
+of matmul/attention) lives in ``repro.kernels``; these jnp-level transforms
+are the mode-faithful reference used by the full-model training/serving steps
+and by the oracles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import detect, policies, regions as regions_lib, stats as stats_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairConfig:
+    """Config-level switch for the whole repair subsystem.
+
+    ``max_magnitude`` (beyond-paper, DESIGN.md §2): also treat |x| ≥ this
+    value as fatal.  The paper repairs NaN patterns only; a flip on a high
+    exponent bit yields ~1e38 — not a NaN, but it NaN-poisons the loss one
+    matmul later and destroys training (measured).  None = paper-faithful.
+    """
+
+    mode: str = "memory"          # "off" | "register" | "memory"
+    policy: Any = "neighbor_mean"  # name | float | RepairPolicy
+    include_inf: bool = True
+    max_magnitude: Optional[float] = None
+
+    def resolved_policy(self) -> policies.RepairPolicy:
+        return policies.get(self.policy)
+
+    def __post_init__(self):
+        if self.mode not in ("off", "register", "memory"):
+            raise ValueError(f"bad repair mode {self.mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Tensor-level repair.
+# ---------------------------------------------------------------------------
+
+
+def repair_tensor(
+    x: jax.Array,
+    *,
+    policy: policies.RepairPolicy,
+    include_inf: bool = True,
+    max_magnitude: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Repair fatal lanes of one tensor.
+
+    Returns (repaired, nan_count, inf_count).  The repaired tensor is bitwise
+    identical to ``x`` on non-fatal lanes — drift errors are deliberately
+    left as-is (the paper's core low-overhead argument: only NaNs are fatal).
+    With ``max_magnitude``, |x| ≥ threshold lanes are fatal too (counted with
+    the inf bucket — they are the same flip event one mantissa bit away).
+    """
+    bits = detect.bits_of(x)
+    nan_m = detect.is_nan_bits(bits, x.dtype)
+    if max_magnitude is not None:
+        ext = detect.is_extreme_bits(bits, x.dtype, max_magnitude)
+        inf_m = ext & ~nan_m
+    elif include_inf:
+        inf_m = detect.is_inf_bits(bits, x.dtype)
+    else:
+        inf_m = jnp.zeros_like(nan_m)
+    mask = nan_m | inf_m
+    fixed = jnp.where(mask, policy(x, mask), x)
+    return (
+        fixed,
+        jnp.sum(nan_m.astype(jnp.int32)),
+        jnp.sum(inf_m.astype(jnp.int32)),
+    )
+
+
+def use(
+    x: jax.Array,
+    cfg: RepairConfig,
+    stats: Optional[stats_lib.Stats] = None,
+):
+    """Register-mode read: repair at the consumption site.
+
+    In ``register`` mode this is the trap-analogue executed at *every* use.
+    In ``memory``/``off`` modes it is the identity (memory mode relies on the
+    scrubbed buffer, so per-use work would be pure overhead — exactly the
+    paper's argument for the memory-repairing mechanism).
+
+    Returns ``repaired`` (stats is None) or ``(repaired, stats')``.
+    """
+    if cfg.mode != "register":
+        return x if stats is None else (x, stats)
+    fixed, n, i = repair_tensor(
+        x, policy=cfg.resolved_policy(), include_inf=cfg.include_inf,
+        max_magnitude=cfg.max_magnitude,
+    )
+    if stats is None:
+        return fixed
+    return fixed, stats_lib.record_repair(stats, n, i)
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level repair (memory mode) .
+# ---------------------------------------------------------------------------
+
+
+def scrub_pytree(
+    tree: Any,
+    cfg: RepairConfig,
+    stats: stats_lib.Stats,
+    region_tree: Optional[Any] = None,
+) -> Tuple[Any, stats_lib.Stats]:
+    """Memory-mode repair of every approximate-region leaf of ``tree``.
+
+    One pass at the start of each step; the returned tree *replaces* the
+    stored state (functional write-back).  Leaves in the exact region are
+    untouched (they are error-free by construction).  Non-float leaves pass
+    through.
+    """
+    if cfg.mode != "memory":
+        return tree, stats
+    if region_tree is None:
+        region_tree = regions_lib.annotate(tree)
+    policy = cfg.resolved_policy()
+
+    nan_tot = jnp.zeros((), jnp.int32)
+    inf_tot = jnp.zeros((), jnp.int32)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    region_leaves = jax.tree.leaves(region_tree)
+    assert len(leaves) == len(region_leaves), "region tree structure mismatch"
+
+    fixed_leaves = []
+    for leaf, region in zip(leaves, region_leaves):
+        if (
+            region is regions_lib.Region.APPROX
+            and hasattr(leaf, "dtype")
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+        ):
+            fixed, n, i = repair_tensor(
+                leaf, policy=policy, include_inf=cfg.include_inf,
+                max_magnitude=cfg.max_magnitude,
+            )
+            nan_tot = nan_tot + n
+            inf_tot = inf_tot + i
+            fixed_leaves.append(fixed)
+        else:
+            fixed_leaves.append(leaf)
+
+    out = jax.tree_util.tree_unflatten(treedef, fixed_leaves)
+    return out, stats_lib.record_repair(stats, nan_tot, inf_tot)
+
+
+def inject_pytree(
+    tree: Any,
+    key: jax.Array,
+    ber: float,
+    region_tree: Optional[Any] = None,
+) -> Any:
+    """Simulation-only: one approximate-memory window of bit flips over the
+    approximate-region leaves.  Not part of the production path."""
+    from . import injection  # local import: simulation dependency only
+
+    if ber <= 0.0:
+        return tree
+    if region_tree is None:
+        region_tree = regions_lib.annotate(tree)
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    region_leaves = jax.tree.leaves(region_tree)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for leaf, region, k in zip(leaves, region_leaves, keys):
+        if (
+            region is regions_lib.Region.APPROX
+            and hasattr(leaf, "dtype")
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+        ):
+            out.append(injection.flip_bits(k, leaf, ber))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)

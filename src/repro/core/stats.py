@@ -1,0 +1,53 @@
+"""Repair/flip event counters — the Table 3 analogue.
+
+The paper's Table 3 counts SIGFPEs: N for register-only repair of an N×N
+matmul, exactly 1 with memory repair.  Our counters are carried as a small
+pytree of int32 scalars so they jit, shard (fully replicated), and cross
+``lax.scan`` boundaries inside train/serve steps.
+
+  flips      — bits flipped by the injection simulator (ground truth)
+  nan_found  — NaN lanes detected at repair sites
+  inf_found  — ±Inf lanes detected at repair sites
+  events     — repair *invocations* that found ≥1 fatal lane (the SIGFPE
+               analogue: one event ≈ one trap in the paper's prototype)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Stats = Dict[str, jax.Array]
+
+_FIELDS = ("flips", "nan_found", "inf_found", "events")
+
+
+def zeros() -> Stats:
+    return {f: jnp.zeros((), jnp.int32) for f in _FIELDS}
+
+
+def merge(a: Stats, b: Stats) -> Stats:
+    return {f: a[f] + b[f] for f in _FIELDS}
+
+
+def record_repair(s: Stats, nan_count, inf_count) -> Stats:
+    nan_count = jnp.asarray(nan_count, jnp.int32)
+    inf_count = jnp.asarray(inf_count, jnp.int32)
+    return {
+        "flips": s["flips"],
+        "nan_found": s["nan_found"] + nan_count,
+        "inf_found": s["inf_found"] + inf_count,
+        "events": s["events"]
+        + ((nan_count + inf_count) > 0).astype(jnp.int32),
+    }
+
+
+def record_flips(s: Stats, n) -> Stats:
+    out = dict(s)
+    out["flips"] = s["flips"] + jnp.asarray(n, jnp.int32)
+    return out
+
+
+def as_dict(s: Stats) -> Dict[str, int]:
+    return {f: int(s[f]) for f in _FIELDS}

@@ -1,0 +1,1 @@
+from .pipeline import SyntheticStream, batch_for_step  # noqa: F401

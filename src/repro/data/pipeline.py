@@ -1,0 +1,106 @@
+"""Stateless-seeded synthetic data pipeline.
+
+Fault-tolerance property (DESIGN.md §5): the batch for step ``i`` is a pure
+function of ``(seed, i)`` — a restarted job resumes from the checkpointed
+step with *no data-state replay* and bit-identical batches.  This is the
+cheapest correct answer to "data pipeline state in checkpoints" at
+1000-node scale: there is none.
+
+The synthetic stream is a Zipf-ish token distribution with local n-gram
+structure (so the LM loss actually goes down and convergence tests are
+meaningful), plus modality stand-ins for the VLM/audio frontends (the
+assignment stubs those to precomputed embeddings).
+
+Host sharding: ``host_slice`` carves the global batch by process index, so a
+multi-host launch feeds each host only its shard (simulated single-process
+here; the arithmetic is the production one).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+
+@partial(jax.jit, static_argnames=("batch", "seq", "vocab"))
+def _tokens_for_step(seed: jax.Array, step: jax.Array, batch: int, seq: int,
+                     vocab: int) -> jax.Array:
+    """Zipf-ish tokens with n-gram structure, deterministic in (seed, step)."""
+    key = jax.random.fold_in(jax.random.fold_in(seed, step), 0x7e4)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Zipf-ish marginal: exp-distributed rank -> clamp to vocab.
+    r = jax.random.exponential(k1, (batch, seq)) * (vocab / 8.0)
+    base = jnp.clip(r.astype(jnp.int32), 0, vocab - 1)
+    # local structure: with p=0.5 repeat the previous token's neighbourhood
+    rep = jax.random.bernoulli(k2, 0.5, (batch, seq))
+    shift = jax.random.randint(k3, (batch, seq), -2, 3)
+    prev = jnp.roll(base, 1, axis=1)
+    structured = jnp.clip(prev + shift, 0, vocab - 1)
+    return jnp.where(rep, structured, base)
+
+
+def batch_for_step(
+    cfg: ArchConfig,
+    seed: jax.Array,
+    step,
+    *,
+    batch: int,
+    seq: int,
+) -> Dict[str, jax.Array]:
+    """The global batch for one training step (pure in (seed, step))."""
+    step = jnp.asarray(step, jnp.int32)
+    if cfg.family == "audio":
+        tokens = _tokens_for_step(seed, step, batch, seq, cfg.vocab)
+        fkey = jax.random.fold_in(jax.random.fold_in(seed, step), 0xF0)
+        frames = jax.random.normal(fkey, (batch, seq, cfg.d_model), jnp.float32)
+        return {"frames": frames.astype(cfg.dtype), "tokens": tokens}
+    if cfg.frontend == "patches":
+        P = int(seq * cfg.frontend_fraction)
+        tokens = _tokens_for_step(seed, step, batch, seq - P, cfg.vocab)
+        pkey = jax.random.fold_in(jax.random.fold_in(seed, step), 0xF1)
+        patches = jax.random.normal(pkey, (batch, P, cfg.d_model), jnp.float32)
+        return {"tokens": tokens, "patch_embeds": patches.astype(cfg.dtype)}
+    return {"tokens": _tokens_for_step(seed, step, batch, seq, cfg.vocab)}
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticStream:
+    """Iterator facade over batch_for_step with host slicing."""
+
+    cfg: ArchConfig
+    seed: int
+    batch: int
+    seq: int
+    process_index: int = 0
+    process_count: int = 1
+
+    def __post_init__(self):
+        assert self.batch % self.process_count == 0, (
+            "global batch must divide across hosts",
+            self.batch, self.process_count,
+        )
+
+    @property
+    def host_batch(self) -> int:
+        return self.batch // self.process_count
+
+    def host_slice(self, global_batch: Dict[str, jax.Array]):
+        lo = self.process_index * self.host_batch
+        return {
+            k: jax.lax.dynamic_slice_in_dim(v, lo, self.host_batch, axis=0)
+            for k, v in global_batch.items()
+        }
+
+    def __call__(self, step) -> Dict[str, jax.Array]:
+        g = batch_for_step(
+            self.cfg, jax.random.PRNGKey(self.seed), step,
+            batch=self.batch, seq=self.seq,
+        )
+        if self.process_count == 1:
+            return g
+        return self.host_slice(g)

@@ -1,0 +1,12 @@
+from .sharding import (  # noqa: F401
+    RULES_SINGLE_POD,
+    RULES_MULTI_POD,
+    rules_for_mesh,
+    spec_for_leaf,
+    tree_shardings,
+)
+from .compression import (  # noqa: F401
+    compress_int8,
+    decompress_int8,
+    compressed_allreduce_tree,
+)

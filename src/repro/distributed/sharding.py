@@ -1,0 +1,229 @@
+"""Logical-axis sharding: rules table → PartitionSpec trees (MaxText-style).
+
+Every parameter/cache/activation dimension carries a *logical* axis name
+(nn/module.py ParamDef.axes).  One rules table maps logical names to mesh
+axes; changing the parallelism strategy is a table edit, not a model edit.
+
+Default rules (DESIGN.md §5):
+
+  batch    → (pod, data)    activations/batch dims: pure DP across pods
+  embed    → data           FSDP/ZeRO-3: params + Adam moments sharded over
+                            the data axis, all-gathered per layer by GSPMD
+  heads/kv/mlp/vocab/expert → model   (tensor parallelism)
+  kv_seq   → None           (overridable to model for decode cells — the
+                            KV cache is the dominant resident there and
+                            n_kv is often < model axis size)
+  layers   → None           (scan dimension — never sharded)
+
+Validation: a dim is sharded only if its size divides the mesh-axis size;
+otherwise the spec silently degrades to replicated-on-that-dim, which is the
+GSPMD-compatible fallback (it matters for e.g. n_kv=2 on a model=16 axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+RULES_SINGLE_POD: Dict[str, MeshAxes] = {
+    "batch": "data",
+    "embed": "data",
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "kv_seq": None,
+    "layers": None,
+    # activation dims (with_sharding_constraint sites inside the models)
+    "act_batch": "data",
+    "act_seq": None,          # "model" enables sequence parallelism
+    "act_embed": None,
+    "act_heads": "model",
+    "act_vocab": "model",
+    "act_expert": "model",
+}
+
+RULES_MULTI_POD: Dict[str, MeshAxes] = dict(
+    RULES_SINGLE_POD,
+    batch=("pod", "data"),
+    act_batch=("pod", "data"),
+)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (MaxText-style).
+#
+# XLA's sharding propagation loses the batch sharding through the embedding
+# gather and across scan boundaries (observed: attention compute replicated
+# over the data axis — a 16× FLOP regression in the dry-run).  Models call
+# ``constrain(x, ("act_batch", "act_seq", ...))`` at layer boundaries; when a
+# (mesh, rules) context is active this lowers to with_sharding_constraint,
+# otherwise it is the identity (single-device tests/examples).
+# ---------------------------------------------------------------------------
+
+_ACTIVE: list = []   # stack of (mesh, rules)
+
+
+class use_rules:
+    """Context manager activating (mesh, rules) for ``constrain`` sites."""
+
+    def __init__(self, mesh: Mesh, rules: Dict[str, MeshAxes]):
+        self.pair = (mesh, rules)
+
+    def __enter__(self):
+        _ACTIVE.append(self.pair)
+        return self.pair
+
+    def __exit__(self, *exc):
+        _ACTIVE.pop()
+        return False
+
+
+def active_rules():
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain an activation's sharding by logical dim names (no-op when no
+    rules context is active)."""
+    if not _ACTIVE:
+        return x
+    mesh, rules = _ACTIVE[-1]
+    spec = spec_for_leaf(
+        logical, x.shape, mesh, rules, unconstrained_default=True
+    )
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def rules_for_mesh(mesh: Mesh, overrides: Optional[Dict[str, MeshAxes]] = None):
+    base = RULES_MULTI_POD if "pod" in mesh.axis_names else RULES_SINGLE_POD
+    if overrides:
+        base = dict(base, **overrides)
+    return base
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for_leaf(
+    logical_axes: Optional[Sequence[Optional[str]]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Dict[str, MeshAxes],
+    *,
+    unconstrained_default: bool = False,
+) -> P:
+    """PartitionSpec for one leaf, with divisibility validation.
+
+    ``unconstrained_default=True`` (activation-constraint mode): dims that do
+    not resolve to a shardable mesh axis become P.UNCONSTRAINED instead of
+    replicated — a with_sharding_constraint must never *forbid* XLA from
+    sharding a dim we merely didn't name (a forced-replicated score tensor
+    costs an all-gather; observed 2.7e11 wire bytes on qwen2 train_4k).
+    """
+    if logical_axes is None:
+        return P()
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    fallback = P.UNCONSTRAINED if unconstrained_default else None
+    used: set = set()
+    parts = []
+    for name, dim in zip(logical_axes, shape):
+        axes = rules.get(name) if name is not None else None
+        if axes is None:
+            parts.append(fallback)
+            continue
+        key = tuple(axes) if isinstance(axes, tuple) else (axes,)
+        if any(a in used for a in key):
+            # a mesh axis may appear once per spec; later dims degrade
+            parts.append(fallback)
+            continue
+        if dim % _axis_size(mesh, axes) != 0:
+            parts.append(fallback)    # degrade: leave to the partitioner
+            continue
+        used.update(key)
+        parts.append(axes)
+    return P(*parts)
+
+
+def tree_shardings(
+    abstract_tree: Any,
+    logical_tree: Any,
+    mesh: Mesh,
+    rules: Dict[str, MeshAxes],
+) -> Any:
+    """NamedSharding tree matching ``abstract_tree``'s structure.
+
+    ``logical_tree`` has tuples-of-names at the positions where
+    ``abstract_tree`` has arrays/ShapeDtypeStructs.  Scalar leaves (step
+    counters, rng keys) get fully-replicated specs.
+    """
+    flat_a, treedef = jax.tree_util.tree_flatten(abstract_tree)
+
+    def _is_axes_leaf(x):
+        # axes leaves are None or plain tuples of axis names; namedtuples
+        # (OptState!) are pytree nodes, not leaves
+        return x is None or (
+            isinstance(x, tuple)
+            and not hasattr(x, "_fields")
+            and all(s is None or isinstance(s, str) for s in x)
+        )
+
+    flat_l = jax.tree_util.tree_flatten(logical_tree, is_leaf=_is_axes_leaf)[0]
+    assert len(flat_a) == len(flat_l), (
+        "logical tree mismatch", len(flat_a), len(flat_l)
+    )
+    out = []
+    for a, l in zip(flat_a, flat_l):
+        spec = spec_for_leaf(l, a.shape, mesh, rules)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_sharding(mesh: Mesh, rules: Dict[str, MeshAxes]) -> NamedSharding:
+    """Sharding for (B, ...) input batches: batch dim over the DP axes."""
+    return NamedSharding(mesh, P(rules["batch"]))
+
+
+def batch_specs_for_inputs(
+    input_tree: Any, mesh: Mesh, rules: Dict[str, MeshAxes]
+) -> Any:
+    """Batch-dim-sharded NamedShardings for an input_specs dict."""
+    bs = rules["batch"]
+
+    def one(leaf):
+        nparts = _axis_size(mesh, bs)
+        if leaf.shape and leaf.shape[0] % nparts == 0:
+            return NamedSharding(mesh, P(bs))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, input_tree)
+
+
+def bytes_per_device(abstract_tree: Any, shardings: Any) -> int:
+    """Lower bound on resident bytes per device for a sharded tree."""
+    total = 0
+    for a, s in zip(
+        jax.tree.leaves(abstract_tree), jax.tree.leaves(shardings)
+    ):
+        n = int(np.prod(a.shape)) if a.shape else 1
+        itemsize = np.dtype(a.dtype).itemsize
+        shard_n = n // s.num_devices if s.is_fully_addressable else n
+        # NamedSharding: compute shard size from the spec
+        shard = s.shard_shape(a.shape) if a.shape else a.shape
+        shard_n = int(np.prod(shard)) if shard else 1
+        total += shard_n * itemsize
+    return total

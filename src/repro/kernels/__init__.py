@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+The paper's evaluation target is a matrix-matrix multiplication with an
+injected NaN (Fig. 7 / Table 3); the framework's serving hot spot is
+attention over a cached KV.  Both get a fused-reactive-repair kernel:
+
+  scrub.py              one-shot in-place NaN/Inf repair + event counters
+  repair_matmul.py      tiled MXU matmul, fused operand-tile repair
+  repair_attention.py   flash attention, fused KV-tile repair
+  mlstm_chunk.py        fused chunked-mLSTM, (P,P) state resident in VMEM
+  ops.py                jit wrappers adding memory-mode reactive write-back
+  ref.py                pure-jnp oracles (bit-exact counter semantics)
+
+All kernels use explicit BlockSpec VMEM tiling and are validated on CPU in
+interpret mode; on TPU they lower natively (default_interpret() switches).
+"""
+from . import common, mlstm_chunk, ops, ref  # noqa: F401
+from .ops import flash_attention, repair_matmul, scrub  # noqa: F401

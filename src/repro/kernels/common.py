@@ -1,0 +1,98 @@
+"""Shared in-kernel repair logic for all Pallas kernels.
+
+The detection/repair math is *identical* to ``core.detect``/``core.policies``
+(single source of truth for the bit patterns); this module re-expresses it in
+a form usable inside a kernel body, where the loaded VMEM tile is a jax array
+and the repair must be branch-free VPU code (compare/and/select — no gather,
+no data-dependent shapes).
+
+Policy support inside kernels is the *cheap* subset of the policy lattice:
+
+  zero              repaired lanes become 0
+  constant          repaired lanes become a compile-time constant
+  neighbor_mean     repaired lanes become the mean of the finite lanes of the
+                    SAME VMEM tile (one extra reduction over a tile already
+                    resident in VMEM — this is the fused-repair trick: the
+                    statistics come for free while the MXU is busy)
+  clamp_finite_max  largest finite magnitude of the dtype
+
+The expensive ``last_checkpoint`` policy is pytree-level only
+(core/checkpoint_repair.py) — it needs a reference buffer the kernel does not
+have.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import detect
+
+# Policies expressible inside a kernel body.
+KERNEL_POLICIES = ("zero", "constant", "neighbor_mean", "clamp_finite_max")
+
+
+def fatal_mask(tile: jax.Array, *, include_inf: bool = True) -> jax.Array:
+    """NaN (optionally +±Inf) lanes of a VMEM tile, via bit patterns.
+
+    Uses the same layout constants as core.detect so kernel and oracle agree
+    bit-for-bit.  bitcast + compare + and: pure VPU ops.
+    """
+    bits = jax.lax.bitcast_convert_type(
+        tile, detect.layout_of(tile.dtype).int_dtype
+    )
+    m = detect.is_nan_bits(bits, tile.dtype)
+    if include_inf:
+        m = m | detect.is_inf_bits(bits, tile.dtype)
+    return m
+
+
+def repair_value(
+    tile: jax.Array, mask: jax.Array, policy: str, constant: float
+) -> jax.Array:
+    """Branch-free repair value for masked lanes (same shape as tile)."""
+    if policy == "zero":
+        return jnp.zeros_like(tile)
+    if policy == "constant":
+        return jnp.full_like(tile, constant)
+    if policy == "clamp_finite_max":
+        return jnp.full_like(tile, jnp.finfo(tile.dtype).max)
+    if policy == "neighbor_mean":
+        ok = ~mask
+        # f32 accumulation of the tile statistics regardless of storage dtype
+        okf = ok.astype(jnp.float32)
+        cnt = jnp.maximum(jnp.sum(okf), 1.0)
+        total = jnp.sum(jnp.where(ok, tile.astype(jnp.float32), 0.0))
+        return jnp.broadcast_to(total / cnt, tile.shape).astype(tile.dtype)
+    raise ValueError(f"kernel policy must be one of {KERNEL_POLICIES}, got {policy!r}")
+
+
+def repair_tile(
+    tile: jax.Array,
+    *,
+    policy: str,
+    constant: float = 0.0,
+    include_inf: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Repair a VMEM tile.  Returns (repaired, nan_count, inf_count) where the
+    counts are int32 scalars for the event counters (Table 3 analogue)."""
+    bits = jax.lax.bitcast_convert_type(
+        tile, detect.layout_of(tile.dtype).int_dtype
+    )
+    nan_m = detect.is_nan_bits(bits, tile.dtype)
+    inf_m = detect.is_inf_bits(bits, tile.dtype)
+    mask = (nan_m | inf_m) if include_inf else nan_m
+    fixed = jnp.where(mask, repair_value(tile, mask, policy, constant), tile)
+    return (
+        fixed,
+        jnp.sum(nan_m.astype(jnp.int32)),
+        jnp.sum(inf_m.astype(jnp.int32)) if include_inf else jnp.zeros((), jnp.int32),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def default_interpret() -> bool:
+    """Run kernels in interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"

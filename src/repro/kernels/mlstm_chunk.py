@@ -1,0 +1,224 @@
+"""Fused chunked-mLSTM kernel with reactive NaN repair on the q/k/v tiles.
+
+The xlstm train/prefill cells' documented headroom (EXPERIMENTS.md §Perf):
+the jnp chunked form materializes the (P,P) matrix memory and the per-chunk
+decay tensors through HBM every chunk — at P=1024 that is 4 MB of f32 state
+written+read per chunk per head, ~40 % of the cell's memory term.  This
+kernel keeps the running state (C, n, m) in VMEM scratch across the chunk
+grid dimension: HBM traffic is exactly the q/k/v chunk loads and the y
+store, i.e. the streaming minimum.
+
+Math is bit-compatible with nn/xlstm.py::_chunked_mlstm (the oracle —
+per-chunk max-stabilized exponential gating, docstring there):
+
+    W~_tj  = (q_t·k_j)·exp(b_j − m*)   (tril)     b_j = log_i_j − F_j
+    y_t    = (W~ v + (q_t·C~)·exp(m_prev − m*)) / max(|den|, exp(−F_t − m*))
+    C~,n~  ← exp(m_prev − m*)·state + Σ_j exp(b_j − m*)·k_j(·v_jᵀ)
+    m      ← F_end + m*
+
+Approximate-memory integration: q/k/v tiles are bit-pattern repaired in
+VMEM right after their HBM→VMEM DMA (register semantics; the event counter
+drives the reactive memory-mode scrub in ops.py, same contract as
+repair_matmul).  A NaN reaching C would poison *all future tokens* (the
+temporal Fig. 1) — repairing pre-consumption keeps the carried state clean
+by construction.
+
+Layout: q,k,v (B, H, nc, Q, P); log_i/log_f (B, H, nc, Q) f32;
+grid (B, H, nc), chunk dim innermost (sequential recurrence).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+NEG = -1e30
+
+# counts layout (int32[8]): nan_q, inf_q, ev_q, nan_kv, inf_kv, ev_kv, ev_total
+NAN_Q, INF_Q, EV_Q, NAN_KV, INF_KV, EV_KV, EV_TOTAL = range(7)
+
+
+def _mlstm_kernel(
+    q_ref, k_ref, v_ref, li_ref, lf_ref, y_ref, counts_ref,
+    c_ref, n_ref, m_ref,
+    *, policy: str, constant: float, include_inf: bool, Q: int, P: int,
+):
+    b, h, c = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    step = (b * pl.num_programs(1) + h) * pl.num_programs(2) + c
+
+    @pl.when(step == 0)
+    def _init_counts():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    @pl.when(c == 0)
+    def _init_state():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+
+    # ---- fused reactive repair of the chunk tiles ----
+    q, nan_q, inf_q = common.repair_tile(
+        q_ref[0, 0, 0], policy=policy, constant=constant,
+        include_inf=include_inf,
+    )
+    k, nan_k, inf_k = common.repair_tile(
+        k_ref[0, 0, 0], policy=policy, constant=constant,
+        include_inf=include_inf,
+    )
+    v, nan_v, inf_v = common.repair_tile(
+        v_ref[0, 0, 0], policy=policy, constant=constant,
+        include_inf=include_inf,
+    )
+    ev_q = ((nan_q + inf_q) > 0).astype(jnp.int32)
+    ev_kv = ((nan_k + inf_k + nan_v + inf_v) > 0).astype(jnp.int32)
+    counts_ref[NAN_Q] += nan_q
+    counts_ref[INF_Q] += inf_q
+    counts_ref[EV_Q] += ev_q
+    counts_ref[NAN_KV] += nan_k + nan_v
+    counts_ref[INF_KV] += inf_k + inf_v
+    counts_ref[EV_KV] += ev_kv
+    counts_ref[EV_TOTAL] += ((ev_q + ev_kv) > 0).astype(jnp.int32)
+
+    li = li_ref[0, 0, 0].astype(jnp.float32)          # (Q,)
+    lf = lf_ref[0, 0, 0].astype(jnp.float32)
+    F = jnp.cumsum(lf)                                # (Q,) ≤ 0
+    F_end = F[Q - 1]
+    bsrc = li - F                                     # source exponents
+    m_loc = jnp.max(bsrc)
+
+    m_prev = m_ref[0, 0]
+    m_star = jnp.maximum(m_prev, m_loc)
+    src = jnp.exp(bsrc - m_star)                      # (Q,) ≤ 1
+    resc = jnp.exp(m_prev - m_star)                   # scalar ≤ 1
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # intra-chunk
+    qk = jax.lax.dot_general(
+        qf, kf, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                 # (Q, Q)
+    tril = (
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    )
+    W = jnp.where(tril, qk * src[None, :], 0.0)       # (Q, Q)
+    num = jax.lax.dot_general(
+        W, vf, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                 # (Q, P)
+    den = jnp.sum(W, axis=1)                          # (Q,)
+
+    # inter-chunk reads from the VMEM-resident state
+    num = num + resc * jax.lax.dot_general(
+        qf, c_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    den = den + resc * jnp.sum(qf * n_ref[0:1, :], axis=1)
+
+    clamp = jnp.exp(-F - m_star)                      # (Q,)
+    y = num / jnp.maximum(jnp.abs(den), clamp)[:, None]
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    # state update (stays in VMEM)
+    c_ref[...] = resc * c_ref[...] + jax.lax.dot_general(
+        kf * src[:, None], vf, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    n_ref[...] = resc * n_ref[...] + jnp.sum(
+        kf * src[:, None], axis=0, keepdims=True
+    )
+    m_ref[...] = jnp.full_like(m_ref, F_end + m_star)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "constant", "include_inf", "interpret"),
+)
+def mlstm_chunk_raw(
+    q: jax.Array,        # (B, H, nc, Q, P)
+    k: jax.Array,
+    v: jax.Array,
+    log_i: jax.Array,    # (B, H, nc, Q) f32
+    log_f: jax.Array,
+    *,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused chunked mLSTM.  Returns (y (B,H,nc,Q,P) f32, counts int32[8])."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    B, H, nc, Q, P = q.shape
+    grid = (B, H, nc)
+
+    from jax.experimental.pallas import tpu as pltpu  # CPU-safe import
+
+    tile5 = lambda: pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0))
+    gate = lambda: pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0))
+
+    y, counts = pl.pallas_call(
+        functools.partial(
+            _mlstm_kernel,
+            policy=policy, constant=constant, include_inf=include_inf,
+            Q=Q, P=P,
+        ),
+        grid=grid,
+        in_specs=[tile5(), tile5(), tile5(), gate(), gate()],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((8,), lambda b, h, c: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((8,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((P, P), jnp.float32),   # C — never leaves VMEM
+            pltpu.VMEM((1, P), jnp.float32),   # n
+            pltpu.VMEM((1, 1), jnp.float32),   # m
+        ],
+        interpret=interpret,
+    )(q, k, v, log_i, log_f)
+    return y, counts
+
+
+def mlstm_chunked(
+    q: jax.Array,        # (B, S, H, P) — nn/xlstm.py layout
+    k: jax.Array,
+    v: jax.Array,
+    log_i: jax.Array,    # (B, S, H) f32
+    log_f: jax.Array,
+    *,
+    chunk: int = 128,
+    policy: str = "zero",
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Layout adapter over mlstm_chunk_raw matching nn.xlstm._chunked_mlstm.
+
+    Returns (y (B,S,H,P) f32, counts)."""
+    B, S, H, P = q.shape
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    def to5(x):
+        return x.reshape(B, nc, Q, H, P).transpose(0, 3, 1, 2, 4)
+
+    def gates(x):
+        return x.reshape(B, nc, Q, H).transpose(0, 3, 1, 2)
+
+    y, counts = mlstm_chunk_raw(
+        to5(q), to5(k), to5(v), gates(log_i), gates(log_f),
+        policy=policy, interpret=interpret,
+    )
+    y = y.transpose(0, 2, 3, 1, 4).reshape(B, S, H, P)
+    return y, counts

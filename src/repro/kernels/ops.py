@@ -1,0 +1,139 @@
+"""jit'd public wrappers over the Pallas kernels, adding memory-mode
+semantics (reactive write-back at the memory origin).
+
+The mode split mirrors the paper exactly (§3.3 / §3.4):
+
+  register mode   fused in-VMEM repair only; the stored buffer keeps its NaN
+                  and every consuming call re-detects it (paper Table 3:
+                  N traps).
+
+  memory mode     fused in-VMEM repair *plus*: if the event counter is
+                  non-zero, the poisoned operand is scrubbed once, in place,
+                  at its memory origin (``lax.cond`` — zero cost on the
+                  no-error fast path).  Subsequent calls see clean data
+                  (paper Table 3: exactly 1 trap).  The caller carries the
+                  returned buffer forward as the new resident state — JAX's
+                  functional write-back, in-place under donation.
+
+Every wrapper returns the (possibly scrubbed) operands so that callers can
+thread the repaired state, plus the raw counters for core.stats.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import repair_attention as _ra
+from . import repair_matmul as _rm
+from . import scrub as _scrub
+
+scrub = _scrub.scrub
+
+# counter-index re-exports (the package re-exports shadow the submodules)
+MM_NAN_A, MM_INF_A, MM_EV_A = _rm.NAN_A, _rm.INF_A, _rm.EV_A
+MM_NAN_B, MM_INF_B, MM_EV_B = _rm.NAN_B, _rm.INF_B, _rm.EV_B
+MM_EV_TOTAL = _rm.EV_TOTAL
+AT_NAN_K, AT_INF_K, AT_EV_K = _ra.NAN_K, _ra.INF_K, _ra.EV_K
+AT_NAN_V, AT_INF_V, AT_EV_V = _ra.NAN_V, _ra.INF_V, _ra.EV_V
+AT_EV_TOTAL = _ra.EV_TOTAL
+
+
+class MatmulResult(NamedTuple):
+    c: jax.Array
+    a: jax.Array            # post-call operand state (scrubbed in memory mode)
+    b: jax.Array
+    counts: jax.Array       # int32[8], see repair_matmul layout
+
+
+def _reactive_scrub(x, events, *, policy, constant, include_inf, interpret):
+    """Scrub ``x`` at its origin only when ``events`` fired (reactive)."""
+    def do(x):
+        fixed, _ = _scrub.scrub(
+            x, policy=policy, constant=constant,
+            include_inf=include_inf, interpret=interpret,
+        )
+        return fixed
+    return jax.lax.cond(events > 0, do, lambda x: x, x)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mode", "policy", "constant", "include_inf", "interpret", "blocks",
+        "out_dtype",
+    ),
+)
+def repair_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    mode: str = "memory",
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    interpret: Optional[bool] = None,
+    blocks: Optional[Tuple[int, int, int]] = None,
+    out_dtype=None,
+) -> MatmulResult:
+    """c = a @ b with fused reactive NaN repair on both operands."""
+    if mode not in ("register", "memory"):
+        raise ValueError(f"mode must be register|memory, got {mode!r}")
+    c, counts = _rm.repair_matmul_raw(
+        a, b, policy=policy, constant=constant, include_inf=include_inf,
+        interpret=interpret, blocks=blocks, out_dtype=out_dtype,
+    )
+    if mode == "memory":
+        kw = dict(
+            policy=policy, constant=constant, include_inf=include_inf,
+            interpret=interpret,
+        )
+        a = _reactive_scrub(a, counts[_rm.EV_A], **kw)
+        b = _reactive_scrub(b, counts[_rm.EV_B], **kw)
+    return MatmulResult(c, a, b, counts)
+
+
+class AttentionResult(NamedTuple):
+    out: jax.Array
+    k: jax.Array            # post-call cache state (scrubbed in memory mode)
+    v: jax.Array
+    counts: jax.Array       # int32[8], see repair_attention layout
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mode", "causal", "policy", "constant", "include_inf", "interpret",
+        "blocks",
+    ),
+)
+def flash_attention(
+    q: jax.Array,   # (B, H, S, D)
+    k: jax.Array,   # (B, Kh, T, D)
+    v: jax.Array,
+    *,
+    mode: str = "memory",
+    causal: bool = True,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    interpret: Optional[bool] = None,
+    blocks: Optional[Tuple[int, int]] = None,
+) -> AttentionResult:
+    """Flash attention with fused reactive repair of the (cached) K/V."""
+    if mode not in ("register", "memory"):
+        raise ValueError(f"mode must be register|memory, got {mode!r}")
+    out, counts = _ra.flash_attention_raw(
+        q, k, v, causal=causal, policy=policy, constant=constant,
+        include_inf=include_inf, interpret=interpret, blocks=blocks,
+    )
+    if mode == "memory":
+        kw = dict(
+            policy=policy, constant=constant, include_inf=include_inf,
+            interpret=interpret,
+        )
+        k = _reactive_scrub(k, counts[_ra.EV_K], **kw)
+        v = _reactive_scrub(v, counts[_ra.EV_V], **kw)
+    return AttentionResult(out, k, v, counts)

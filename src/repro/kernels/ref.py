@@ -1,0 +1,159 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact counter semantics).
+
+Each oracle replays the kernel's *tiling* where it matters (neighbor_mean is
+a per-tile statistic; event counters are per-tile-visit), so tests can assert
+exact equality on counters and allclose on values across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import detect
+
+
+def _masks(x):
+    bits = detect.bits_of(x)
+    return detect.is_nan_bits(bits, x.dtype), detect.is_inf_bits(bits, x.dtype)
+
+
+def repair_array_ref(
+    x: jax.Array,
+    *,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    block: Optional[Tuple[int, int]] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Repair ``x`` exactly as the kernels do, tile-by-tile.
+
+    Returns (fixed, nan_count, inf_count, tiles_with_fatal).  ``block`` is the
+    kernel's 2D tile over the trailing-dim-flattened view; None means one tile
+    = whole array (policy statistics over everything).
+    """
+    orig = x.shape
+    x2 = x.reshape(-1, x.shape[-1]) if x.ndim >= 2 else x.reshape(1, -1)
+    rows, cols = x2.shape
+    br, bc = block if block is not None else (rows, cols)
+    assert rows % br == 0 and cols % bc == 0, (x2.shape, block)
+
+    nan_m, inf_m = _masks(x2)
+    mask = (nan_m | inf_m) if include_inf else nan_m
+
+    # tile view: (nr, nc, br, bc)
+    t = x2.reshape(rows // br, br, cols // bc, bc).transpose(0, 2, 1, 3)
+    tm = mask.reshape(rows // br, br, cols // bc, bc).transpose(0, 2, 1, 3)
+
+    if policy == "zero":
+        rep = jnp.zeros_like(t)
+    elif policy == "constant":
+        rep = jnp.full_like(t, constant)
+    elif policy == "clamp_finite_max":
+        rep = jnp.full_like(t, jnp.finfo(x.dtype).max)
+    elif policy == "neighbor_mean":
+        ok = (~tm).astype(jnp.float32)
+        cnt = jnp.maximum(ok.sum(axis=(2, 3), keepdims=True), 1.0)
+        tot = jnp.where(~tm, t.astype(jnp.float32), 0.0).sum(
+            axis=(2, 3), keepdims=True
+        )
+        rep = jnp.broadcast_to(tot / cnt, t.shape).astype(x.dtype)
+    else:
+        raise ValueError(policy)
+
+    fixed = jnp.where(tm, rep, t)
+    fixed = fixed.transpose(0, 2, 1, 3).reshape(rows, cols).reshape(orig)
+    tiles_fatal = jnp.sum(jnp.any(tm, axis=(2, 3)).astype(jnp.int32))
+    return (
+        fixed,
+        jnp.sum(nan_m.astype(jnp.int32)),
+        jnp.sum(inf_m.astype(jnp.int32)) if include_inf else jnp.zeros((), jnp.int32),
+        tiles_fatal,
+    )
+
+
+def scrub_ref(
+    x, *, policy="zero", constant=0.0, include_inf=True, block=None
+):
+    """Oracle of kernels.scrub: (fixed, counts[3] = [nan, inf, events])."""
+    fixed, n, i, ev = repair_array_ref(
+        x, policy=policy, constant=constant, include_inf=include_inf,
+        block=block,
+    )
+    return fixed, jnp.stack([n, i, ev])
+
+
+def repair_matmul_ref(
+    a, b, *, policy="zero", constant=0.0, include_inf=True,
+    blocks: Optional[Tuple[int, int, int]] = None, out_dtype=None,
+):
+    """Oracle of repair_matmul_raw: (c, counts[8]).
+
+    Event counts replay the kernel's visit schedule: each a-tile is visited
+    once per j (N/bn times), each b-tile once per i (M/bm times).
+    """
+    (M, K), (_, N) = a.shape, b.shape
+    out_dtype = out_dtype or a.dtype
+    if blocks is None:
+        bm = bn = bk = None
+        a_blk = b_blk = None
+        nj = ni = 1
+    else:
+        bm, bn, bk = blocks
+        a_blk, b_blk = (bm, bk), (bk, bn)
+        nj, ni = N // bn, M // bm
+
+    fa, nan_a, inf_a, ta = repair_array_ref(
+        a, policy=policy, constant=constant, include_inf=include_inf,
+        block=a_blk,
+    )
+    fb, nan_b, inf_b, tb = repair_array_ref(
+        b, policy=policy, constant=constant, include_inf=include_inf,
+        block=b_blk,
+    )
+    c = jnp.dot(
+        fa.astype(jnp.float32), fb.astype(jnp.float32)
+    ).astype(out_dtype)
+    counts = jnp.stack([
+        nan_a * nj, inf_a * nj, ta * nj,
+        nan_b * ni, inf_b * ni, tb * ni,
+        jnp.zeros((), jnp.int32),       # ev_total needs the joint schedule
+        jnp.zeros((), jnp.int32),
+    ])
+    return c, counts
+
+
+def flash_attention_ref(
+    q, k, v, *, causal=True, policy="zero", constant=0.0, include_inf=True,
+    kv_block: Optional[int] = None,
+):
+    """Oracle of flash_attention_raw: full-softmax attention over the
+    tile-repaired K/V.  Returns out only (counter schedule is asserted
+    separately in tests via repair_array_ref)."""
+    B, H, S, D = q.shape
+    _, Kh, T, _ = k.shape
+    G = H // Kh
+    blk = (kv_block, D) if kv_block else None
+    fk, *_ = repair_array_ref(
+        k.reshape(-1, D), policy=policy, constant=constant,
+        include_inf=include_inf, block=blk,
+    )
+    fv, *_ = repair_array_ref(
+        v.reshape(-1, D), policy=policy, constant=constant,
+        include_inf=include_inf, block=blk,
+    )
+    fk = fk.reshape(k.shape)
+    fv = fv.reshape(v.shape)
+
+    kx = jnp.repeat(fk, G, axis=1).astype(jnp.float32)   # (B,H,T,D)
+    vx = jnp.repeat(fv, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kx)
+    s = s / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", w, vx)
+    return out.astype(q.dtype)

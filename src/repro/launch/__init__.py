@@ -1,0 +1,3 @@
+"""Launch layer: production mesh, train/serve step builders, multi-pod
+dry-run.  ``dryrun.py`` is the only entry point that touches the
+host-platform device-count flag; everything else sees real devices."""

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell on the host-emulated production mesh and extract the roofline terms.
+
+The two lines above MUST stay the first statements of this module (before
+any jax-importing import): jax locks the device count at first backend init.
+Nothing else in the repo sets this flag — smoke tests and benchmarks see the
+single real CPU device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-15b \
+        --shape train_4k                       # one cell, single-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes \
+        --out benchmarks/results              # the full 32×2 sweep
+
+Per cell this prints compiled.memory_analysis() (proof it fits HBM) and
+writes a JSON record with cost_analysis + the instruction-level roofline
+terms (launch/hlo.py) for EXPERIMENTS.md §Dry-run/§Roofline.
+"""
+# (no `from __future__ import annotations` here: the XLA_FLAGS lines must be
+# the first statements of the module, which Python forbids before a
+# __future__ import)
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import REGISTRY, SHAPES, cells_for, get_config
+from ..configs.base import ArchConfig, ShapeCell
+from ..distributed import sharding as sh
+from ..models import build_model
+from . import hlo, roofline
+from .mesh import make_production_mesh
+from .serve import build_serve_step, serve_shardings
+from .train import (
+    abstract_train_state,
+    build_train_step,
+    make_optimizer,
+    train_state_shardings,
+)
+
+# Per-cell gradient-accumulation depth: keeps activation bytes/device inside
+# v5e HBM for the big configs (microbatch global = batch / n_micro).
+N_MICRO = {
+    ("mistral-large-123b", "train_4k"): 16,
+    ("starcoder2-15b", "train_4k"): 8,
+    ("phi3.5-moe-42b-a6.6b", "train_4k"): 8,
+    ("qwen3-moe-30b-a3b", "train_4k"): 8,
+    ("zamba2-7b", "train_4k"): 8,
+    ("llava-next-mistral-7b", "train_4k"): 8,
+    ("seamless-m4t-large-v2", "train_4k"): 8,
+}
+DEFAULT_N_MICRO = 4
+
+
+def rules_for_cell(mesh, cfg: ArchConfig, cell: ShapeCell,
+                   n_micro: Optional[int] = None):
+    """Sharding-rule overrides per cell kind (DESIGN.md §5)."""
+    overrides: Dict[str, object] = {}
+    if cell.kind == "decode":
+        # The KV cache dominates decode.  Shard its sequence dim over every
+        # mesh axis the other cache dims can't use: the data axis when the
+        # batch doesn't cover it (long-context B=1), the model axis when
+        # n_kv is too small for it.
+        if cell.global_batch % mesh.shape["data"] != 0:
+            overrides["kv_seq"] = "data"
+            if cfg.n_kv < mesh.shape["model"]:
+                overrides["kv_seq"] = ("data", "model")
+        elif cfg.n_kv < mesh.shape["model"]:
+            overrides["kv_seq"] = "model"
+    if cell.kind in ("decode", "prefill"):
+        # FSDP weight-gathers are pure loss for serving (each weight is read
+        # once per token; there is no optimizer state to shard) — keep
+        # params TP-sharded-only whenever they fit HBM that way (§Perf
+        # iteration: starcoder2 decode spent 70% of its wire on per-layer
+        # weight all-gathers).  mistral-large (15.4 GB/chip TP-only) keeps
+        # FSDP.
+        from ..models import build_model
+        if build_model(cfg).param_count() * 2 / mesh.shape["model"] < 8e9:
+            overrides["embed"] = None
+    if cell.kind == "train":
+        # Sequence parallelism for the residual stream when the layer-scan
+        # carry (L × S × B_local × D, saved for backward) would blow HBM.
+        nm = n_micro or N_MICRO.get((cfg.name, cell.name), DEFAULT_N_MICRO)
+        b_local = max(cell.global_batch // nm // mesh.shape["data"], 1)
+        carry = 2.0 * cfg.n_layers * cell.seq_len * b_local * cfg.d_model
+        if carry > 4e9 and cell.seq_len % mesh.shape["model"] == 0:
+            overrides["act_seq"] = "model"
+        # FSDP is a *memory* trick with a collective cost (per-layer weight
+        # all-gathers, fwd+bwd+remat).  Below ~5 B params the TP-sharded
+        # state fits one chip's HBM comfortably and pure DP over the data
+        # axis is strictly cheaper (§Perf iteration 2: dropping FSDP on
+        # xlstm-1.3b removed the full-batch activation all-gathers XLA chose
+        # to avoid touching the data-sharded weights).
+        from ..models import build_model
+        if build_model(cfg).param_count() < 5e9:
+            overrides["embed"] = None
+    return sh.rules_for_mesh(mesh, overrides)
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    cell: str
+    mesh: str
+    ok: bool
+    seconds: float
+    error: Optional[str] = None
+    report: Optional[dict] = None
+    memory_stats: Optional[dict] = None
+
+
+def _memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def lower_cell(
+    cfg: ArchConfig,
+    cell: ShapeCell,
+    *,
+    multi_pod: bool,
+    n_micro: Optional[int] = None,
+    rules=None,
+    verbose: bool = True,
+    skip_analysis: bool = False,
+):
+    """Lower + compile one (arch × shape × mesh) cell; return CellResult."""
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or rules_for_cell(mesh, cfg, cell, n_micro)
+
+    with mesh, sh.use_rules(mesh, rules):
+        if cell.kind == "train":
+            opt = make_optimizer()
+            nm = n_micro or N_MICRO.get((cfg.name, cell.name), DEFAULT_N_MICRO)
+            step = build_train_step(model, opt, n_micro=nm)
+            state_sds = abstract_train_state(model, opt)
+            state_sh = train_state_shardings(model, opt, mesh, rules)
+            batch_sds = model.input_specs(cell)
+            batch_sh = sh.batch_specs_for_inputs(batch_sds, mesh, rules)
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_sds, batch_sds)
+        elif cell.kind == "prefill":
+            params_sds = model.abstract_params()
+            params_sh = sh.tree_shardings(
+                params_sds, model.logical_axes(), mesh, rules
+            )
+            batch_sds = model.input_specs(cell)
+            batch_sh = sh.batch_specs_for_inputs(batch_sds, mesh, rules)
+            lowered = jax.jit(
+                model.forward,
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=None,
+            ).lower(params_sds, batch_sds)
+        else:  # decode
+            B, T = cell.global_batch, cell.seq_len
+            params_sds = model.abstract_params()
+            cache_sds = model.abstract_cache(B, T)
+            params_sh, cache_sh = serve_shardings(model, mesh, B, T, rules)
+            batch_sds = model.input_specs(cell)
+            batch_sh = sh.batch_specs_for_inputs(batch_sds, mesh, rules)
+            step = build_serve_step(model)
+            lowered = jax.jit(
+                step,
+                in_shardings=(params_sh, cache_sh, batch_sh, None),
+                out_shardings=(None, None, cache_sh),
+                donate_argnums=(1,),
+            ).lower(
+                params_sds, cache_sds, batch_sds,
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+
+        compiled = lowered.compile()
+
+    mem = _memory_stats(compiled)
+    result = CellResult(
+        arch=cfg.name, cell=cell.name, mesh=mesh_name, ok=True,
+        seconds=time.time() - t0, memory_stats=mem,
+    )
+    if not skip_analysis:
+        try:
+            ca = compiled.cost_analysis()
+        except Exception:
+            ca = {}
+        costs = hlo.analyze_hlo(compiled.as_text(), mesh.size)
+        report = roofline.build_report(
+            arch=cfg.name, cell=cell, mesh_name=mesh_name,
+            n_devices=mesh.size, costs=costs, model=model,
+            memory_stats=mem, cost_analysis=ca,
+        )
+        result.report = report.as_dict()
+        if verbose:
+            print(report.summary())
+    if verbose:
+        print(
+            f"  [{mesh_name}] {cfg.name} × {cell.name}: compiled in "
+            f"{result.seconds:.1f}s; per-device bytes: args="
+            f"{mem.get('argument_bytes', 0)/2**30:.3f}GiB "
+            f"temp={mem.get('temp_bytes', 0)/2**30:.3f}GiB"
+        )
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (or 'all')")
+    ap.add_argument("--shape", default=None, help="shape cell (or 'all')")
+    ap.add_argument("--all", action="store_true", help="every arch × shape")
+    ap.add_argument("--multi-pod", action="store_true", help="2×16×16 mesh")
+    ap.add_argument(
+        "--both-meshes", action="store_true", help="run 16×16 AND 2×16×16"
+    )
+    ap.add_argument("--out", default=None, help="directory for JSON records")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--skip-analysis", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = (
+        list(REGISTRY) if (args.all or args.arch in (None, "all"))
+        else [args.arch]
+    )
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    failed = 0
+    for name in archs:
+        cfg = get_config(name)
+        cells = (
+            cells_for(cfg) if (args.all or args.shape in (None, "all"))
+            else [SHAPES[args.shape]]
+        )
+        for cell in cells:
+            for mp in meshes:
+                try:
+                    r = lower_cell(
+                        cfg, cell, multi_pod=mp, n_micro=args.n_micro,
+                        skip_analysis=args.skip_analysis,
+                    )
+                except Exception as e:
+                    traceback.print_exc()
+                    r = CellResult(
+                        arch=name, cell=cell.name,
+                        mesh="2x16x16" if mp else "16x16",
+                        ok=False, seconds=0.0, error=f"{type(e).__name__}: {e}",
+                    )
+                    failed += 1
+                results.append(r)
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    fn = f"dryrun_{name}_{cell.name}_{r.mesh}.json"
+                    with open(os.path.join(args.out, fn), "w") as f:
+                        json.dump(dataclasses.asdict(r), f, indent=1)
+
+    print(f"\n== dry-run: {len(results) - failed}/{len(results)} cells OK ==")
+    for r in results:
+        status = "ok " if r.ok else "FAIL"
+        print(f"  {status} {r.arch:26s} {r.cell:12s} {r.mesh:9s} {r.error or ''}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,129 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb microscope: lower one (arch × shape) cell and attribute the
+roofline terms to specific HLO instructions (with while-trip multipliers).
+
+    PYTHONPATH=src python -m repro.launch.inspect_cell --arch xlstm-1.3b \
+        --shape train_4k [--top 12]
+"""
+
+import argparse
+
+from .dryrun import lower_cell  # noqa: E402  (sets nothing global)
+from . import hlo  # noqa: E402
+
+
+def inspect(cfg, cell, *, multi_pod=False, n_micro=None, top=12, rules=None):
+    import jax
+    from ..configs import get_config
+    from ..models import build_model
+    from ..distributed import sharding as sh
+    from .dryrun import rules_for_cell, N_MICRO, DEFAULT_N_MICRO
+    from .mesh import make_production_mesh
+    from .serve import build_serve_step, serve_shardings
+    from .train import (
+        abstract_train_state, build_train_step, make_optimizer,
+        train_state_shardings,
+    )
+    import jax.numpy as jnp
+
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or rules_for_cell(mesh, cfg, cell, n_micro)
+
+    with mesh, sh.use_rules(mesh, rules):
+        if cell.kind == "train":
+            opt = make_optimizer()
+            nm = n_micro or N_MICRO.get((cfg.name, cell.name), DEFAULT_N_MICRO)
+            step = build_train_step(model, opt, n_micro=nm)
+            state_sds = abstract_train_state(model, opt)
+            state_sh = train_state_shardings(model, opt, mesh, rules)
+            batch_sds = model.input_specs(cell)
+            batch_sh = sh.batch_specs_for_inputs(batch_sds, mesh, rules)
+            compiled = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None), donate_argnums=(0,),
+            ).lower(state_sds, batch_sds).compile()
+        elif cell.kind == "prefill":
+            params_sds = model.abstract_params()
+            params_sh = sh.tree_shardings(
+                params_sds, model.logical_axes(), mesh, rules)
+            batch_sds = model.input_specs(cell)
+            batch_sh = sh.batch_specs_for_inputs(batch_sds, mesh, rules)
+            compiled = jax.jit(
+                model.forward, in_shardings=(params_sh, batch_sh),
+            ).lower(params_sds, batch_sds).compile()
+        else:
+            B, T = cell.global_batch, cell.seq_len
+            params_sds = model.abstract_params()
+            cache_sds = model.abstract_cache(B, T)
+            params_sh, cache_sh = serve_shardings(model, mesh, B, T, rules)
+            batch_sds = model.input_specs(cell)
+            batch_sh = sh.batch_specs_for_inputs(batch_sds, mesh, rules)
+            step = build_serve_step(model)
+            compiled = jax.jit(
+                step, in_shardings=(params_sh, cache_sh, batch_sh, None),
+                out_shardings=(None, None, cache_sh), donate_argnums=(1,),
+            ).lower(params_sds, cache_sds, batch_sds,
+                    jax.ShapeDtypeStruct((), jnp.int32)).compile()
+    return compiled
+
+
+def report(compiled, n_dev, top=12):
+    txt = compiled.as_text()
+    comps, entry = hlo.parse_module(txt)
+    mult = hlo.multipliers(comps, entry)
+
+    mem_rows, coll_rows, flop_rows = [], [], []
+    for name, comp in comps.items():
+        m = mult.get(name, 0)
+        if not m:
+            continue
+        fused = name.startswith("fused_") or ".fused" in name
+        for ins in comp.instructions:
+            if ins.op == "dot":
+                flop_rows.append(
+                    (hlo._dot_flops(ins, comp) * m, m, ins.result_type.strip()[:44], name[:38]))
+            if any(ins.op.startswith(p) for p in hlo._COLLECTIVES):
+                w = hlo._collective_wire_bytes(ins, comp, n_dev)
+                coll_rows.append((w * m, m, ins.op, ins.result_type.strip()[:44], name[:38]))
+            if fused or ins.op not in hlo._MEMORY_OPS:
+                continue
+            b = hlo._instr_hbm_bytes(ins, comp, comps)
+            mem_rows.append((b * m, m, ins.op, ins.result_type.strip()[:44], name[:38]))
+
+    costs = hlo.analyze_hlo(txt, n_dev)
+    print(f"TOTALS/device: flops={costs.flops:.3e} hbm={costs.hbm_bytes:.3e} "
+          f"wire={costs.collective_wire_bytes:.3e}")
+    print(f"terms: comp={costs.flops/197e12:.2f}s mem={costs.hbm_bytes/819e9:.2f}s "
+          f"coll={costs.collective_wire_bytes/50e9:.2f}s")
+    for title, rows in (("MEMORY", mem_rows), ("COLLECTIVE", coll_rows),
+                        ("FLOPS", flop_rows)):
+        rows.sort(reverse=True)
+        print(f"-- top {title} --")
+        for r in rows[:top]:
+            print("  " + " ".join(
+                f"{x:.3e}" if isinstance(x, float) else str(x) for x in r))
+    return costs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    from ..configs import SHAPES, get_config
+    cfg = get_config(args.arch)
+    cell = SHAPES[args.shape]
+    compiled = inspect(cfg, cell, multi_pod=args.multi_pod, n_micro=args.n_micro)
+    n_dev = 512 if args.multi_pod else 256
+    report(compiled, n_dev, args.top)
+
+
+if __name__ == "__main__":
+    main()

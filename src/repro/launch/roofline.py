@@ -1,0 +1,171 @@
+"""Roofline-term computation from the compiled dry-run artifacts.
+
+Three terms, all in seconds-per-step, per chip (the HLO is already the
+per-device SPMD partition):
+
+  compute    = HLO_dot_FLOPs / peak_FLOP/s          (197 TF bf16, v5e)
+  memory     = HLO_HBM_bytes / HBM_bw               (819 GB/s)
+  collective = wire_bytes   / ICI_link_bw           (50 GB/s/link)
+
+FLOPs/bytes come from launch/hlo.py (instruction-level accounting with
+while-trip multipliers — see that module for why cost_analysis alone is not
+usable).  MODEL_FLOPS is the analytic 6·N·D (dense) / 6·N_active·D (MoE)
+useful-work number; the ratio MODEL_FLOPS / HLO_FLOPs flags remat/redundancy
+waste (ratio < 1 means the compiled program does extra compute, e.g. remat;
+ratio > 1 means the analytic model over-counts, e.g. causal-attention skips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+
+from ..configs.base import ArchConfig, ShapeCell
+from ..nn import module as module_lib
+from . import hlo
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    cell: str
+    mesh: str
+    n_devices: int
+    # per-device, per-step:
+    hlo_flops: float
+    hlo_bytes: float
+    wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_total: float
+    useful_ratio: float            # MODEL_FLOPS / (HLO_FLOPs × devices)
+    bound_s: float                 # max of the three terms
+    roofline_fraction: float       # compute_s / bound_s (how compute-bound)
+    per_collective: Dict[str, float]
+    memory_stats: Optional[Dict[str, float]] = None
+    cost_analysis_flops: Optional[float] = None
+    cost_analysis_bytes: Optional[float] = None
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        return (
+            f"{self.arch:26s} {self.cell:12s} {self.mesh:9s} "
+            f"comp={self.compute_s*1e3:9.3f}ms mem={self.memory_s*1e3:9.3f}ms "
+            f"coll={self.collective_s*1e3:9.3f}ms -> {self.dominant:10s} "
+            f"useful={self.useful_ratio:6.3f} frac={self.roofline_fraction:5.3f}"
+        )
+
+
+def terms_from_costs(costs: hlo.Costs) -> Dict[str, float]:
+    return {
+        "compute_s": costs.flops / PEAK_FLOPS_BF16,
+        "memory_s": costs.hbm_bytes / HBM_BW,
+        "collective_s": costs.collective_wire_bytes / ICI_BW,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS.
+# ---------------------------------------------------------------------------
+
+
+def matmul_param_count(model) -> float:
+    """Parameters participating in matmuls, with MoE experts weighted by
+    their activation fraction top_k/E.  The (tied) embedding counts once —
+    the readout logits matmul is real compute; the lookup is not."""
+    cfg: ArchConfig = model.cfg
+    frac = (cfg.top_k / cfg.n_experts) if cfg.n_experts else 1.0
+
+    total = 0.0
+
+    def acc(path: str, d: module_lib.ParamDef):
+        import numpy as np
+
+        n = float(np.prod(d.shape))
+        if "expert" in (d.axes or ()) or (
+            cfg.n_experts and any(s == cfg.n_experts for s in d.shape)
+        ):
+            n *= frac
+        nonlocal total
+        total += n
+        return None
+
+    module_lib._traverse(model.defs(), acc)
+    return total
+
+
+def model_flops(model, cell: ShapeCell) -> float:
+    """Analytic useful FLOPs for one step of ``cell`` (whole job, all chips)."""
+    cfg: ArchConfig = model.cfg
+    N = matmul_param_count(model)
+    B, S = cell.global_batch, cell.seq_len
+    H, Dh = cfg.n_heads, cfg.resolved_head_dim
+
+    if cell.kind == "train":
+        tokens = B * S
+        attn = 6.0 * B * S * S * H * Dh * cfg.n_layers / 2  # causal half
+        if cfg.family in ("hybrid",):
+            attn *= (cfg.n_layers // cfg.mamba_per_attn) / cfg.n_layers
+        if cfg.family in ("ssm",):
+            attn = 0.0          # mLSTM chunked form ~ linear, folded into N
+        return 6.0 * N * tokens + attn
+    if cell.kind == "prefill":
+        tokens = B * S
+        attn = 2.0 * B * S * S * H * Dh * cfg.n_layers / 2
+        if cfg.family in ("hybrid",):
+            attn *= (cfg.n_layers // cfg.mamba_per_attn) / cfg.n_layers
+        if cfg.family in ("ssm",):
+            attn = 0.0
+        return 2.0 * N * tokens + attn
+    # decode: one token over a cache of depth S
+    layers_attn = cfg.n_layers
+    if cfg.family == "hybrid":
+        layers_attn = cfg.n_layers // cfg.mamba_per_attn
+    if cfg.family == "ssm":
+        layers_attn = 0
+    attn = 4.0 * B * S * H * Dh * layers_attn
+    return 2.0 * N * B + attn
+
+
+def build_report(
+    *,
+    arch: str,
+    cell: ShapeCell,
+    mesh_name: str,
+    n_devices: int,
+    costs: hlo.Costs,
+    model,
+    memory_stats=None,
+    cost_analysis=None,
+) -> RooflineReport:
+    t = terms_from_costs(costs)
+    dominant = max(t, key=t.get).replace("_s", "")
+    mf = model_flops(model, cell)
+    bound = max(t.values())
+    return RooflineReport(
+        arch=arch,
+        cell=cell.name,
+        mesh=mesh_name,
+        n_devices=n_devices,
+        hlo_flops=costs.flops,
+        hlo_bytes=costs.hbm_bytes,
+        wire_bytes=costs.collective_wire_bytes,
+        compute_s=t["compute_s"],
+        memory_s=t["memory_s"],
+        collective_s=t["collective_s"],
+        dominant=dominant,
+        model_flops_total=mf,
+        useful_ratio=mf / max(costs.flops * n_devices, 1.0),
+        bound_s=bound,
+        roofline_fraction=t["compute_s"] / bound if bound else 0.0,
+        per_collective=dict(costs.per_collective),
+        memory_stats=memory_stats,
+        cost_analysis_flops=(cost_analysis or {}).get("flops"),
+        cost_analysis_bytes=(cost_analysis or {}).get("bytes accessed"),
+    )

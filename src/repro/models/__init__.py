@@ -1,0 +1,21 @@
+"""Model zoo: builds the right architecture class from an ArchConfig."""
+from __future__ import annotations
+
+from ..configs.base import ArchConfig
+from .base import Model, next_token_loss  # noqa: F401
+from .encdec import EncDecLM
+from .transformer_lm import TransformerLM
+from .xlstm_lm import XLSTMLM
+from .zamba import ZambaLM
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    if cfg.family == "hybrid":
+        return ZambaLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTMLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

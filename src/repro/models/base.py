@@ -1,0 +1,130 @@
+"""Model protocol + shared pieces (loss, readout, scan/remat helpers).
+
+Every architecture exposes the same surface so launch/, tests/ and
+benchmarks/ are arch-agnostic:
+
+  defs()                       param-def pytree (module.ParamDef leaves)
+  init(key)                    real params
+  abstract_params()            ShapeDtypeStruct tree (dry-run)
+  logical_axes()               logical-axis tree (sharding rules input)
+  loss(params, batch)          -> (scalar, metrics dict)      [train cells]
+  forward(params, batch)       -> logits                      [prefill cells]
+  cache_defs(batch, max_seq)   decode-state param-defs
+  serve_step(params, cache, batch, pos) -> (logits, cache)    [decode cells]
+  input_specs(cell)            ShapeDtypeStruct stand-ins for every input
+
+``batch`` is a dict; LM cells use {"tokens": (B,S) i32}; VLM adds
+{"patch_embeds": (B,P,D)}; audio enc-dec uses {"frames": (B,Se,D),
+"tokens": (B,St)} — the modality frontends are stubs per the assignment
+(input_specs provides precomputed frame/patch embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCell
+from ..nn import module
+
+
+class Model:
+    """Base: wires the def-driven machinery; subclasses fill the math."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ---- def-driven machinery (uniform across archs) ----
+    def defs(self):
+        raise NotImplementedError
+
+    def init(self, key: jax.Array):
+        return module.init_params(self.defs(), key)
+
+    def abstract_params(self):
+        return module.abstract_params(self.defs())
+
+    def logical_axes(self):
+        return module.logical_axes(self.defs())
+
+    def param_count(self) -> int:
+        return module.param_count(self.defs())
+
+    def cache_defs(self, batch: int, max_seq: int):
+        raise NotImplementedError
+
+    def init_cache(self, batch: int, max_seq: int, key=None):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return module.init_params(self.cache_defs(batch, max_seq), key)
+
+    def abstract_cache(self, batch: int, max_seq: int):
+        return module.abstract_params(self.cache_defs(batch, max_seq))
+
+    def cache_logical_axes(self, batch: int, max_seq: int):
+        return module.logical_axes(self.cache_defs(batch, max_seq))
+
+    # ---- arch math (subclass responsibility) ----
+    def forward(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        raise NotImplementedError
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        raise NotImplementedError
+
+    def serve_step(self, params, cache, batch, pos):
+        raise NotImplementedError
+
+    # ---- input stand-ins per shape cell ----
+    def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
+        """ShapeDtypeStruct dict for the cell's entry point.
+
+        train/prefill: the full-sequence batch.  decode: the one-token batch
+        (the KV cache spec comes from abstract_cache, passed separately)."""
+        B, S = cell.global_batch, cell.seq_len
+        if cell.kind in ("train", "prefill"):
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Shared loss.
+# ---------------------------------------------------------------------------
+
+
+def next_token_loss(
+    logits: jax.Array,        # (B, S, V) f32
+    tokens: jax.Array,        # (B, S) i32
+    mask: Optional[jax.Array] = None,   # (B, S) — which *targets* count
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Causal LM loss: predict tokens[:, t+1] from logits[:, t]."""
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    if mask is None:
+        m = jnp.ones(targets.shape, jnp.float32)
+    else:
+        m = mask[:, 1:].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * m
+    denom = jnp.maximum(m.sum(), 1.0)
+    loss = nll.sum() / denom
+    acc = (jnp.argmax(logits, -1) == targets).astype(jnp.float32)
+    return loss, {
+        "loss": loss,
+        "accuracy": (acc * m).sum() / denom,
+        "tokens": m.sum(),
+    }
+
+
+def scan_blocks(block_fn, h, stacked_params, *, remat: bool = True,
+                carry_extra=None):
+    """Scan ``block_fn`` over a stacked-parameter pytree.
+
+    block_fn((h, extra), layer_params) -> ((h, extra), y).  ``extra`` carries
+    e.g. the MoE aux-loss accumulator.  remat wraps the body so backward
+    recomputes activations (memory-term lever, §Perf)."""
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+    carry = (h, carry_extra)
+    (h, extra), ys = jax.lax.scan(fn, carry, stacked_params)
+    return h, extra, ys

@@ -1,0 +1,201 @@
+"""Encoder-decoder transformer (seamless-m4t family).
+
+The speech frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, D) directly; the transformer backbone
+(self-attn encoder + causal decoder with cross-attention) is the real system
+under test.  Conformer-specific encoder details (conv modules) are out of
+backbone scope — recorded in DESIGN.md §Arch-applicability.
+
+Decode state = per-decoder-layer self-attention KV cache (grows with emitted
+tokens) + per-layer cross-attention KV computed once from the encoder output
+(read-only thereafter — the classic approximate-memory resident: large, cold,
+reused every step).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCell
+from ..distributed.sharding import constrain
+from ..nn import module
+from ..nn.attention import Attention
+from ..nn.layers import Embedding, LayerNorm, RMSNorm
+from ..nn.mlp import GeluMLP, SwiGLU
+from .base import Model, next_token_loss
+
+
+class EncDecLM(Model):
+    def __init__(self, cfg: ArchConfig):
+        super().__init__(cfg)
+        rcfg = cfg.repair
+        Norm = RMSNorm if cfg.norm == "rms" else LayerNorm
+        mk_norm = lambda: Norm(cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+        self.norm = mk_norm()          # template reused for every norm site
+        mk_attn = lambda causal, rope: Attention(
+            d_model=cfg.d_model,
+            n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv,
+            head_dim=cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias,
+            rope_theta=cfg.rope_theta,
+            use_rope=rope,
+            causal=causal,
+            dtype=cfg.dtype,
+            rcfg=rcfg,
+            q_block=cfg.attn_q_block,
+            kv_block=cfg.attn_kv_block,
+        )
+        self.enc_attn = mk_attn(False, True)
+        self.dec_attn = mk_attn(True, True)
+        self.cross_attn = mk_attn(False, False)   # no RoPE across modalities
+        if cfg.mlp == "gelu":
+            self.mlp: Any = GeluMLP(cfg.d_model, cfg.d_ff, dtype=cfg.dtype, rcfg=rcfg)
+        else:
+            self.mlp = SwiGLU(cfg.d_model, cfg.d_ff, dtype=cfg.dtype, rcfg=rcfg)
+        self.embed = Embedding(cfg.vocab, cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+
+    # ------------------------------------------------------------------ defs
+    def _enc_layer_defs(self):
+        return {
+            "norm1": self.norm.defs(),
+            "attn": self.enc_attn.defs(),
+            "norm2": self.norm.defs(),
+            "mlp": self.mlp.defs(),
+        }
+
+    def _dec_layer_defs(self):
+        return {
+            "norm1": self.norm.defs(),
+            "self_attn": self.dec_attn.defs(),
+            "norm_x": self.norm.defs(),
+            "cross_attn": self.cross_attn.defs(),
+            "norm2": self.norm.defs(),
+            "mlp": self.mlp.defs(),
+        }
+
+    def defs(self):
+        cfg = self.cfg
+        return {
+            "embed": self.embed.defs(),
+            "encoder": module.stack_defs(self._enc_layer_defs(), cfg.enc_layers),
+            "enc_norm": self.norm.defs(),
+            "decoder": module.stack_defs(self._dec_layer_defs(), cfg.dec_layers),
+            "final_norm": self.norm.defs(),
+        }
+
+    def enc_len_for(self, cell: ShapeCell) -> int:
+        """Encoder length for decode cells (frames already encoded)."""
+        return max(cell.seq_len // 8, 128)
+
+    def cache_defs(self, batch: int, max_seq: int, enc_len: int = None):
+        enc_len = enc_len or max(max_seq // 8, 128)
+        return {
+            "self": module.stack_defs(
+                self.dec_attn.cache_defs(batch, max_seq), self.cfg.dec_layers
+            ),
+            "cross": module.stack_defs(
+                self.cross_attn.cache_defs(batch, enc_len), self.cfg.dec_layers
+            ),
+        }
+
+    # --------------------------------------------------------------- forward
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        B, S, _ = frames.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h = frames.astype(self.cfg.dtype)
+
+        _ACT = ("act_batch", "act_seq", "act_embed")
+
+        def body(carry, p_l):
+            h, _ = carry
+            h = h + self.enc_attn(
+                p_l["attn"], self.norm(p_l["norm1"], h), positions
+            )
+            h = constrain(
+                h + self.mlp(p_l["mlp"], self.norm(p_l["norm2"], h)), _ACT
+            )
+            return (h, None), None
+
+        fn = jax.checkpoint(body) if self.cfg.remat else body
+        (h, _), _ = jax.lax.scan(fn, (h, None), params["encoder"])
+        return self.norm(params["enc_norm"], h)
+
+    def decode_train(self, params, tokens: jax.Array, enc: jax.Array):
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h = self.embed(params["embed"], tokens)
+
+        _ACT = ("act_batch", "act_seq", "act_embed")
+
+        def body(carry, p_l):
+            h, _ = carry
+            h = h + self.dec_attn(
+                p_l["self_attn"], self.norm(p_l["norm1"], h), positions
+            )
+            h = h + self.cross_attn(
+                p_l["cross_attn"], self.norm(p_l["norm_x"], h), kv_x=enc
+            )
+            h = constrain(
+                h + self.mlp(p_l["mlp"], self.norm(p_l["norm2"], h)), _ACT
+            )
+            return (h, None), None
+
+        fn = jax.checkpoint(body) if self.cfg.remat else body
+        (h, _), _ = jax.lax.scan(fn, (h, None), params["decoder"])
+        h = self.norm(params["final_norm"], h)
+        return self.embed.attend(params["embed"], h)
+
+    def forward(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        enc = self.encode(params, batch["frames"])
+        return self.decode_train(params, batch["tokens"], enc)
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch)
+        return next_token_loss(logits, batch["tokens"])
+
+    # ---------------------------------------------------------------- decode
+    def build_cross_cache(self, params, enc: jax.Array):
+        """Project encoder output to per-decoder-layer cross K/V (prefill)."""
+        def body(_, p_l):
+            pa = p_l["cross_attn"]
+            _, k, v = self.cross_attn._qkv(pa, enc[:, :1], kv_x=enc)
+            return None, {"k": k, "v": v}
+
+        _, cross = jax.lax.scan(body, None, params["decoder"])
+        return cross
+
+    def serve_step(self, params, cache, batch, pos):
+        h = self.embed(params["embed"], batch["tokens"])
+
+        def body(h, xs):
+            p_l, self_c, cross_c = xs
+            a, self_new = self.dec_attn.decode(
+                p_l["self_attn"], self.norm(p_l["norm1"], h), self_c, pos
+            )
+            h = h + a
+            h = h + self.cross_attn.decode_cross(
+                p_l["cross_attn"], self.norm(p_l["norm_x"], h), cross_c
+            )
+            h = h + self.mlp(p_l["mlp"], self.norm(p_l["norm2"], h))
+            return h, self_new
+
+        h, self_new = jax.lax.scan(
+            body, h, (params["decoder"], cache["self"], cache["cross"])
+        )
+        h = self.norm(params["final_norm"], h)
+        logits = self.embed.attend(params["embed"], h)
+        return logits, {"self": self_new, "cross": cache["cross"]}
+
+    # ----------------------------------------------------------- input specs
+    def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
+        B, S = cell.global_batch, cell.seq_len
+        cfg = self.cfg
+        if cell.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype),
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }

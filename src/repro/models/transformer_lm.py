@@ -1,0 +1,200 @@
+"""Decoder-only transformer LM — unified over dense, MoE, and VLM families.
+
+One class covers starcoder2 / qwen2 / mistral-large / stablelm (dense),
+phi3.5-moe / qwen3-moe (MoE FFN), and llava-next (dense backbone + patch-
+embedding prefix from the stubbed vision frontend).  The family switches are
+all config-driven: norm type, MLP type, biases, partial RoPE, expert count.
+
+Layer stacking is a ``lax.scan`` over stacked parameters (HLO size flat in
+depth — mandatory for the 88-layer mistral-large dry-run) with
+``jax.checkpoint`` around the block body.
+
+Approximate-memory integration: every parameter/cache read inside the layers
+goes through ``core.repair.use`` (register mode repairs at each use; memory
+mode is a step-boundary scrub of the state pytree — see launch/train.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCell
+from ..distributed.sharding import constrain
+from ..nn import module
+from ..nn.attention import Attention
+from ..nn.layers import Embedding, LayerNorm, Linear, RMSNorm
+from ..nn.mlp import GeluMLP, SwiGLU
+from ..nn.moe import MoE
+from .base import Model, next_token_loss
+
+
+class TransformerLM(Model):
+    def __init__(self, cfg: ArchConfig):
+        super().__init__(cfg)
+        rcfg = cfg.repair
+        Norm = RMSNorm if cfg.norm == "rms" else LayerNorm
+        self.norm1 = Norm(cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+        self.norm2 = Norm(cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+        self.final_norm = Norm(cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+        self.attn = Attention(
+            d_model=cfg.d_model,
+            n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv,
+            head_dim=cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias,
+            rope_theta=cfg.rope_theta,
+            rotary_pct=cfg.rotary_pct,
+            dtype=cfg.dtype,
+            rcfg=rcfg,
+            q_block=cfg.attn_q_block,
+            kv_block=cfg.attn_kv_block,
+        )
+        if cfg.n_experts:
+            self.mlp: Any = MoE(
+                d_model=cfg.d_model,
+                d_ff=cfg.d_ff,
+                n_experts=cfg.n_experts,
+                top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+                dtype=cfg.dtype,
+                rcfg=rcfg,
+            )
+        elif cfg.mlp == "gelu":
+            self.mlp = GeluMLP(cfg.d_model, cfg.d_ff, dtype=cfg.dtype, rcfg=rcfg)
+        else:
+            self.mlp = SwiGLU(cfg.d_model, cfg.d_ff, dtype=cfg.dtype, rcfg=rcfg)
+        self.embed = Embedding(cfg.vocab, cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+        if not cfg.tie_embeddings:
+            self.lm_head = Linear(
+                cfg.d_model, cfg.vocab, ("embed", "vocab"), dtype=cfg.dtype,
+                rcfg=rcfg,
+            )
+
+    # ------------------------------------------------------------------ defs
+    def layer_defs(self):
+        return {
+            "norm1": self.norm1.defs(),
+            "attn": self.attn.defs(),
+            "norm2": self.norm2.defs(),
+            "mlp": self.mlp.defs(),
+        }
+
+    def defs(self):
+        d = {
+            "embed": self.embed.defs(),
+            "layers": module.stack_defs(self.layer_defs(), self.cfg.n_layers),
+            "final_norm": self.final_norm.defs(),
+        }
+        if not self.cfg.tie_embeddings:
+            d["lm_head"] = self.lm_head.defs()
+        return d
+
+    def cache_defs(self, batch: int, max_seq: int):
+        return {
+            "layers": module.stack_defs(
+                self.attn.cache_defs(batch, max_seq), self.cfg.n_layers
+            )
+        }
+
+    # --------------------------------------------------------------- forward
+    _ACT = ("act_batch", "act_seq", "act_embed")
+
+    def _block(self, carry, p_l, positions):
+        h, aux = carry
+        h = h + self.attn(p_l["attn"], self.norm1(p_l["norm1"], h), positions)
+        h = constrain(h, self._ACT)
+        y = self.mlp(p_l["mlp"], self.norm2(p_l["norm2"], h))
+        if isinstance(self.mlp, MoE):
+            y, aux_l = y
+            aux = aux + aux_l
+        h = constrain(h + y, self._ACT)
+        return (h, aux)
+
+    def _trunk(self, params, h, positions):
+        """Embeddings -> final norm, scanned over stacked layers."""
+        def body(carry, p_l):
+            return self._block(carry, p_l, positions), None
+
+        fn = jax.checkpoint(body) if self.cfg.remat else body
+        (h, aux), _ = jax.lax.scan(
+            fn, (h, jnp.zeros((), jnp.float32)), params["layers"]
+        )
+        return self.final_norm(params["final_norm"], h), aux
+
+    def _readout(self, params, h):
+        if self.cfg.tie_embeddings:
+            logits = self.embed.attend(params["embed"], h)
+        else:
+            logits = self.lm_head(params["lm_head"], h).astype(jnp.float32)
+        return constrain(logits, ("act_batch", "act_seq", "act_vocab"))
+
+    def _embed_inputs(self, params, batch):
+        """Token embeddings, with the VLM patch-prefix prepended when given.
+
+        Returns (h, positions, n_prefix)."""
+        tokens = batch["tokens"]
+        h = self.embed(params["embed"], tokens)
+        n_prefix = 0
+        if "patch_embeds" in batch:
+            prefix = batch["patch_embeds"].astype(h.dtype)
+            n_prefix = prefix.shape[1]
+            h = jnp.concatenate([prefix, h], axis=1)
+        B, S = h.shape[:2]
+        h = constrain(h, self._ACT)
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        return h, positions, n_prefix
+
+    def forward(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        h, positions, n_prefix = self._embed_inputs(params, batch)
+        h, _ = self._trunk(params, h, positions)
+        if n_prefix:
+            h = h[:, n_prefix:]
+        return self._readout(params, h)
+
+    def loss(self, params, batch):
+        h, positions, n_prefix = self._embed_inputs(params, batch)
+        h, aux = self._trunk(params, h, positions)
+        if n_prefix:
+            h = h[:, n_prefix:]
+        logits = self._readout(params, h)
+        loss, metrics = next_token_loss(logits, batch["tokens"])
+        if self.cfg.n_experts:
+            loss = loss + 0.01 * aux
+            metrics = dict(metrics, moe_aux=aux)
+        return loss, metrics
+
+    # ---------------------------------------------------------------- decode
+    def serve_step(self, params, cache, batch, pos):
+        """One decode step.  batch["tokens"]: (B, 1); pos: scalar i32."""
+        h = self.embed(params["embed"], batch["tokens"])
+
+        def body(h, xs):
+            p_l, c_l = xs
+            a, c_new = self.attn.decode(
+                p_l["attn"], self.norm1(p_l["norm1"], h), c_l, pos
+            )
+            h = h + a
+            y = self.mlp(p_l["mlp"], self.norm2(p_l["norm2"], h))
+            if isinstance(self.mlp, MoE):
+                y, _ = y
+            return h + y, c_new
+
+        h, new_cache = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
+        h = self.final_norm(params["final_norm"], h)
+        return self._readout(params, h), {"layers": new_cache}
+
+    # ----------------------------------------------------------- input specs
+    def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
+        B, S = cell.global_batch, cell.seq_len
+        cfg = self.cfg
+        if cell.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        if cfg.frontend == "patches":
+            P = int(S * cfg.frontend_fraction)
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - P), jnp.int32),
+                "patch_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), cfg.dtype),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}

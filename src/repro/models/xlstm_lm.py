@@ -1,0 +1,143 @@
+"""xLSTM LM: mLSTM blocks with a periodic sLSTM block (arXiv:2405.04517).
+
+``slstm_every``-th position in the stack is an sLSTM block; the rest are
+mLSTM.  With 48 layers and slstm_every=8 the stack is 6 homogeneous groups
+of (7 mLSTM + 1 sLSTM), scanned as an outer scan over groups with an inner
+scan over the mLSTM run — flat HLO in depth.
+
+Both block types are pre-norm residual; neither carries an external FFN
+(d_ff=0 in the assignment — mLSTM has its own up/down projections, sLSTM its
+own small FF; see nn/xlstm.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCell
+from ..distributed.sharding import constrain
+from ..nn import module
+from ..nn.layers import Embedding, RMSNorm
+from ..nn.xlstm import MLSTM, SLSTM
+from .base import Model, next_token_loss
+
+
+class XLSTMLM(Model):
+    def __init__(self, cfg: ArchConfig):
+        super().__init__(cfg)
+        rcfg = cfg.repair
+        assert cfg.n_layers % cfg.slstm_every == 0, (
+            "xLSTM stack must be whole groups", cfg.n_layers, cfg.slstm_every
+        )
+        self.mlstm = MLSTM(
+            d_model=cfg.d_model,
+            n_heads=cfg.n_heads,
+            chunk=cfg.ssm_chunk,
+            dtype=cfg.dtype,
+            rcfg=rcfg,
+        )
+        self.slstm = SLSTM(
+            d_model=cfg.d_model, n_heads=cfg.n_heads, dtype=cfg.dtype, rcfg=rcfg
+        )
+        self.norm = RMSNorm(cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+        self.final_norm = RMSNorm(cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+        self.embed = Embedding(cfg.vocab, cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+
+    @property
+    def n_groups(self) -> int:
+        return self.cfg.n_layers // self.cfg.slstm_every
+
+    @property
+    def m_per_group(self) -> int:
+        return self.cfg.slstm_every - 1
+
+    # ------------------------------------------------------------------ defs
+    def defs(self):
+        m_layer = {"norm": self.norm.defs(), "mlstm": self.mlstm.defs()}
+        s_layer = {"norm": self.norm.defs(), "slstm": self.slstm.defs()}
+        return {
+            "embed": self.embed.defs(),
+            "mlstm_groups": module.stack_defs(
+                module.stack_defs(m_layer, self.m_per_group), self.n_groups
+            ),
+            "slstm_layers": module.stack_defs(s_layer, self.n_groups),
+            "final_norm": self.final_norm.defs(),
+        }
+
+    def cache_defs(self, batch: int, max_seq: int):
+        return {
+            "mlstm_groups": module.stack_defs(
+                module.stack_defs(self.mlstm.cache_defs(batch), self.m_per_group),
+                self.n_groups,
+            ),
+            "slstm_layers": module.stack_defs(
+                self.slstm.cache_defs(batch), self.n_groups
+            ),
+        }
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        tokens = batch["tokens"]
+        h = self.embed(params["embed"], tokens)
+
+        _ACT = ("act_batch", "act_seq", "act_embed")
+
+        def m_layer(carry, p_l):
+            h, _ = carry
+            h = constrain(h + self.mlstm(p_l["mlstm"], self.norm(p_l["norm"], h)), _ACT)
+            return (h, None), None
+
+        mfn = jax.checkpoint(m_layer) if self.cfg.remat else m_layer
+
+        def group(carry, xs):
+            h, _ = carry
+            p_group, p_s = xs
+            (h, _), _ = jax.lax.scan(mfn, (h, None), p_group)
+            h = constrain(h + self.slstm(p_s["slstm"], self.norm(p_s["norm"], h)), _ACT)
+            return (h, None), None
+
+        gfn = jax.checkpoint(group) if self.cfg.remat else group
+        (h, _), _ = jax.lax.scan(
+            gfn, (h, None), (params["mlstm_groups"], params["slstm_layers"])
+        )
+        h = self.final_norm(params["final_norm"], h)
+        return self.embed.attend(params["embed"], h)
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch)
+        return next_token_loss(logits, batch["tokens"])
+
+    # ---------------------------------------------------------------- decode
+    def serve_step(self, params, cache, batch, pos):
+        h = self.embed(params["embed"], batch["tokens"])
+
+        def m_step(h, xs):
+            p_l, c_l = xs
+            y, c_new = self.mlstm.decode_step(
+                p_l["mlstm"], self.norm(p_l["norm"], h), c_l
+            )
+            return h + y, c_new
+
+        def group(h, xs):
+            p_group, c_group, p_s, c_s = xs
+            h, c_new = jax.lax.scan(m_step, h, (p_group, c_group))
+            y, s_new = self.slstm.decode_step(
+                p_s["slstm"], self.norm(p_s["norm"], h), c_s
+            )
+            return h + y, (c_new, s_new)
+
+        h, (m_new, s_new) = jax.lax.scan(
+            group,
+            h,
+            (
+                params["mlstm_groups"],
+                cache["mlstm_groups"],
+                params["slstm_layers"],
+                cache["slstm_layers"],
+            ),
+        )
+        h = self.final_norm(params["final_norm"], h)
+        logits = self.embed.attend(params["embed"], h)
+        return logits, {"mlstm_groups": m_new, "slstm_layers": s_new}

@@ -1,0 +1,240 @@
+"""Zamba2-style hybrid: Mamba2 backbone + shared attention blocks.
+
+Structure (arXiv:2411.15242, adapted): ``n_layers`` Mamba2 layers; after
+every ``mamba_per_attn``-th layer a **shared** transformer block is applied
+to ``concat(h, emb0)`` (the original embedding is re-injected, Zamba's
+signature trick), alternating between ``n_shared_blocks`` parameter sets;
+each invocation has its own down-projection back to d_model (the paper's
+per-invocation LoRA, simplified to a full per-invocation projection —
+recorded in DESIGN.md).
+
+Grouped scan: G = n_layers // mamba_per_attn groups of (mamba_per_attn
+Mamba layers + 1 shared-block application), then the remainder layers.
+Keeps HLO flat in depth for the 81-layer config.
+
+Approximate-memory note: the recurrent SSM state is the long-lived decode
+resident; a NaN there poisons *all future tokens* (temporal Fig. 1), so the
+state flows through ``core.repair.use`` like the KV caches (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCell
+from ..distributed.sharding import constrain
+from ..nn import module
+from ..nn.attention import Attention
+from ..nn.layers import Embedding, RMSNorm
+from ..nn.mlp import SwiGLU
+from ..nn.module import ParamDef
+from ..nn.ssm import Mamba2
+from ..nn import initializers as ini
+from .base import Model, next_token_loss
+
+
+class ZambaLM(Model):
+    def __init__(self, cfg: ArchConfig):
+        super().__init__(cfg)
+        rcfg = cfg.repair
+        self.d_shared = 2 * cfg.d_model
+        self.mamba = Mamba2(
+            d_model=cfg.d_model,
+            d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim,
+            chunk=cfg.ssm_chunk,
+            dtype=cfg.dtype,
+            rcfg=rcfg,
+        )
+        self.mamba_norm = RMSNorm(cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+        self.shared_attn = Attention(
+            d_model=self.d_shared,
+            n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv,
+            head_dim=self.d_shared // cfg.n_heads,
+            rope_theta=cfg.rope_theta,
+            dtype=cfg.dtype,
+            rcfg=rcfg,
+            q_block=cfg.attn_q_block,
+            kv_block=cfg.attn_kv_block,
+        )
+        self.shared_norm = RMSNorm(self.d_shared, dtype=cfg.dtype, rcfg=rcfg)
+        self.shared_mlp = SwiGLU(
+            self.d_shared, cfg.d_ff, dtype=cfg.dtype, rcfg=rcfg
+        )
+        self.final_norm = RMSNorm(cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+        self.embed = Embedding(cfg.vocab, cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+
+    # ------------------------------------------------------------- structure
+    @property
+    def n_groups(self) -> int:
+        return self.cfg.n_layers // self.cfg.mamba_per_attn
+
+    @property
+    def n_tail(self) -> int:
+        return self.cfg.n_layers - self.n_groups * self.cfg.mamba_per_attn
+
+    # ------------------------------------------------------------------ defs
+    def _mamba_layer_defs(self):
+        return {"norm": self.mamba_norm.defs(), "mamba": self.mamba.defs()}
+
+    def _shared_block_defs(self):
+        return {
+            "norm1": self.shared_norm.defs(),
+            "attn": self.shared_attn.defs(),
+            "norm2": self.shared_norm.defs(),
+            "mlp": self.shared_mlp.defs(),
+        }
+
+    def defs(self):
+        cfg = self.cfg
+        d = {
+            "embed": self.embed.defs(),
+            "mamba_groups": module.stack_defs(
+                module.stack_defs(self._mamba_layer_defs(), cfg.mamba_per_attn),
+                self.n_groups,
+            ),
+            "shared": module.stack_defs(
+                self._shared_block_defs(), cfg.n_shared_blocks
+            ),
+            # per-invocation down-projection 2D -> D (Zamba's per-use LoRA,
+            # here a full projection)
+            "proj": ParamDef(
+                (self.n_groups, self.d_shared, cfg.d_model),
+                cfg.dtype, ini.fan_in(), ("layers", "mlp", "embed"),
+            ),
+            "final_norm": self.final_norm.defs(),
+        }
+        if self.n_tail:
+            d["mamba_tail"] = module.stack_defs(
+                self._mamba_layer_defs(), self.n_tail
+            )
+        return d
+
+    def cache_defs(self, batch: int, max_seq: int):
+        d = {
+            "mamba_groups": module.stack_defs(
+                module.stack_defs(
+                    self.mamba.cache_defs(batch), self.cfg.mamba_per_attn
+                ),
+                self.n_groups,
+            ),
+            "shared_kv": module.stack_defs(
+                self.shared_attn.cache_defs(batch, max_seq), self.n_groups
+            ),
+        }
+        if self.n_tail:
+            d["mamba_tail"] = module.stack_defs(
+                self.mamba.cache_defs(batch), self.n_tail
+            )
+        return d
+
+    # --------------------------------------------------------------- forward
+    def _select_shared(self, params, g_idx):
+        """Alternating shared-block parameter set (A/B/... by group index)."""
+        sel = g_idx % self.cfg.n_shared_blocks
+        return jax.tree.map(lambda a: jnp.take(a, sel, axis=0), params["shared"])
+
+    def _shared_block(self, sp, proj_g, h, emb0, positions):
+        x = jnp.concatenate([h, emb0], axis=-1)            # (B,S,2D)
+        x = x + self.shared_attn(
+            sp["attn"], self.shared_norm(sp["norm1"], x), positions
+        )
+        x = x + self.shared_mlp(sp["mlp"], self.shared_norm(sp["norm2"], x))
+        return constrain(
+            h + jnp.einsum(
+                "bse,ed->bsd", x, proj_g, preferred_element_type=jnp.float32
+            ).astype(h.dtype),
+            ("act_batch", "act_seq", "act_embed"),
+        )
+
+    def forward(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        emb0 = self.embed(params["embed"], tokens)
+        h = emb0
+
+        _ACT = ("act_batch", "act_seq", "act_embed")
+
+        def mamba_layer(carry, p_l):
+            h, _ = carry
+            h = constrain(
+                h + self.mamba(p_l["mamba"], self.mamba_norm(p_l["norm"], h)),
+                _ACT,
+            )
+            return (h, None), None
+
+        mfn = jax.checkpoint(mamba_layer) if self.cfg.remat else mamba_layer
+
+        def group(carry, xs):
+            h, _ = carry
+            p_group, proj_g, g_idx = xs
+            (h, _), _ = jax.lax.scan(mfn, (h, None), p_group)
+            sp = self._select_shared(params, g_idx)
+            h = self._shared_block(sp, proj_g, h, emb0, positions)
+            return (h, None), None
+
+        gfn = jax.checkpoint(group) if self.cfg.remat else group
+        (h, _), _ = jax.lax.scan(
+            gfn,
+            (h, None),
+            (params["mamba_groups"], params["proj"], jnp.arange(self.n_groups)),
+        )
+        if self.n_tail:
+            (h, _), _ = jax.lax.scan(mfn, (h, None), params["mamba_tail"])
+        h = self.final_norm(params["final_norm"], h)
+        return self.embed.attend(params["embed"], h)
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch)
+        return next_token_loss(logits, batch["tokens"])
+
+    # ---------------------------------------------------------------- decode
+    def serve_step(self, params, cache, batch, pos):
+        h = self.embed(params["embed"], batch["tokens"])   # (B,1,D)
+        emb0 = h
+
+        def mamba_step(h, xs):
+            p_l, c_l = xs
+            y, c_new = self.mamba.decode_step(
+                p_l["mamba"], self.mamba_norm(p_l["norm"], h), c_l
+            )
+            return h + y, c_new
+
+        def group(h, xs):
+            p_group, c_group, kv_c, proj_g, g_idx = xs
+            h, c_new = jax.lax.scan(mamba_step, h, (p_group, c_group))
+            sp = self._select_shared(params, g_idx)
+            x = jnp.concatenate([h, emb0], axis=-1)
+            a, kv_new = self.shared_attn.decode(
+                sp["attn"], self.shared_norm(sp["norm1"], x), kv_c, pos
+            )
+            x = x + a
+            x = x + self.shared_mlp(sp["mlp"], self.shared_norm(sp["norm2"], x))
+            h = h + jnp.einsum(
+                "bse,ed->bsd", x, proj_g, preferred_element_type=jnp.float32
+            ).astype(h.dtype)
+            return h, (c_new, kv_new)
+
+        h, (mamba_new, kv_new) = jax.lax.scan(
+            group,
+            h,
+            (
+                params["mamba_groups"],
+                cache["mamba_groups"],
+                cache["shared_kv"],
+                params["proj"],
+                jnp.arange(self.n_groups),
+            ),
+        )
+        new_cache = {"mamba_groups": mamba_new, "shared_kv": kv_new}
+        if self.n_tail:
+            h, tail_new = jax.lax.scan(
+                mamba_step, h, (params["mamba_tail"], cache["mamba_tail"])
+            )
+            new_cache["mamba_tail"] = tail_new
+        h = self.final_norm(params["final_norm"], h)
+        return self.embed.attend(params["embed"], h), new_cache

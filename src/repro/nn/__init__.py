@@ -1,0 +1,13 @@
+"""Minimal functional layer zoo (no flax): def-driven params with logical
+sharding axes, repair-aware reads, scan-friendly stacking."""
+from . import (  # noqa: F401
+    attention,
+    initializers,
+    layers,
+    mlp,
+    module,
+    moe,
+    rotary,
+    ssm,
+    xlstm,
+)

@@ -1,0 +1,327 @@
+"""Grouped-query attention with RoPE, decode caches, and a chunked
+(flash-style, online-softmax) path for long sequences.
+
+Three execution paths:
+
+  * ``direct``  — materializes (B,H,S,T) scores; used for short seqs/tests.
+  * ``chunked`` — double ``lax.scan`` over query/kv blocks with running
+    (max, denom) — O(S·blk) memory; auto-selected for seq ≥ 8192.  This is
+    the jnp reference of the Pallas flash kernel in repro.kernels.
+  * ``decode``  — single query position against a (possibly seq-sharded)
+    KV cache; softmax collectives over the sharded axis are inserted by XLA.
+
+The KV cache is a *protected approximate-memory resident* (the decode-shape
+cells hold 100s of GB of it): reads go through ``core.repair.use`` in
+register mode and the scrubbed-cache path in memory mode, exactly like
+weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.repair import RepairConfig, use
+from ..distributed.sharding import constrain
+from . import initializers as ini
+from .module import ParamDef
+from .rotary import apply_rope
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class Attention:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rotary_pct: float = 1.0
+    use_rope: bool = True
+    causal: bool = True
+    dtype: jnp.dtype = jnp.bfloat16
+    rcfg: RepairConfig = RepairConfig(mode="off")
+    q_block: int = 512
+    kv_block: int = 1024
+    # Repeat KV heads to full H inside full-sequence attention: standard TP
+    # practice when the model axis exceeds n_kv — the score einsums become
+    # MHA-shaped and shard H-ways instead of capping at n_kv.  Identical
+    # math; costs a G× widening of the K/V *activations* only (never the
+    # cache).  Decode keeps the GQA form + seq-sharded cache instead.
+    repeat_kv_for_tp: bool = True
+
+    @property
+    def groups(self) -> int:
+        assert self.n_heads % self.n_kv == 0, "GQA requires n_kv | n_heads"
+        return self.n_heads // self.n_kv
+
+    # ------------------------------------------------------------------ defs
+    def defs(self):
+        H, K, Dh, D = self.n_heads, self.n_kv, self.head_dim, self.d_model
+        lin = ini.fan_in()
+        d = {
+            "wq": ParamDef((D, H * Dh), self.dtype, lin, ("embed", "heads")),
+            "wk": ParamDef((D, K * Dh), self.dtype, lin, ("embed", "kv")),
+            "wv": ParamDef((D, K * Dh), self.dtype, lin, ("embed", "kv")),
+            "wo": ParamDef((H * Dh, D), self.dtype, lin, ("heads", "embed")),
+        }
+        if self.qkv_bias:
+            d["bq"] = ParamDef((H * Dh,), self.dtype, ini.zeros, ("heads",))
+            d["bk"] = ParamDef((K * Dh,), self.dtype, ini.zeros, ("kv",))
+            d["bv"] = ParamDef((K * Dh,), self.dtype, ini.zeros, ("kv",))
+        return d
+
+    # ------------------------------------------------------------- helpers
+    def _qkv(self, p, x, kv_x=None):
+        """Project to q,k,v.  (B,S,D) -> (B,S,H,Dh)/(B,T,K,Dh)."""
+        kv_x = x if kv_x is None else kv_x
+        B, S, _ = x.shape
+        T = kv_x.shape[1]
+        wq = use(p["wq"], self.rcfg)
+        wk = use(p["wk"], self.rcfg)
+        wv = use(p["wv"], self.rcfg)
+        q = jnp.einsum("bsd,dh->bsh", x, wq, preferred_element_type=jnp.float32)
+        k = jnp.einsum("btd,dh->bth", kv_x, wk, preferred_element_type=jnp.float32)
+        v = jnp.einsum("btd,dh->bth", kv_x, wv, preferred_element_type=jnp.float32)
+        if self.qkv_bias:
+            q = q + use(p["bq"], self.rcfg).astype(q.dtype)
+            k = k + use(p["bk"], self.rcfg).astype(k.dtype)
+            v = v + use(p["bv"], self.rcfg).astype(v.dtype)
+        q = q.astype(self.dtype).reshape(B, S, self.n_heads, self.head_dim)
+        k = k.astype(self.dtype).reshape(B, T, self.n_kv, self.head_dim)
+        v = v.astype(self.dtype).reshape(B, T, self.n_kv, self.head_dim)
+        # head-sharded attention compute (the kv spec degrades to replicated
+        # when n_kv doesn't divide the model axis — GQA small-kv case)
+        act = ("act_batch", "act_seq", "act_heads", None)
+        return constrain(q, act), constrain(k, act), constrain(v, act)
+
+    def _rope(self, q, k, q_pos, k_pos):
+        if not self.use_rope:
+            return q, k
+        q = apply_rope(q, q_pos, theta=self.rope_theta, rotary_pct=self.rotary_pct)
+        k = apply_rope(k, k_pos, theta=self.rope_theta, rotary_pct=self.rotary_pct)
+        return q, k
+
+    def _out(self, p, ctx):
+        B, S = ctx.shape[:2]
+        wo = use(p["wo"], self.rcfg)
+        ctx = ctx.reshape(B, S, self.n_heads * self.head_dim)
+        return jnp.einsum(
+            "bsh,hd->bsd", ctx, wo, preferred_element_type=jnp.float32
+        ).astype(self.dtype)
+
+    # ------------------------------------------------------- full-seq paths
+    def __call__(
+        self,
+        p,
+        x: jax.Array,                      # (B, S, D)
+        positions: Optional[jax.Array] = None,
+        kv_x: Optional[jax.Array] = None,  # cross-attention source
+        impl: str = "auto",
+    ) -> jax.Array:
+        B, S, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        q, k, v = self._qkv(p, x, kv_x)
+        if kv_x is None:
+            q, k = self._rope(q, k, positions, positions)
+        if self.repeat_kv_for_tp and self.groups > 1:
+            k = jnp.repeat(k, self.groups, axis=2)
+            v = jnp.repeat(v, self.groups, axis=2)
+            act = ("act_batch", "act_seq", "act_heads", None)
+            k, v = constrain(k, act), constrain(v, act)
+        causal = self.causal and kv_x is None
+        T = k.shape[1]
+        if impl == "auto":
+            # chunked (flash-style) is the production path: it never
+            # materializes the (S,T) score matrix (3 GiB/device at 4k seen
+            # with direct).  direct remains for short sequences and oracles.
+            impl = "chunked" if max(S, T) >= 2048 else "direct"
+        if impl == "chunked":
+            ctx = _chunked_attention(
+                q, k, v, causal=causal, q_block=self.q_block,
+                kv_block=self.kv_block,
+            )
+        else:
+            ctx = _direct_attention(q, k, v, causal=causal)
+        return self._out(p, ctx)
+
+    # -------------------------------------------------------------- decode
+    def cache_defs(self, batch: int, max_seq: int):
+        """KV cache parameter-like defs (lives in approximate memory)."""
+        K, Dh = self.n_kv, self.head_dim
+        shape = (batch, max_seq, K, Dh)
+        axes = ("batch", "kv_seq", "kv", None)
+        return {
+            "k": ParamDef(shape, self.dtype, ini.zeros, axes),
+            "v": ParamDef(shape, self.dtype, ini.zeros, axes),
+        }
+
+    def decode(
+        self,
+        p,
+        x: jax.Array,        # (B, 1, D) current-token hidden
+        cache,               # {"k","v"}: (B, S_max, K, Dh)
+        pos: jax.Array,      # scalar int32 — current position (uniform batch)
+        *,
+        update_cache: bool = True,
+    ):
+        B = x.shape[0]
+        q, k_new, v_new = self._qkv(p, x)
+        pos_arr = jnp.broadcast_to(pos, (B, 1))
+        q, k_new = self._rope(q, k_new, pos_arr, pos_arr)
+
+        ck = use(cache["k"], self.rcfg)
+        cv = use(cache["v"], self.rcfg)
+        if update_cache:
+            ck = jax.lax.dynamic_update_slice(
+                ck, k_new.astype(ck.dtype), (0, pos.astype(jnp.int32), 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cv, v_new.astype(cv.dtype), (0, pos.astype(jnp.int32), 0, 0)
+            )
+
+        G = self.groups
+        K, Dh = self.n_kv, self.head_dim
+        qg = q.reshape(B, 1, K, G, Dh)
+        scores = jnp.einsum(
+            "bqkgd,btkd->bkgqt", qg, ck, preferred_element_type=jnp.float32
+        ) / math.sqrt(Dh)
+        t = jnp.arange(ck.shape[1])
+        valid = (t <= pos)[None, None, None, None, :]
+        scores = jnp.where(valid, scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum(
+            "bkgqt,btkd->bqkgd", w.astype(cv.dtype), cv,
+            preferred_element_type=jnp.float32,
+        ).astype(self.dtype)
+        ctx = ctx.reshape(B, 1, self.n_heads, Dh)
+        out = self._out(p, ctx)
+        return out, {"k": ck, "v": cv}
+
+    def decode_cross(self, p, x, cache, enc_len: Optional[int] = None):
+        """Cross-attention decode against a precomputed encoder KV cache."""
+        B = x.shape[0]
+        wq = use(p["wq"], self.rcfg)
+        q = jnp.einsum("bsd,dh->bsh", x, wq, preferred_element_type=jnp.float32)
+        if self.qkv_bias:
+            q = q + use(p["bq"], self.rcfg).astype(q.dtype)
+        q = q.astype(self.dtype).reshape(B, 1, self.n_heads, self.head_dim)
+        ck = use(cache["k"], self.rcfg)
+        cv = use(cache["v"], self.rcfg)
+        G, K, Dh = self.groups, self.n_kv, self.head_dim
+        qg = q.reshape(B, 1, K, G, Dh)
+        scores = jnp.einsum(
+            "bqkgd,btkd->bkgqt", qg, ck, preferred_element_type=jnp.float32
+        ) / math.sqrt(Dh)
+        w = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum(
+            "bkgqt,btkd->bqkgd", w.astype(cv.dtype), cv,
+            preferred_element_type=jnp.float32,
+        ).astype(self.dtype)
+        return self._out(p, ctx.reshape(B, 1, self.n_heads, Dh))
+
+
+# ---------------------------------------------------------------------------
+# Attention math.
+# ---------------------------------------------------------------------------
+
+
+# GQA score tensors shard over (batch, kv): a single model axis caps
+# attention-score TP at n_kv ways (DESIGN.md §5; repeat-KV lifts it, §Perf).
+_GQA_ACT = ("act_batch", None, "act_seq", None)
+
+
+def _gqa_scores(q, k):
+    """(B,S,H,Dh) x (B,T,K,Dh) -> (B,K,G,S,T) f32 scaled scores."""
+    B, S, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = constrain(
+        q.reshape(B, S, K, G, Dh), ("act_batch", "act_seq", "act_heads", None, None)
+    )
+    s = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(Dh)
+    return constrain(s, ("act_batch", "act_heads", None, "act_seq", None))
+
+
+def _direct_attention(q, k, v, *, causal: bool) -> jax.Array:
+    B, S, H, Dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    scores = _gqa_scores(q, k)                       # (B,K,G,S,T) f32
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum(
+        "bkgst,btkd->bskgd", w.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return ctx.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def _chunked_attention(
+    q, k, v, *, causal: bool, q_block: int, kv_block: int
+) -> jax.Array:
+    """Online-softmax attention, O(blk²) live memory.  jnp reference of the
+    Pallas flash kernel (kernels/repair_attention.py shares this oracle)."""
+    B, S, H, Dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qb = min(q_block, S)
+    kb = min(kv_block, T)
+    assert S % qb == 0 and T % kb == 0, (S, qb, T, kb)
+    nq, nk = S // qb, T // kb
+
+    qg = q.reshape(B, nq, qb, K, G, Dh).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, B, K, G, qb, Dh)
+    ks = k.reshape(B, nk, kb, K, Dh).transpose(1, 0, 3, 2, 4)  # (nk,B,K,kb,Dh)
+    vs = v.reshape(B, nk, kb, K, Dh).transpose(1, 0, 3, 2, 4)
+
+    scale = 1.0 / math.sqrt(Dh)
+
+    def q_step(_, qi_blk):
+        qi, q_blk = qi_blk
+
+        def kv_step(carry, kj_blk):
+            acc, m, l = carry
+            kj, k_blk, v_blk = kj_blk
+            s = jnp.einsum(
+                "bkgqd,bktd->bkgqt", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            if causal:
+                qpos = qi * qb + jnp.arange(qb)
+                kpos = kj * kb + jnp.arange(kb)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bkgqt,bktd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * alpha[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, K, G, qb, Dh), jnp.float32)
+        m0 = jnp.full((B, K, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qb), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, (qi, out)
+
+    _, (_, outs) = jax.lax.scan(q_step, None, (jnp.arange(nq), qg))
+    # outs: (nq, B, K, G, qb, Dh) -> (B, S, H, Dh)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, Dh)
+    return out.astype(q.dtype)

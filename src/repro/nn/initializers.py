@@ -1,0 +1,45 @@
+"""Parameter initializers (jax.nn.initializers-compatible signatures)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def normal(stddev: float = 0.02):
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+    return init
+
+
+def zeros(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def fan_in(scale: float = 1.0):
+    """LeCun-style 1/sqrt(fan_in); fan-in = second-to-last dim for matrices,
+    last dim for embeddings used as (vocab, d)."""
+
+    def init(key, shape, dtype):
+        fi = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = scale / math.sqrt(max(fi, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+    return init
+
+
+def scaled_out(n_layers: int, scale: float = 1.0):
+    """GPT-2-style output-projection scaling: 1/sqrt(2*L) on residual writes."""
+
+    def init(key, shape, dtype):
+        fi = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = scale / math.sqrt(max(fi, 1)) / math.sqrt(2.0 * max(n_layers, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+    return init

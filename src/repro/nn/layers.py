@@ -1,0 +1,124 @@
+"""Basic layers: Linear, Embedding, RMSNorm, LayerNorm.
+
+Every parameter *read* goes through ``core.repair.use`` — in register mode
+that is the paper's use-site repair (detect+select on each consumption); in
+memory/off modes it is the identity, so the production HLO carries zero
+overhead beyond the chosen mode.  Matmuls accumulate in f32
+(``preferred_element_type``) regardless of the bf16 storage dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.repair import RepairConfig, use
+from . import initializers as ini
+from .module import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear:
+    """y = x @ W (+ b).  Logical axes supplied by the caller."""
+
+    d_in: int
+    d_out: int
+    axes: Tuple[Optional[str], Optional[str]]
+    bias: bool = False
+    dtype: jnp.dtype = jnp.bfloat16
+    init: object = None
+    rcfg: RepairConfig = RepairConfig(mode="off")
+
+    def defs(self):
+        init = self.init or ini.fan_in()
+        d = {
+            "w": ParamDef((self.d_in, self.d_out), self.dtype, init, self.axes)
+        }
+        if self.bias:
+            d["b"] = ParamDef((self.d_out,), self.dtype, ini.zeros, (self.axes[1],))
+        return d
+
+    def __call__(self, p, x):
+        w = use(p["w"], self.rcfg)
+        y = jnp.einsum(
+            "...i,io->...o", x, w, preferred_element_type=jnp.float32
+        ).astype(x.dtype)
+        if self.bias:
+            y = y + use(p["b"], self.rcfg).astype(y.dtype)
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding:
+    """Token embedding (vocab, d).  Also provides the tied readout."""
+
+    vocab: int
+    d_model: int
+    dtype: jnp.dtype = jnp.bfloat16
+    rcfg: RepairConfig = RepairConfig(mode="off")
+
+    def defs(self):
+        return {
+            "table": ParamDef(
+                (self.vocab, self.d_model),
+                self.dtype,
+                ini.normal(0.02),
+                ("vocab", "embed"),
+            )
+        }
+
+    def __call__(self, p, tokens):
+        table = use(p["table"], self.rcfg)
+        return jnp.take(table, tokens, axis=0)
+
+    def attend(self, p, x):
+        """Tied readout: logits = x @ table.T  (f32 accumulation)."""
+        table = use(p["table"], self.rcfg)
+        return jnp.einsum(
+            "...d,vd->...v", x, table, preferred_element_type=jnp.float32
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm:
+    d: int
+    eps: float = 1e-6
+    dtype: jnp.dtype = jnp.bfloat16
+    rcfg: RepairConfig = RepairConfig(mode="off")
+
+    def defs(self):
+        return {"scale": ParamDef((self.d,), self.dtype, ini.ones, ("embed",))}
+
+    def __call__(self, p, x):
+        scale = use(p["scale"], self.rcfg)
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + self.eps)
+        return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm:
+    d: int
+    eps: float = 1e-5
+    dtype: jnp.dtype = jnp.bfloat16
+    rcfg: RepairConfig = RepairConfig(mode="off")
+
+    def defs(self):
+        return {
+            "scale": ParamDef((self.d,), self.dtype, ini.ones, ("embed",)),
+            "bias": ParamDef((self.d,), self.dtype, ini.zeros, ("embed",)),
+        }
+
+    def __call__(self, p, x):
+        scale = use(p["scale"], self.rcfg)
+        bias = use(p["bias"], self.rcfg)
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + self.eps)
+        return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(
+            x.dtype
+        )

@@ -1,0 +1,129 @@
+"""Minimal functional module system (no flax dependency).
+
+Every layer declares its parameters once, as a nested dict of ``ParamDef``;
+generic machinery materializes from the same defs:
+
+  * real parameters           (``init_params`` — deterministic per-path RNG)
+  * ShapeDtypeStructs         (``abstract_params`` — dry-run lowering with
+                               zero allocation, required for the 123 B arch)
+  * logical sharding specs    (``logical_axes`` — consumed by
+                               repro.distributed.sharding to build
+                               PartitionSpecs from the rules table)
+
+Layers are stateless objects: ``defs()`` describes params, ``__call__``
+consumes the materialized dict.  Repeated layers are stacked with
+``stack_defs`` and executed with ``jax.lax.scan`` so HLO size stays flat in
+depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declaration of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    dtype: Any
+    init: Initializer
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == ndim
+
+    def __post_init__(self):
+        if len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank"
+            )
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _path_key(root_key: jax.Array, path: str) -> jax.Array:
+    """Deterministic per-parameter key: fold a stable path hash into the root
+    key.  Keeps init independent of traversal order and of sibling params."""
+    digest = hashlib.sha256(path.encode()).digest()
+    salt = int.from_bytes(digest[:4], "little")
+    return jax.random.fold_in(root_key, salt)
+
+
+def _traverse(defs: Any, fn: Callable[[str, ParamDef], Any], prefix: str = ""):
+    if _is_def(defs):
+        return fn(prefix, defs)
+    if isinstance(defs, dict):
+        return {
+            k: _traverse(v, fn, f"{prefix}/{k}" if prefix else str(k))
+            for k, v in defs.items()
+        }
+    if defs is None:
+        return None
+    raise TypeError(f"param defs must be nested dicts of ParamDef, got {type(defs)}")
+
+
+def init_params(defs: Any, key: jax.Array) -> Any:
+    """Materialize real parameters from defs."""
+    return _traverse(
+        defs, lambda path, d: d.init(_path_key(key, path), d.shape, d.dtype)
+    )
+
+
+def abstract_params(defs: Any) -> Any:
+    """ShapeDtypeStruct tree — lowering-only stand-in (no allocation)."""
+    return _traverse(
+        defs, lambda path, d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype))
+    )
+
+
+def logical_axes(defs: Any) -> Any:
+    """Tree of logical-axis tuples, same structure as the params."""
+    return _traverse(defs, lambda path, d: d.axes)
+
+
+def stack_defs(defs: Any, n: int, axis_name: str = "layers") -> Any:
+    """Prepend a stacking dimension (for lax.scan over layers).
+
+    Init of a stacked def vmaps the underlying init over ``n`` folded keys,
+    so a stacked layer initializes identically to ``n`` independent layers.
+    """
+
+    def stack_one(path: str, d: ParamDef) -> ParamDef:
+        def stacked_init(key, shape, dtype):
+            keys = jax.random.split(key, n)
+            return jax.vmap(lambda k: d.init(k, d.shape, d.dtype))(keys)
+
+        return ParamDef(
+            shape=(n, *d.shape),
+            dtype=d.dtype,
+            init=stacked_init,
+            axes=(axis_name, *d.axes),
+        )
+
+    return _traverse(defs, stack_one)
+
+
+def param_count(defs: Any) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(
+        _traverse(defs, lambda p, d: int(jnp.prod(jnp.array(d.shape))))
+    ):
+        total += leaf
+    return total
+
+
+def param_bytes(defs: Any) -> int:
+    total = 0
+
+    def acc(path, d):
+        return int(jnp.prod(jnp.array(d.shape))) * jnp.dtype(d.dtype).itemsize
+
+    for leaf in jax.tree.leaves(_traverse(defs, acc)):
+        total += leaf
+    return total

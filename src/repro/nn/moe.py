@@ -1,0 +1,146 @@
+"""Mixture-of-Experts with top-k token-choice routing.
+
+Dispatch is **scatter-based** (no (T,E,C) one-hot materialization): tokens are
+grouped along the batch dim (G groups, sharded over the data axis), each
+group scatter-adds its tokens into a per-expert capacity buffer
+(G, E, C, D) whose expert dim is sharded over the model axis; expert FFNs run
+as stacked einsums; results gather back with combine weights.  Capacity
+overflow drops tokens (their combine weight is masked), standard GShard
+semantics with capacity_factor slack.
+
+Approximate-memory integration (DESIGN.md §4): expert weights are the big,
+cold, read-mostly table — a prime approximate-memory resident, protected via
+``use``.  The **router is pinned to the exact region** (regions.DEFAULT_RULES
+matches the "router" path) and router logits are additionally sanitized
+before top-k: a NaN entering top-k would corrupt the *routing table* — an
+integer-side failure repair cannot express, the paper's "invalid pointer"
+analogue (§3.1 limitation) — so we keep it structurally impossible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.repair import RepairConfig, use
+from ..distributed.sharding import constrain
+from . import initializers as ini
+from .module import ParamDef
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MoE:
+    d_model: int
+    d_ff: int                 # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    dtype: jnp.dtype = jnp.bfloat16
+    rcfg: RepairConfig = RepairConfig(mode="off")
+
+    def defs(self):
+        D, F, E = self.d_model, self.d_ff, self.n_experts
+        lin = ini.fan_in()
+        return {
+            "router": {
+                # exact-region by path rule; f32 for routing stability
+                "w": ParamDef((D, E), jnp.float32, ini.normal(0.02), ("embed", "expert")),
+            },
+            "w_gate": ParamDef((E, D, F), self.dtype, lin, ("expert", "embed", "mlp")),
+            "w_up": ParamDef((E, D, F), self.dtype, lin, ("expert", "embed", "mlp")),
+            "w_down": ParamDef((E, F, D), self.dtype, lin, ("expert", "mlp", "embed")),
+        }
+
+    def capacity(self, tokens_per_group: int) -> int:
+        return max(
+            self.top_k,
+            int(
+                math.ceil(
+                    self.top_k * tokens_per_group / self.n_experts
+                    * self.capacity_factor
+                )
+            ),
+        )
+
+    def __call__(self, p, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """x: (B, S, D) -> (out (B,S,D), aux_loss scalar).
+
+        Groups = batch dim (sharded over data); S tokens per group.
+        """
+        B, S, D = x.shape
+        E, k = self.n_experts, self.top_k
+        C = self.capacity(S)
+
+        # ---- routing (exact region, f32, sanitized) ----
+        logits = jnp.einsum(
+            "gsd,de->gse", x.astype(jnp.float32), p["router"]["w"]
+        )
+        # NaN in logits would poison top_k ordering: neutralize to -inf.
+        logits = jnp.where(jnp.isnan(logits), NEG_INF, logits)
+        gate_vals, expert_idx = jax.lax.top_k(logits, k)     # (G,S,k)
+        gates = jax.nn.softmax(gate_vals, axis=-1)            # (G,S,k) f32
+
+        # ---- load-balance aux loss (Switch-style) ----
+        probs = jax.nn.softmax(logits, axis=-1)               # (G,S,E)
+        me = jnp.mean(probs, axis=(0, 1))                     # (E,)
+        onehot_top1 = jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32)
+        ce = jnp.mean(onehot_top1, axis=(0, 1))
+        aux = jnp.sum(me * ce) * E
+
+        # ---- capacity positions: exclusive cumsum over (S*k) slots ----
+        flat_idx = expert_idx.reshape(B, S * k)               # (G, S*k)
+        slot_onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)
+        pos = (
+            jnp.cumsum(slot_onehot, axis=1) - slot_onehot
+        )  # (G, S*k, E) exclusive count of same-expert slots before this one
+        pos = jnp.take_along_axis(
+            pos, flat_idx[..., None], axis=-1
+        )[..., 0]                                             # (G, S*k)
+        keep = pos < C                                        # (G, S*k)
+
+        # ---- dispatch: scatter tokens into (G, E*C, D) ----
+        dest = jnp.where(keep, flat_idx * C + pos, E * C)     # E*C = drop slot
+        x_rep = jnp.repeat(
+            x, k, axis=1
+        ).astype(self.dtype)                                  # (G, S*k, D) bf16
+
+        def dispatch_one(dest_g, xg):
+            buf = jnp.zeros((E * C, D), self.dtype)
+            return buf.at[dest_g].add(xg, mode="drop")
+
+        buf = jax.vmap(dispatch_one)(dest, x_rep)             # (G, E*C, D)
+        # expert-sharded dispatch buffer: without this the scatter output is
+        # replicated and every expert shard all-gathers the full (G,E·C,D)
+        # buffer (§Perf iteration: 3×2.4e11 wire bytes on qwen3-moe train)
+        buf = constrain(
+            buf.reshape(B, E, C, D), ("act_batch", "act_expert", None, None)
+        )
+
+        # ---- expert FFN (SwiGLU), stacked einsum over E ----
+        wg = use(p["w_gate"], self.rcfg)
+        wu = use(p["w_up"], self.rcfg)
+        wd = use(p["w_down"], self.rcfg)
+        g = jnp.einsum("gecd,edf->gecf", buf, wg, preferred_element_type=jnp.float32)
+        u = jnp.einsum("gecd,edf->gecf", buf, wu, preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(self.dtype)
+        y = jnp.einsum("gecf,efd->gecd", h, wd, preferred_element_type=jnp.float32)
+        y = constrain(
+            y.astype(self.dtype), ("act_batch", "act_expert", None, None)
+        ).reshape(B, E * C, D)
+
+        # ---- combine: gather expert outputs back, weighted (bf16 wire) ----
+        safe_dest = jnp.minimum(dest, E * C - 1)
+
+        def combine_one(y_g, dest_g):
+            return jnp.take(y_g, dest_g, axis=0)              # (S*k, D)
+
+        gathered = jax.vmap(combine_one)(y, safe_dest)        # (G, S*k, D)
+        w = (gates.reshape(B, S * k) * keep.astype(jnp.float32))
+        out = gathered * w[..., None].astype(self.dtype)
+        out = out.reshape(B, S, k, D).sum(axis=2).astype(self.dtype)
+        return out, aux

@@ -1,0 +1,41 @@
+"""Rotary position embeddings (RoPE), with partial-rotary support.
+
+``rotary_pct < 1.0`` rotates only the leading fraction of each head dim
+(stablelm-2 style); the remainder passes through unrotated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _angles(positions: jax.Array, rot_dim: int, theta: float) -> jax.Array:
+    """(..., rot_dim/2) angle table for integer positions."""
+    inv_freq = 1.0 / (
+        theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim)
+    )
+    return positions.astype(jnp.float32)[..., None] * inv_freq  # (..., rot/2)
+
+
+def apply_rope(
+    x: jax.Array,           # (..., seq, heads, head_dim)
+    positions: jax.Array,   # (..., seq)
+    *,
+    theta: float = 10000.0,
+    rotary_pct: float = 1.0,
+) -> jax.Array:
+    head_dim = x.shape[-1]
+    rot_dim = int(head_dim * rotary_pct) // 2 * 2
+    if rot_dim == 0:
+        return x
+    ang = _angles(positions, rot_dim, theta)           # (..., seq, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., seq, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+
+    xr = x[..., :rot_dim].astype(jnp.float32)
+    x1, x2 = xr[..., : rot_dim // 2], xr[..., rot_dim // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = out.astype(x.dtype)
+    if rot_dim == head_dim:
+        return out
+    return jnp.concatenate([out, x[..., rot_dim:]], axis=-1)

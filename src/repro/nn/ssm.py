@@ -1,0 +1,250 @@
+"""Mamba2 block — chunked SSD (state-space dual) formulation.
+
+TPU adaptation note (DESIGN.md §2): the selective-scan CUDA kernel of the
+original Mamba is replaced by the **chunked matmul form** of Mamba2/SSD —
+within-chunk terms are plain einsums (MXU-friendly), cross-chunk state is a
+short ``lax.scan`` over chunk summaries.  This is the TPU-native way to run
+SSMs near the compute roofline instead of emulating a warp-level scan.
+
+Recurrence (per head h, scalar decay):
+    h_t = a_t · h_{t-1} + Δ_t · B_t ⊗ x_t          a_t = exp(Δ_t · A_h) ∈ (0,1)
+    y_t = C_t · h_t + D_h · x_t
+
+Approximate-memory note: the carried SSM state is long-lived in decode — a
+NaN reaching it poisons *all future tokens* (the temporal analogue of the
+paper's Fig. 1 row-poisoning), so ``decode_step`` scrubs the carried state
+through ``core.repair.use`` every step in register mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.repair import RepairConfig, use
+from . import initializers as ini
+from .module import ParamDef
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2:
+    d_model: int
+    d_state: int = 64            # N
+    head_dim: int = 64           # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128             # SSD chunk length Q
+    dtype: jnp.dtype = jnp.bfloat16
+    rcfg: RepairConfig = RepairConfig(mode="off")
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+    # ------------------------------------------------------------------ defs
+    def defs(self):
+        D, Din, N, H = self.d_model, self.d_inner, self.d_state, self.n_heads
+        lin = ini.fan_in()
+        d_in_proj = 2 * Din + 2 * N + H   # [z, x, B, C, dt]
+        return {
+            "in_proj": ParamDef((D, d_in_proj), self.dtype, lin, ("embed", "mlp")),
+            "conv_w": ParamDef(
+                (self.conv_width, self.conv_channels), self.dtype,
+                ini.normal(0.1), (None, "mlp"),
+            ),
+            "conv_b": ParamDef((self.conv_channels,), self.dtype, ini.zeros, ("mlp",)),
+            "A_log": ParamDef((H,), jnp.float32, ini.ones, ("heads",)),
+            "D": ParamDef((H,), jnp.float32, ini.ones, ("heads",)),
+            "dt_bias": ParamDef((H,), jnp.float32, ini.zeros, ("heads",)),
+            "norm_scale": ParamDef((Din,), self.dtype, ini.ones, ("mlp",)),
+            "out_proj": ParamDef((Din, D), self.dtype, lin, ("mlp", "embed")),
+        }
+
+    # ------------------------------------------------------------- pieces
+    def _split_proj(self, p, x):
+        Din, N, H = self.d_inner, self.d_state, self.n_heads
+        proj = jnp.einsum(
+            "bsd,de->bse", x, use(p["in_proj"], self.rcfg),
+            preferred_element_type=jnp.float32,
+        ).astype(self.dtype)
+        z = proj[..., :Din]
+        xBC = proj[..., Din : Din + Din + 2 * N]
+        dt_raw = proj[..., Din + Din + 2 * N :]                 # (B,S,H)
+        return z, xBC, dt_raw
+
+    def _conv(self, p, xBC):
+        """Causal depthwise conv over (B,S,C) with width W."""
+        W = self.conv_width
+        w = use(p["conv_w"], self.rcfg).astype(jnp.float32)      # (W,C)
+        b = use(p["conv_b"], self.rcfg).astype(jnp.float32)
+        xf = xBC.astype(jnp.float32)
+        pad = jnp.pad(xf, ((0, 0), (W - 1, 0), (0, 0)))
+        out = sum(
+            pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :]
+            for i in range(W)
+        )
+        return jax.nn.silu(out + b).astype(self.dtype)
+
+    def _gated_norm(self, p, y, z):
+        scale = use(p["norm_scale"], self.rcfg).astype(jnp.float32)
+        yf = y.astype(jnp.float32)
+        var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+        yn = yf * jax.lax.rsqrt(var + 1e-6) * scale
+        return (yn * jax.nn.silu(z.astype(jnp.float32))).astype(self.dtype)
+
+    # ------------------------------------------------------- full-sequence
+    def __call__(self, p, x: jax.Array) -> jax.Array:
+        B, S, _ = x.shape
+        N, H, P, Q = self.d_state, self.n_heads, self.head_dim, self.chunk
+        z, xBC, dt_raw = self._split_proj(p, x)
+        xBC = self._conv(p, xBC)
+        xs = xBC[..., : self.d_inner].reshape(B, S, H, P)
+        Bm = xBC[..., self.d_inner : self.d_inner + N]           # (B,S,N)
+        Cm = xBC[..., self.d_inner + N :]                        # (B,S,N)
+
+        A = -jnp.exp(use(p["A_log"], self.rcfg))                 # (H,) < 0
+        dt = jax.nn.softplus(
+            dt_raw.astype(jnp.float32) + use(p["dt_bias"], self.rcfg)
+        )                                                        # (B,S,H)
+        y = _chunked_ssd(
+            xs.astype(jnp.float32),
+            Bm.astype(jnp.float32),
+            Cm.astype(jnp.float32),
+            dt,
+            A,
+            chunk=Q,
+        )                                                        # (B,S,H,P) f32
+        y = y + use(p["D"], self.rcfg)[None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(B, S, self.d_inner).astype(self.dtype)
+        y = self._gated_norm(p, y, z)
+        return jnp.einsum(
+            "bse,ed->bsd", y, use(p["out_proj"], self.rcfg),
+            preferred_element_type=jnp.float32,
+        ).astype(self.dtype)
+
+    # -------------------------------------------------------------- decode
+    def cache_defs(self, batch: int):
+        N, H, P, W, C = (
+            self.d_state, self.n_heads, self.head_dim,
+            self.conv_width, self.conv_channels,
+        )
+        return {
+            "conv": ParamDef((batch, W - 1, C), self.dtype, ini.zeros,
+                             ("batch", None, "mlp")),
+            "ssm": ParamDef((batch, H, N, P), jnp.float32, ini.zeros,
+                            ("batch", "heads", None, None)),
+        }
+
+    def decode_step(self, p, x, cache):
+        """x: (B,1,D) -> (y (B,1,D), new cache).  O(1) in context length."""
+        B = x.shape[0]
+        N, H, P, W = self.d_state, self.n_heads, self.head_dim, self.conv_width
+        z, xBC, dt_raw = self._split_proj(p, x)
+
+        conv_state = use(cache["conv"], self.rcfg)               # (B,W-1,C)
+        w = use(p["conv_w"], self.rcfg).astype(jnp.float32)
+        b = use(p["conv_b"], self.rcfg).astype(jnp.float32)
+        window = jnp.concatenate(
+            [conv_state.astype(jnp.float32), xBC.astype(jnp.float32)], axis=1
+        )                                                        # (B,W,C)
+        conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w) + b)
+        new_conv = window[:, 1:, :].astype(self.dtype)
+
+        xs = conv_out[:, : self.d_inner].reshape(B, H, P)
+        Bm = conv_out[:, self.d_inner : self.d_inner + N]        # (B,N)
+        Cm = conv_out[:, self.d_inner + N :]
+
+        A = -jnp.exp(use(p["A_log"], self.rcfg))
+        dt = jax.nn.softplus(
+            dt_raw[:, 0].astype(jnp.float32) + use(p["dt_bias"], self.rcfg)
+        )                                                        # (B,H)
+        a = jnp.exp(dt * A)                                      # (B,H)
+        h = use(cache["ssm"], self.rcfg)                         # (B,H,N,P)
+        h = a[..., None, None] * h + jnp.einsum(
+            "bn,bh,bhp->bhnp", Bm, dt, xs
+        )
+        y = jnp.einsum("bn,bhnp->bhp", Cm, h)
+        y = y + use(p["D"], self.rcfg)[None, :, None] * xs
+        y = y.reshape(B, 1, self.d_inner).astype(self.dtype)
+        y = self._gated_norm(p, y, z)
+        out = jnp.einsum(
+            "bse,ed->bsd", y, use(p["out_proj"], self.rcfg),
+            preferred_element_type=jnp.float32,
+        ).astype(self.dtype)
+        return out, {"conv": new_conv, "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD core (shared with xLSTM's mLSTM, which is the same recurrence
+# plus a normalizer).
+# ---------------------------------------------------------------------------
+
+
+def _chunked_ssd(x, Bm, Cm, dt, A, *, chunk: int) -> jax.Array:
+    """Chunked scan for  h_t = a_t h_{t-1} + (dt_t B_t) ⊗ x_t,  y_t = C_t·h_t.
+
+    x: (B,S,H,P) f32; Bm/Cm: (B,S,N); dt: (B,S,H); A: (H,).
+    Returns y (B,S,H,P) f32.
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xs = x.reshape(B, nc, Q, H, P)
+    Bs = Bm.reshape(B, nc, Q, N)
+    Cs = Cm.reshape(B, nc, Q, N)
+    dts = dt.reshape(B, nc, Q, H)
+
+    log_a = dts * A[None, None, None, :]                 # (B,nc,Q,H) ≤ 0
+    La = jnp.cumsum(log_a, axis=2)                       # inclusive cumsum
+    u = xs * dts[..., None]                              # Δ_t x_t
+
+    # ---- intra-chunk: M_{iq,jk} = (C_i·B_j) exp(La_i - La_j), j ≤ i ----
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cs, Bs)           # (B,nc,Q,Q)
+    dLa = La[:, :, :, None, :] - La[:, :, None, :, :]    # (B,nc,q,k,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(dLa), 0.0)
+    M = CB[..., None] * decay                            # (B,nc,q,k,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, u)
+
+    # ---- chunk summaries ----
+    La_end = La[:, :, -1, :]                             # (B,nc,H)
+    decay_to_end = jnp.exp(La_end[:, :, None, :] - La)   # (B,nc,Q,H)
+    S_c = jnp.einsum("bckn,bckh,bckhp->bchnp", Bs, decay_to_end, u)
+    a_chunk = jnp.exp(La_end)                            # (B,nc,H)
+
+    # ---- cross-chunk state scan ----
+    def step(h_prev, inp):
+        a_c, s_c = inp                                   # (B,H), (B,H,N,P)
+        h = a_c[..., None, None] * h_prev + s_c
+        return h, h_prev                                 # emit state *before* chunk
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        step,
+        h0,
+        (a_chunk.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution: exp(La_i) decays h_start to step i ----
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchnp->bcqhp", Cs, jnp.exp(La), h_prevs
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y

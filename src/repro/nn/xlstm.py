@@ -1,0 +1,415 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, sequential scan).
+
+mLSTM recurrence (per head, d_k×d_v matrix memory — arXiv:2405.04517 §2.3):
+    C_t = f_t C_{t-1} + i_t k_t v_tᵀ          n_t = f_t n_{t-1} + i_t k_t
+    y_t = (q_tᵀ C_t) / max(|q_tᵀ n_t|, 1)
+with exponential gating stabilized by the running max m_t:
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    i'_t = exp(log i_t − m_t),  f'_t = exp(log f_t + m_{t-1} − m_t)
+
+The chunked form mirrors Mamba2's SSD (nn/ssm.py): within-chunk terms are
+einsums over a decay matrix, cross-chunk state is a short scan.  We use the
+log-sigmoid forget parametrization (always ≤ 0, unconditionally stable) and
+per-chunk max-stabilization of the input gates — the variant recommended for
+inference-stable xLSTM.
+
+sLSTM is inherently sequential (recurrent weights feed h_{t-1} back through a
+nonlinearity — no parallel form exists); it runs as ``lax.scan`` over time
+with per-head block-diagonal recurrent weights.  Its FLOPs are O(S·d²_head·H)
+— negligible next to mLSTM blocks at our ratios (1 sLSTM per 8 blocks).
+
+Approximate-memory note: the mLSTM matrix memory C is the arch's long-lived
+decode state (the KV-cache analogue) — protected and scrubbed like the SSM
+state in nn/ssm.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core.repair import RepairConfig, use
+from ..distributed.sharding import constrain
+from . import initializers as ini
+from .module import ParamDef
+
+# Activation constraint sites (§Perf iteration 1, xlstm-1.3b train_4k):
+# without them XLA's propagation loses the batch sharding through the
+# reshape/moveaxis churn of the chunked forms — measured 16× replicated
+# compute and full-batch all-gathers inside every mLSTM block.
+_BSE = ("act_batch", "act_seq", "act_heads")          # (B, S, d_inner-ish)
+_BSHP = ("act_batch", "act_seq", None, "act_heads")   # (B, S, H, P): shard P
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLSTM:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0
+    conv_width: int = 4
+    chunk: int = 128
+    dtype: jnp.dtype = jnp.bfloat16
+    rcfg: RepairConfig = RepairConfig(mode="off")
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_inner % self.n_heads == 0
+        return self.d_inner // self.n_heads
+
+    def defs(self):
+        D, Din, H = self.d_model, self.d_inner, self.n_heads
+        lin = ini.fan_in()
+        return {
+            "w_up": ParamDef((D, 2 * Din), self.dtype, lin, ("embed", "mlp")),
+            "conv_w": ParamDef((self.conv_width, Din), self.dtype,
+                               ini.normal(0.1), (None, "mlp")),
+            "conv_b": ParamDef((Din,), self.dtype, ini.zeros, ("mlp",)),
+            "w_q": ParamDef((Din, Din), self.dtype, lin, ("mlp", "heads")),
+            "w_k": ParamDef((Din, Din), self.dtype, lin, ("mlp", "heads")),
+            "w_v": ParamDef((Din, Din), self.dtype, lin, ("mlp", "heads")),
+            "w_if": ParamDef((Din, 2 * H), jnp.float32, ini.normal(0.02),
+                             ("mlp", "heads")),
+            "b_if": ParamDef((2 * H,), jnp.float32, ini.zeros, ("heads",)),
+            "norm_scale": ParamDef((Din,), self.dtype, ini.ones, ("mlp",)),
+            "w_down": ParamDef((Din, D), self.dtype, lin, ("mlp", "embed")),
+        }
+
+    def _conv(self, p, x):
+        W = self.conv_width
+        w = use(p["conv_w"], self.rcfg).astype(jnp.float32)
+        b = use(p["conv_b"], self.rcfg).astype(jnp.float32)
+        xf = x.astype(jnp.float32)
+        pad = jnp.pad(xf, ((0, 0), (W - 1, 0), (0, 0)))
+        out = sum(
+            pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W)
+        )
+        return jax.nn.silu(out + b).astype(self.dtype)
+
+    def _qkvif(self, p, xc, x_inner):
+        B, S, _ = xc.shape
+        H, P = self.n_heads, self.head_dim
+        # bf16 partial sums for q/k/v: these projections are row-parallel
+        # (contraction dim model-sharded), so their per-shard partials are
+        # ALL-REDUCED — the wire-dominant collective of the xlstm train cell
+        # (§Perf iteration 3).  An f32 preferred type put f32 on the wire
+        # (the cast can't be hoisted above the collective); per-shard bf16
+        # partials halve it.  Each shard's 256-long contraction still
+        # accumulates in f32 inside the MXU.
+        q = jnp.einsum("bse,eh->bsh", xc, use(p["w_q"], self.rcfg),
+                       preferred_element_type=self.dtype)
+        k = jnp.einsum("bse,eh->bsh", xc, use(p["w_k"], self.rcfg),
+                       preferred_element_type=self.dtype)
+        v = jnp.einsum("bse,eh->bsh", x_inner, use(p["w_v"], self.rcfg),
+                       preferred_element_type=self.dtype)
+        gif = jnp.einsum("bse,eh->bsh", xc.astype(jnp.float32),
+                         use(p["w_if"], self.rcfg)) + use(p["b_if"], self.rcfg)
+        q = (q.reshape(B, S, H, P) / (P ** 0.5)).astype(self.dtype)
+        k = k.reshape(B, S, H, P)
+        v = v.reshape(B, S, H, P)
+        log_i = gif[..., :H]                              # input gate, pre-exp
+        log_f = jax.nn.log_sigmoid(gif[..., H:])          # forget gate ≤ 0
+        return q, k, v, log_i, log_f
+
+    def __call__(self, p, x: jax.Array) -> jax.Array:
+        B, S, D = x.shape
+        up = jnp.einsum("bsd,de->bse", x, use(p["w_up"], self.rcfg),
+                        preferred_element_type=jnp.float32).astype(self.dtype)
+        up = constrain(up, _BSE)
+        x_inner, z = up[..., : self.d_inner], up[..., self.d_inner :]
+        xc = self._conv(p, x_inner)
+        q, k, v, log_i, log_f = self._qkvif(p, xc, x_inner)
+        q, k, v = (constrain(t, _BSHP) for t in (q, k, v))
+        y = _chunked_mlstm(q, k, v, log_i, log_f, chunk=self.chunk)
+        y = constrain(y, _BSHP)                           # (B,S,H,P) f32
+        y = y.reshape(B, S, self.d_inner)
+        scale = use(p["norm_scale"], self.rcfg).astype(jnp.float32)
+        var = jnp.mean(y * y, axis=-1, keepdims=True)
+        y = y * jax.lax.rsqrt(var + 1e-6) * scale
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(self.dtype)
+        return jnp.einsum("bse,ed->bsd", y, use(p["w_down"], self.rcfg),
+                          preferred_element_type=jnp.float32).astype(self.dtype)
+
+    # -------------------------------------------------------------- decode
+    def cache_defs(self, batch: int):
+        H, P, W = self.n_heads, self.head_dim, self.conv_width
+        return {
+            "conv": ParamDef((batch, W - 1, self.d_inner), self.dtype,
+                             ini.zeros, ("batch", None, "mlp")),
+            "C": ParamDef((batch, H, P, P), jnp.float32, ini.zeros,
+                          ("batch", "heads", None, None)),
+            "n": ParamDef((batch, H, P), jnp.float32, ini.zeros,
+                          ("batch", "heads", None)),
+            "m": ParamDef((batch, H), jnp.float32, ini.zeros,
+                          ("batch", "heads")),
+        }
+
+    def decode_step(self, p, x, cache):
+        B = x.shape[0]
+        H, P = self.n_heads, self.head_dim
+        up = jnp.einsum("bsd,de->bse", x, use(p["w_up"], self.rcfg),
+                        preferred_element_type=jnp.float32).astype(self.dtype)
+        x_inner, z = up[..., : self.d_inner], up[..., self.d_inner :]
+
+        conv_state = use(cache["conv"], self.rcfg)
+        w = use(p["conv_w"], self.rcfg).astype(jnp.float32)
+        b = use(p["conv_b"], self.rcfg).astype(jnp.float32)
+        window = jnp.concatenate(
+            [conv_state.astype(jnp.float32), x_inner.astype(jnp.float32)], axis=1
+        )
+        xc = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w) + b)[:, None, :]
+        xc = xc.astype(self.dtype)
+        new_conv = window[:, 1:, :].astype(self.dtype)
+
+        q, k, v, log_i, log_f = self._qkvif(p, xc, x_inner)
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]               # (B,H,P)
+        log_i, log_f = log_i[:, 0], log_f[:, 0]           # (B,H)
+
+        C = use(cache["C"], self.rcfg)
+        n = use(cache["n"], self.rcfg)
+        m = use(cache["m"], self.rcfg)
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_s = jnp.exp(log_i - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        C = f_s[..., None, None] * C + i_s[..., None, None] * (
+            k[..., :, None] * v[..., None, :]
+        )
+        n = f_s[..., None] * n + i_s[..., None] * k
+        num = jnp.einsum("bhp,bhpq->bhq", q, C)
+        # stabilized normalizer: true den = q·n~·exp(m); clamp |den|≥1 becomes
+        # max(|q·n~|, exp(−m)) after factoring exp(m) out of num/den.
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhp,bhp->bh", q, n)), jnp.exp(-m_new)
+        )
+        y = (num / den[..., None]).reshape(B, 1, self.d_inner)
+
+        scale = use(p["norm_scale"], self.rcfg).astype(jnp.float32)
+        var = jnp.mean(y * y, axis=-1, keepdims=True)
+        y = y * jax.lax.rsqrt(var + 1e-6) * scale
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(self.dtype)
+        out = jnp.einsum("bse,ed->bsd", y, use(p["w_down"], self.rcfg),
+                         preferred_element_type=jnp.float32).astype(self.dtype)
+        return out, {"conv": new_conv, "C": C, "n": n, "m": m_new}
+
+
+def _chunked_mlstm(q, k, v, log_i, log_f, *, chunk: int) -> jax.Array:
+    """Chunked-parallel mLSTM with per-chunk max stabilization.
+
+    q,k,v: (B,S,H,P) f32;  log_i/log_f: (B,S,H).
+    Unstabilized target, with F = within-chunk cumsum(log_f):
+
+        w_tj = exp(F_t − F_j + log_i_j)(q_t·k_j)           (j ≤ t, same chunk)
+        y_t  = (Σ_j w_tj v_j + exp(F_t) q_t·C_start)
+             / max(|Σ_j w_tj + exp(F_t) q_t·n_start| , 1)
+
+    Factoring exp(F_t + m*) out of both numerator and denominator, where
+    m* = max(m_prev, max_j b_j) and b_j = log_i_j − F_j, leaves every
+    remaining exponent ≤ 0:
+
+        W~_tj   = (q_t·k_j) exp(b_j − m*)                  (tril-masked)
+        state   = exp(m_prev − m*) scaling on (C~, n~)
+        y_t     = num~_t / max(|den~_t|, exp(−F_t − m*))
+        C~_end  = exp(m_prev − m*) C~_start + Σ_j exp(b_j − m*) k_j v_jᵀ
+        m_end   = F_end + m*        (carried to the next chunk)
+
+    Note F_end cancels out of the state update entirely — only the carried
+    stabilizer m tracks it.
+    """
+    B, S, H, P = q.shape
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    def r(x):
+        return x.reshape(B, nc, Q, *x.shape[2:])
+
+    qs, ks, vs = r(q), r(k), r(v)
+    li, lf = r(log_i), r(log_f)
+    F = jnp.cumsum(lf, axis=2)                            # (B,nc,Q,H) ≤ 0
+    F_end = F[:, :, -1, :]                                # (B,nc,H)
+    b = li - F                                            # source exponents
+    m_loc = jnp.max(b, axis=2)                            # (B,nc,H)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(carry, xs_c):
+        Cst, nst, m_prev = carry                          # (B,H,P,P),(B,H,P),(B,H)
+        q_c, k_c, v_c, b_c, F_c, Fe_c, ml_c = xs_c
+        m_star = jnp.maximum(m_prev, ml_c)                # (B,H)
+
+        # --- intra-chunk (bf16 operands into the MXU, f32 accumulation) ---
+        src = jnp.exp(b_c - m_star[:, None, :])           # (B,Q,H) ≤ 1, f32
+        qk = jnp.einsum("bqhp,bkhp->bhqk", q_c, k_c,
+                        preferred_element_type=jnp.float32)
+        W = qk * src.transpose(0, 2, 1)[:, :, None, :]    # scale by source j
+        W = jnp.where(tri[None, None], W, 0.0)            # (B,H,q,k) f32
+        num = jnp.einsum("bhqk,bkhp->bqhp", W.astype(v_c.dtype), v_c,
+                         preferred_element_type=jnp.float32)
+        den = jnp.sum(W, axis=-1).transpose(0, 2, 1)      # (B,Q,H)
+
+        # --- inter-chunk reads (state stabilized by m_prev) ---
+        resc = jnp.exp(m_prev - m_star)                   # (B,H) ≤ 1
+        num = num + jnp.einsum(
+            "bqhp,bhpr,bh->bqhr", q_c.astype(jnp.float32), Cst, resc
+        )
+        den = den + jnp.einsum(
+            "bqhp,bhp,bh->bqh", q_c.astype(jnp.float32), nst, resc
+        )
+
+        clamp = jnp.exp(-F_c - m_star[:, None, :])        # = exp(−m_t)
+        y = num / jnp.maximum(jnp.abs(den), clamp)[..., None]
+
+        # --- carry state to end of chunk (f32 state, bf16 rank-Q updates) ---
+        C_new = resc[..., None, None] * Cst + jnp.einsum(
+            "bkh,bkhp,bkhr->bhpr",
+            src, k_c.astype(jnp.float32), v_c.astype(jnp.float32),
+        )
+        n_new = resc[..., None] * nst + jnp.einsum(
+            "bkh,bkhp->bhp", src, k_c.astype(jnp.float32)
+        )
+        m_new = Fe_c + m_star
+        return (C_new, n_new, m_new), y
+
+    C0 = jnp.zeros((B, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B, H, P), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)             # no state yet
+    xs_seq = tuple(
+        jnp.moveaxis(t, 1, 0) for t in (qs, ks, vs, b, F, F_end, m_loc)
+    )
+    _, ys = jax.lax.scan(step, (C0, n0, m0), xs_seq)
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSTM:
+    """Scalar-memory LSTM with exponential gating and per-head block-diagonal
+    recurrence (xLSTM §2.2).  Inherently sequential — the recurrent matrix
+    feeds h_{t-1} through the gate nonlinearities, so no parallel form
+    exists; runs as lax.scan over time.  At 1 sLSTM per 8 blocks its FLOPs
+    are negligible next to the mLSTM stacks.
+    """
+
+    d_model: int
+    n_heads: int
+    ff_factor: float = 4.0 / 3.0
+    dtype: jnp.dtype = jnp.bfloat16
+    rcfg: RepairConfig = RepairConfig(mode="off")
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return int(self.d_model * self.ff_factor)
+
+    def defs(self):
+        D, H, P = self.d_model, self.n_heads, self.head_dim
+        lin = ini.fan_in()
+        return {
+            # gate order: [z, i, f, o]
+            "w": ParamDef((D, 4 * D), self.dtype, lin, ("embed", "mlp")),
+            # RNN sharding (§Perf iteration 2): shard the recurrent weight by
+            # its OUTPUT dim so the per-timestep matmul is local and only the
+            # tiny hidden state (B,H,P) is gathered each step — sharding the
+            # contraction dim instead costs one (B,H,4P) all-reduce per
+            # timestep × S=4096 steps (measured: 7.7e11 wire bytes/device).
+            "r": ParamDef((H, P, 4 * P), jnp.float32, ini.normal(0.02),
+                          ("heads", None, "mlp")),
+            "b": ParamDef((4 * D,), jnp.float32, ini.zeros, ("mlp",)),
+            "norm_scale": ParamDef((D,), self.dtype, ini.ones, ("embed",)),
+            "w_up": ParamDef((D, self.d_ff), self.dtype, lin, ("embed", "mlp")),
+            "w_down": ParamDef((self.d_ff, D), self.dtype, lin, ("mlp", "embed")),
+        }
+
+    def _cell(self, p, pre, state):
+        """One step.  pre: (B,H,P,4) input preactivations; state=(c,n,m,h)."""
+        c, n, m, h = state
+        r = use(p["r"], self.rcfg)
+        rec = jnp.einsum("bhp,hpq->bhq", h, r)            # (B,H,4P)
+        rec = constrain(rec, ("act_batch", None, "act_heads"))
+        B, H, P = h.shape
+        rec = rec.reshape(B, H, P, 4)
+        z_pre, i_pre, f_pre, o_pre = [
+            (pre[..., g] + rec[..., g]) for g in range(4)
+        ]
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        log_f = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        i_s = jnp.exp(i_pre - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(jnp.abs(n_new), jnp.exp(-m_new))
+        return (c_new, n_new, m_new, h_new)
+
+    def _pre(self, p, x):
+        B, S, D = x.shape
+        H, P = self.n_heads, self.head_dim
+        pre = jnp.einsum(
+            "bsd,de->bse", x, use(p["w"], self.rcfg),
+            preferred_element_type=jnp.float32,
+        ) + use(p["b"], self.rcfg)
+        # (B,S,4D) -> (B,S,H,P,4): gates are blocked per head
+        return pre.reshape(B, S, 4, H, P).transpose(0, 1, 3, 4, 2)
+
+    def _ffn(self, p, y, B, S):
+        scale = use(p["norm_scale"], self.rcfg).astype(jnp.float32)
+        var = jnp.mean(y * y, axis=-1, keepdims=True)
+        y = (y * jax.lax.rsqrt(var + 1e-6) * scale).astype(self.dtype)
+        hcat = jnp.einsum("bsd,df->bsf", y, use(p["w_up"], self.rcfg),
+                          preferred_element_type=jnp.float32)
+        hcat = jax.nn.gelu(hcat).astype(self.dtype)
+        return jnp.einsum("bsf,fd->bsd", hcat, use(p["w_down"], self.rcfg),
+                          preferred_element_type=jnp.float32).astype(self.dtype)
+
+    def __call__(self, p, x: jax.Array) -> jax.Array:
+        B, S, D = x.shape
+        H, P = self.n_heads, self.head_dim
+        pre = self._pre(p, x)                             # (B,S,H,P,4)
+
+        def step(state, pre_t):
+            new = self._cell(p, pre_t, state)
+            return new, new[3]
+
+        init = tuple(
+            jnp.zeros((B, H, P), jnp.float32) if i != 2
+            else jnp.full((B, H, P), -1e30, jnp.float32)
+            for i in range(3)
+        ) + (jnp.zeros((B, H, P), jnp.float32),)
+        _, hs = jax.lax.scan(step, init, jnp.moveaxis(pre, 1, 0))
+        y = jnp.moveaxis(hs, 0, 1).reshape(B, S, D)       # f32
+        return self._ffn(p, y, B, S)
+
+    # -------------------------------------------------------------- decode
+    def cache_defs(self, batch: int):
+        H, P = self.n_heads, self.head_dim
+        st = lambda: ParamDef((batch, H, P), jnp.float32, ini.zeros,
+                              ("batch", "heads", None))
+        return {"c": st(), "n": st(), "m": st(), "h": st()}
+
+    def decode_step(self, p, x, cache):
+        B = x.shape[0]
+        pre = self._pre(p, x)[:, 0]                       # (B,H,P,4)
+        state = tuple(use(cache[k], self.rcfg) for k in ("c", "n", "m", "h"))
+        c, n, m, h = self._cell(p, pre, state)
+        y = h.reshape(B, 1, self.d_model)
+        out = self._ffn(p, y, B, 1)
+        return out, {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,2 @@
+from .adamw import AdamW, OptState  # noqa: F401
+from .schedules import cosine_with_warmup  # noqa: F401

@@ -1,0 +1,113 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and
+ZeRO-compatible state layout.
+
+State design for the approximate-memory setting (DESIGN.md §4):
+
+  * moments (mu, nu) mirror the parameter pytree — they inherit the params'
+    logical sharding axes, which under the FSDP rules shards them over the
+    data axis (ZeRO-1/2 for free via GSPMD);
+  * mu/nu live in the APPROXIMATE region (regions.DEFAULT_RULES: anything not
+    matching the exact patterns).  They are drift-tolerant: a flipped moment
+    bit perturbs one update by epsilon — amortized.  NaN moments would be
+    fatal and are covered by the step-boundary scrub;
+  * ``step`` (and everything derived from it: schedule, bias correction) is
+    an int32 scalar in the EXACT region — a flipped step would corrupt bias
+    correction for every parameter at once, the "invalid pointer" class of
+    failure repair cannot express.
+
+Numerics: moments are f32 regardless of param dtype (bf16 moments diverge);
+update math in f32, param write-back in the param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # int32 scalar — exact region ("step" path rule)
+    mu: Any                  # f32 pytree like params — approx region
+    nu: Any                  # f32 pytree like params — approx region
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]   # schedule(step) -> f32
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> OptState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(f32, params),
+            nu=jax.tree.map(f32, params),
+        )
+
+    def abstract_state(self, abstract_params) -> OptState:
+        sds = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=jax.tree.map(sds, abstract_params),
+            nu=jax.tree.map(sds, abstract_params),
+        )
+
+    def state_logical_axes(self, params_axes) -> OptState:
+        """Moments inherit the parameter sharding (ZeRO via GSPMD)."""
+        return OptState(step=None, mu=params_axes, nu=params_axes)
+
+    # ------------------------------------------------------------------ step
+    def update(
+        self, grads, state: OptState, params
+    ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+        gnorm = _global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            # Invariant-aware repair (approximate-memory hardening): nu must
+            # be ≥ 0, but a sign-bit flip is a *finite* drift error the NaN
+            # scrub deliberately leaves alone — and sqrt(negative) NaN-poisons
+            # the whole update.  Clamping at the consumer is the register-mode
+            # philosophy applied to an algebraic invariant (DESIGN.md §2).
+            v = b2 * jnp.maximum(v, 0.0) + (1 - b2) * g * g
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return p_new, m, v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_v = jax.tree.leaves(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, OptState(step, new_m, new_v), metrics
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)
+    ]
+    return jnp.sqrt(sum(leaves))

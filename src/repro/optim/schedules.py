@@ -1,0 +1,25 @@
+"""LR schedules (pure functions of the step scalar — exact-region state)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    final_fraction: float = 0.1,
+):
+    """Linear warmup then cosine decay to final_fraction·peak."""
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = final_fraction + (1 - final_fraction) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t)
+        )
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return schedule

@@ -1,0 +1,11 @@
+import os
+
+# Tests must see the single real CPU device — the 512-device flag belongs to
+# launch/dryrun.py ONLY (per assignment).  Guard against accidental leakage.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), (
+    "dry-run device-count flag leaked into the test environment"
+)
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,91 @@
+"""Per-architecture smoke tests (assignment requirement): REDUCED config of
+each family, one forward + one train step + one decode step on CPU, asserting
+output shapes and finiteness — with the paper's technique enabled."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import REGISTRY, get_config
+from repro.data import batch_for_step
+from repro.launch.serve import build_serve_step
+from repro.launch.train import build_train_step, init_train_state, make_optimizer
+from repro.models import build_model
+
+ARCHS = list(REGISTRY)
+
+
+def make_batch(cfg, B=2, S=64):
+    return batch_for_step(cfg, jax.random.PRNGKey(0), 0, batch=B, seq=S)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    logits = jax.jit(model.forward)(params, batch)
+    B = batch["tokens"].shape[0]
+    S_text = batch["tokens"].shape[1]
+    assert logits.shape == (B, S_text, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    opt = make_optimizer(peak_lr=1e-3, warmup=2, total=10)
+    state = init_train_state(model, opt, jax.random.PRNGKey(1))
+    step = jax.jit(build_train_step(model, opt))
+    state, metrics = step(state, make_batch(cfg))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params stay finite after the update
+    for leaf in jax.tree.leaves(state["params"]):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_shapes(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    B, T = 2, 32
+    cache = model.init_cache(B, T)
+    serve = jax.jit(build_serve_step(model))
+    tok = {"tokens": jnp.ones((B, 1), jnp.int32)}
+    nxt, logits, cache = serve(params, cache, tok, jnp.asarray(0, jnp.int32))
+    assert nxt.shape == (B,)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    # a second step consumes the updated cache
+    nxt2, logits2, cache = serve(params, cache, {"tokens": nxt[:, None]},
+                                 jnp.asarray(1, jnp.int32))
+    assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "zamba2-7b", "xlstm-1.3b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode logits ≈ forward logits (cache correctness).
+    One dense, one hybrid, one ssm — the stateful decode paths."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    B, S = 1, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, cfg.vocab)
+    full = jax.jit(model.forward)(params, {"tokens": tokens})
+
+    cache = model.init_cache(B, S)
+    serve = jax.jit(model.serve_step)
+    outs = []
+    for t in range(S):
+        logits, cache = serve(params, cache, {"tokens": tokens[:, t:t+1]},
+                              jnp.asarray(t, jnp.int32))
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    import numpy as np
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full), rtol=2e-2, atol=2e-2
+    )

@@ -1,0 +1,83 @@
+"""Bit-pattern NaN/Inf detection — unit + hypothesis property tests.
+
+The paper's definition (§2.2): a NaN is "all bits of the exponent part
+flipped to 1" (+ non-zero mantissa).  core.detect must agree with IEEE
+semantics (jnp.isnan/isinf) bit-for-bit on every dtype the framework stores.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import detect
+
+DTYPES = [jnp.float32, jnp.float64, jnp.bfloat16, jnp.float16]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_masks_match_ieee(dtype):
+    lay = detect.layout_of(dtype)
+    # build every interesting pattern: 0, -0, 1, inf, -inf, several NaNs,
+    # denormals, max finite
+    bits = np.array(
+        [
+            0,
+            lay.sign_mask,
+            lay.exp_mask,                          # +inf
+            lay.exp_mask | lay.sign_mask,          # -inf
+            lay.exp_mask | 1,                      # NaN (quiet-ish)
+            lay.exp_mask | lay.man_mask,           # NaN all-ones mantissa
+            1,                                     # smallest denormal
+            lay.exp_mask - 1,                      # max finite
+            (lay.exp_mask | lay.man_mask) & ~lay.sign_mask,
+        ],
+        dtype=np.dtype(lay.int_dtype),
+    )
+    x = jax.lax.bitcast_convert_type(jnp.asarray(bits), dtype)
+    np.testing.assert_array_equal(np.asarray(detect.nan_mask(x)), np.isnan(np.asarray(x, np.float64)))
+    np.testing.assert_array_equal(np.asarray(detect.inf_mask(x)), np.isinf(np.asarray(x, np.float64)))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=2**32 - 1), min_size=1, max_size=64))
+def test_f32_property_random_bits(bit_list):
+    """Any u32 pattern: our bit classification == IEEE classification."""
+    bits = np.array(bit_list, dtype=np.uint32)
+    x = bits.view(np.float32)
+    jx = jnp.asarray(bits)
+    got_nan = np.asarray(detect.is_nan_bits(jx, jnp.float32))
+    got_inf = np.asarray(detect.is_inf_bits(jx, jnp.float32))
+    np.testing.assert_array_equal(got_nan, np.isnan(x))
+    np.testing.assert_array_equal(got_inf, np.isinf(x))
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**16 - 1),
+)
+def test_bf16_exhaustive_slices(base):
+    """bf16 is small enough to check real slices of the 2^16 pattern space."""
+    bits = np.arange(base, min(base + 256, 2**16), dtype=np.uint16)
+    x32 = (bits.astype(np.uint32) << 16).view(np.float32)
+    jx = jnp.asarray(bits)
+    got_nan = np.asarray(detect.is_nan_bits(jx, jnp.bfloat16))
+    got_inf = np.asarray(detect.is_inf_bits(jx, jnp.bfloat16))
+    np.testing.assert_array_equal(got_nan, np.isnan(x32))
+    np.testing.assert_array_equal(got_inf, np.isinf(x32))
+
+
+def test_bits_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,), jnp.float32)
+    rt = detect.from_bits(detect.bits_of(x), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(rt))
+
+
+def test_nonfinite_mask_modes():
+    x = jnp.array([1.0, jnp.nan, jnp.inf, -jnp.inf, 0.0], jnp.float32)
+    with_inf = detect.nonfinite_mask(x, include_inf=True)
+    no_inf = detect.nonfinite_mask(x, include_inf=False)
+    assert with_inf.tolist() == [False, True, True, True, False]
+    assert no_inf.tolist() == [False, True, False, False, False]
+    assert int(detect.count_nonfinite(x)) == 3
+    assert int(detect.count_nonfinite(x, include_inf=False)) == 1

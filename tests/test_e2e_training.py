@@ -1,0 +1,182 @@
+"""End-to-end behaviour of the paper's claim (§2.1 + §4): under approximate
+memory, training survives WITH reactive NaN repair and is destroyed without
+it; checkpoint/restart is bit-consistent; serving repairs poisoned caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint
+from repro.configs import get_config
+from repro.core import repair as repair_lib
+from repro.data import SyntheticStream
+from repro.launch.serve import generate, scrub_cache
+from repro.launch.train import (
+    build_train_step,
+    init_train_state,
+    inject_state,
+    make_optimizer,
+    train_loop,
+)
+from repro.models import build_model
+import dataclasses
+
+
+def tiny_cfg(mode="memory", policy="neighbor_mean", max_magnitude=1e3):
+    cfg = get_config("qwen2-1.5b").reduced()
+    return dataclasses.replace(
+        cfg,
+        n_layers=2,
+        vocab=256,
+        repair=repair_lib.RepairConfig(
+            mode=mode, policy=policy, max_magnitude=max_magnitude
+        ),
+    )
+
+
+BER = 2e-6      # aggressive approximate-memory regime (~1 NaN every few steps)
+STEPS = 30
+
+
+def run(mode, ber=BER, steps=STEPS, seed=0):
+    cfg = tiny_cfg(mode)
+    model = build_model(cfg)
+    opt = make_optimizer(peak_lr=3e-3, warmup=5, total=steps)
+    data = SyntheticStream(cfg, seed=seed, batch=8, seq=32)
+    state, hist = train_loop(
+        model, opt, data, steps=steps, key=jax.random.PRNGKey(seed),
+        ber=ber, log_every=max(steps // 10, 1),
+    )
+    return state, hist
+
+
+def test_training_without_repair_gets_poisoned():
+    state, hist = run("off")
+    # with repair off at this BER, NaNs reach the loss and stay
+    assert any(not np.isfinite(h["loss"]) for h in hist) or not all(
+        bool(jnp.isfinite(l.astype(jnp.float32)).all())
+        for l in jax.tree.leaves(state["params"])
+    )
+
+
+def test_nan_only_repair_is_insufficient_for_training():
+    """Beyond-paper finding (DESIGN.md §2): the paper-faithful NaN/Inf-only
+    repair does NOT survive sustained-BER training — a high-exponent drift
+    value (~1e38, a legal float) explodes the loss before it ever becomes a
+    NaN in memory.  The magnitude-clamp extension is what makes the
+    technique deployable for training."""
+    cfg = tiny_cfg("memory", max_magnitude=None)     # paper-faithful
+    model = build_model(cfg)
+    opt = make_optimizer(peak_lr=3e-3, warmup=5, total=STEPS)
+    data = SyntheticStream(cfg, seed=0, batch=8, seq=32)
+    state, hist = train_loop(
+        model, opt, data, steps=STEPS, key=jax.random.PRNGKey(0),
+        ber=BER, log_every=3,
+    )
+    exploded = any(
+        (not np.isfinite(h["loss"])) or h["loss"] > 1e3 for h in hist
+    ) or not all(
+        bool(jnp.isfinite(l.astype(jnp.float32)).all())
+        for l in jax.tree.leaves(state["params"])
+    )
+    assert exploded
+
+
+def test_training_with_memory_repair_converges():
+    state, hist = run("memory")
+    losses = [h["loss"] for h in hist]
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0]                 # actually learns
+    assert hist[-1]["nan_found"] + hist[-1]["inf_found"] > 0   # repairs fired
+    for l in jax.tree.leaves(state["params"]):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            assert bool(jnp.isfinite(l.astype(jnp.float32)).all())
+
+
+def test_register_mode_also_survives():
+    _, hist = run("register", steps=15)
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+def test_repair_overhead_loss_parity_without_errors():
+    """At BER=0 the repaired and unrepaired runs are numerically identical —
+    the paper's 'no overhead when nothing happens' property, as exact
+    equality of the training trajectory."""
+    _, h_mem = run("memory", ber=0.0, steps=10)
+    _, h_off = run("off", ber=0.0, steps=10)
+    np.testing.assert_allclose(
+        [h["loss"] for h in h_mem], [h["loss"] for h in h_off],
+        rtol=0, atol=0,
+    )
+
+
+def test_checkpoint_restart_resumes_identically(tmp_path):
+    """Fault-tolerance: kill at step 10, restore, continue to 20 — the
+    trajectory must match an uninterrupted run (stateless data + exact
+    optimizer state)."""
+    cfg = tiny_cfg("memory")
+    model = build_model(cfg)
+    opt = make_optimizer(peak_lr=3e-3, warmup=5, total=20)
+    data = SyntheticStream(cfg, seed=3, batch=8, seq=32)
+    key = jax.random.PRNGKey(3)
+
+    # uninterrupted
+    ref_state, _ = train_loop(model, opt, data, steps=20, key=key, ber=0.0)
+
+    # interrupted at 10 + restart
+    mgr = CheckpointManager(str(tmp_path), keep=2, scrub=True)
+    st, _ = train_loop(
+        model, opt, data, steps=10, key=key, ber=0.0,
+        checkpoint_manager=mgr, checkpoint_every=10,
+    )
+    del st
+    like = {
+        "params": model.abstract_params(),
+        "opt": opt.abstract_state(model.abstract_params()),
+        "stats": {k: jax.ShapeDtypeStruct((), jnp.int32)
+                  for k in ("flips", "nan_found", "inf_found", "events")},
+    }
+    restored, step0 = load_checkpoint(str(tmp_path), like=like)
+    assert step0 == 10
+    resumed, _ = train_loop(
+        model, opt, data, steps=20, key=key, ber=0.0,
+        state=restored, start_step=10,
+    )
+    for a, b in zip(jax.tree.leaves(ref_state["params"]),
+                    jax.tree.leaves(resumed["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serving_with_poisoned_cache_recovers():
+    """Inject NaNs into a live KV cache mid-generation; scrub_cache repairs
+    it and generation continues finite."""
+    cfg = tiny_cfg("register")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jnp.ones((2, 4), jnp.int32)
+    tokens, stats = generate(model, params, prompt, max_new=8, max_seq=32,
+                             scrub_every=0)
+    assert tokens.shape == (2, 12)
+
+    # now poison a cache and scrub it
+    cache = model.init_cache(2, 32)
+    cache = jax.tree.map(
+        lambda x: x.at[(0,) * x.ndim].set(jnp.nan)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        cache,
+    )
+    fixed, s = scrub_cache(model, cache)
+    assert int(s["nan_found"]) > 0
+    for l in jax.tree.leaves(fixed):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            assert bool(jnp.isfinite(l.astype(jnp.float32)).all())
+
+
+def test_injection_hits_only_approx_region():
+    cfg = tiny_cfg("memory")
+    model = build_model(cfg)
+    opt = make_optimizer()
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    before_step = int(state["opt"].step)
+    poisoned = inject_state(state, jax.random.PRNGKey(1), ber=1e-3)
+    assert int(poisoned["opt"].step) == before_step      # exact region intact

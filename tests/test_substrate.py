@@ -1,0 +1,197 @@
+"""Substrate tests: data pipeline, optimizer, compression, sharding rules,
+checkpointing (incl. scrub-on-save + elastic reshard + preemption hook)."""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data import SyntheticStream, batch_for_step
+from repro.distributed import compression as comp
+from repro.distributed import sharding as sh
+from repro.optim import AdamW, cosine_with_warmup
+
+
+# ------------------------------------------------------------------- data
+def test_data_is_pure_in_seed_and_step():
+    cfg = get_config("qwen2-1.5b").reduced()
+    seed = jax.random.PRNGKey(7)
+    a = batch_for_step(cfg, seed, 3, batch=4, seq=32)
+    b = batch_for_step(cfg, seed, 3, batch=4, seq=32)
+    c = batch_for_step(cfg, seed, 4, batch=4, seq=32)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+    assert int(a["tokens"].max()) < cfg.vocab and int(a["tokens"].min()) >= 0
+
+
+def test_data_host_slicing_partitions_batch():
+    cfg = get_config("qwen2-1.5b").reduced()
+    full = SyntheticStream(cfg, seed=1, batch=8, seq=16)
+    parts = [
+        SyntheticStream(cfg, seed=1, batch=8, seq=16,
+                        process_index=i, process_count=4)
+        for i in range(4)
+    ]
+    whole = full(0)["tokens"]
+    got = jnp.concatenate([p(0)["tokens"] for p in parts], axis=0)
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(got))
+
+
+def test_data_modalities():
+    vlm = get_config("llava-next-mistral-7b").reduced()
+    b = batch_for_step(vlm, jax.random.PRNGKey(0), 0, batch=2, seq=64)
+    assert "patch_embeds" in b and b["patch_embeds"].shape[1] == 8
+    audio = get_config("seamless-m4t-large-v2").reduced()
+    b = batch_for_step(audio, jax.random.PRNGKey(0), 0, batch=2, seq=64)
+    assert b["frames"].shape == (2, 64, audio.d_model)
+
+
+# ---------------------------------------------------------------- optim
+def test_adamw_reduces_quadratic_loss():
+    opt = AdamW(lr=cosine_with_warmup(0.1, 5, 200), weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state, m = opt.update(g, state, params)
+    assert float(loss(params)) < 0.05 * l0
+    assert int(state.step) == 100
+
+
+def test_adamw_clips_global_norm():
+    opt = AdamW(lr=lambda s: 1e-3, clip_norm=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, metrics = opt.update(g, state, params)
+    assert float(metrics["grad_norm"]) > 100.0   # pre-clip norm reported
+
+
+def test_schedule_shape():
+    s = cosine_with_warmup(1.0, 10, 100, final_fraction=0.1)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert abs(float(s(100)) - 0.1) < 1e-3
+    assert float(s(55)) < 1.0
+
+
+# ----------------------------------------------------------- compression
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_int8_roundtrip_error_bounded(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * 10
+    q, scale, err = comp.compress_int8(x, jnp.zeros_like(x))
+    back = comp.decompress_int8(q, scale)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(scale) * 0.5 + 1e-6
+    np.testing.assert_allclose(np.asarray(x - back), np.asarray(err), rtol=1e-5, atol=1e-6)
+
+
+def test_error_feedback_converges():
+    """EF property: the RUNNING MEAN of compressed grads → true grad."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (64,))
+    err = {"g": jnp.zeros_like(g)}
+    acc = jnp.zeros_like(g)
+    n = 200
+    for _ in range(n):
+        ghat, err = comp.compressed_allreduce_tree({"g": g}, err)
+        acc = acc + ghat["g"]
+    np.testing.assert_allclose(np.asarray(acc / n), np.asarray(g),
+                               rtol=1e-3, atol=1e-3)
+
+
+# -------------------------------------------------------------- sharding
+def test_spec_for_leaf_divisibility_and_reuse():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = {"embed": "data", "heads": "model", "batch": "data"}
+    # both shardable (axis size 1 divides anything)
+    spec = sh.spec_for_leaf(("embed", "heads"), (8, 8), mesh, rules)
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+    # same mesh axis twice: second dim degrades
+    spec = sh.spec_for_leaf(("batch", "embed"), (8, 8), mesh, rules)
+    assert spec[1] is None
+
+
+def test_spec_for_leaf_degrades_non_divisible():
+    # fake a 16-wide axis via axis-size arithmetic on a 1-device mesh is not
+    # possible; validate the arithmetic path directly instead
+    mesh = jax.make_mesh((1,), ("model",))
+    rules = {"kv": "model"}
+    spec = sh.spec_for_leaf(("kv",), (3,), mesh, rules)   # 3 % 1 == 0 -> ok
+    assert spec == jax.sharding.PartitionSpec("model")
+
+
+def test_constrain_is_identity_without_context():
+    x = jnp.ones((4, 4))
+    assert sh.constrain(x, ("act_batch", None)) is x
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip_and_scrub_on_save(tmp_path):
+    tree = {
+        "params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+        "step": jnp.asarray(5, jnp.int32),
+    }
+    tree["params"]["w"] = tree["params"]["w"].at[0, 0].set(jnp.nan)
+    path = save_checkpoint(str(tmp_path), 5, tree)
+    assert os.path.isdir(path)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored, step = load_checkpoint(str(tmp_path), like=like)
+    assert step == 5
+    # scrub-on-save: the NaN was repaired before persisting
+    assert bool(jnp.isfinite(restored["params"]["w"]).all())
+    assert float(restored["params"]["w"][0, 1]) == 1.0
+
+
+def test_checkpoint_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.ones((2,))}
+    for s in (1, 2, 3):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.latest_step() == 3
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["step_00000002", "step_00000003"]
+
+
+def test_checkpoint_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(7, {"w": jnp.ones((8,))})
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """Save from one 'mesh', restore with explicit shardings onto another
+    (single-device here; the API path is identical)."""
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    save_checkpoint(str(tmp_path), 1, tree, scrub=False)
+    shard = {"w": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))}
+    like = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    restored, _ = load_checkpoint(str(tmp_path), like=like, shardings=shard)
+    assert restored["w"].sharding.spec == jax.sharding.PartitionSpec("data")
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+
+def test_preemption_hook_saves_on_sigterm(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = {"w": jnp.full((4,), 3.0)}
+    handler = mgr.install_preemption_hook(lambda: (42, state))
+    try:
+        handler(signal.SIGTERM, None)       # simulate scheduler eviction
+    finally:
+        signal.signal(signal.SIGTERM, signal.SIG_DFL)
+    assert mgr.latest_step() == 42
+    restored, step = load_checkpoint(
+        str(tmp_path), like={"w": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    )
+    assert step == 42 and float(restored["w"][0]) == 3.0
