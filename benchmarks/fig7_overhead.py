@@ -4,7 +4,7 @@ Paper setup (§4): (1) normal — no NaN; (2) a NaN injected, repaired by the
 register-repairing mechanism (at every consumption); (3) NaN injected,
 repaired by register+memory mechanisms (once, at its origin).
 
-TPU/JAX mapping (DESIGN.md §2): one matmul reuses its operand across R
+TPU/JAX mapping (README §Runtime): one matmul reuses its operand across R
 consuming calls (the iterative-workload pattern — every training/serving
 step re-reads the same resident weights):
 
@@ -24,7 +24,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_mmm import CONFIG
-from repro.core import injection, policies, repair
+from repro.core import injection
+from repro.core import stats as stats_lib
+from repro.runtime import ApproxSpace
 
 
 def _time(fn, *args, repeats=None, batches=5):
@@ -46,6 +48,11 @@ def _time(fn, *args, repeats=None, batches=5):
     return samples[len(samples) // 2]
 
 
+# The runtimes under test: per-use repair (register) vs write-back (memory).
+_REGISTER = ApproxSpace(mode="register", policy="zero", max_magnitude=None)
+_MEMORY = ApproxSpace(mode="memory", policy="zero", max_magnitude=None)
+
+
 @jax.jit
 def _mm(a, b):
     return a @ b
@@ -53,13 +60,13 @@ def _mm(a, b):
 
 @jax.jit
 def _mm_register(a, b):
-    fixed, _, _ = repair.repair_tensor(a, policy=policies.zero)
+    fixed, _ = _REGISTER.use(a, stats_lib.zeros())
     return fixed @ b
 
 
 @jax.jit
 def _scrub(a):
-    fixed, _, _ = repair.repair_tensor(a, policy=policies.zero)
+    fixed, _ = _MEMORY.scrub(a, stats_lib.zeros())
     return fixed
 
 

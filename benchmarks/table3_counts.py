@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import injection
 from repro.kernels import ops
+from repro.runtime import ApproxSpace
 
 
 def run(n=256, blocks=(64, 64, 64), reuse=5):
@@ -27,6 +28,11 @@ def run(n=256, blocks=(64, 64, 64), reuse=5):
     a = jax.random.normal(k1, (n, n), jnp.float32)
     b = jax.random.normal(k2, (n, n), jnp.float32)
     a_bad = injection.inject_nan(k3, a, 1)
+
+    # one unified stats stream per mechanism: the kernel counter vectors are
+    # folded into the core.stats Table-3 analogue by the runtime
+    reg_space = ApproxSpace(mode="register", policy="zero")
+    mem_space = ApproxSpace(mode="memory", policy="zero")
 
     # per-call tile-visit events (intra-call Table 3: one poisoned a-tile is
     # visited n/bn times inside ONE matmul — the paper's N-traps-per-matmul)
@@ -39,23 +45,37 @@ def run(n=256, blocks=(64, 64, 64), reuse=5):
     for _ in range(reuse):
         r = ops.repair_matmul(a_reg, b, mode="register", blocks=blocks)
         a_reg = r.a
+        reg_space.record_kernel(r.counts)
         reg_events.append(int(r.counts[ops.MM_EV_A]))
         m = ops.repair_matmul(a_mem, b, mode="memory", blocks=blocks)
         a_mem = m.a                               # functional write-back
+        mem_space.record_kernel(m.counts)
         mem_events.append(int(m.counts[ops.MM_EV_A]))
-    return per_call_visits, reg_events, mem_events
+    return per_call_visits, reg_events, mem_events, reg_space, mem_space
 
 
 def main():
-    per_call, reg, mem = run()
+    per_call, reg, mem, reg_space, mem_space = run()
     n_over_bn = 256 // 64
     print("# table3_counts: repair events per mechanism (kernel counters)")
     print("name,us_per_call,derived")
     print(f"table3_intracall_visits,{per_call},expected={n_over_bn}")
     print(f"table3_register_total,{sum(reg)},per_call={reg}")
     print(f"table3_memory_total,{sum(mem)},per_call={mem}")
+    print(f"table3_register_unified,{reg_space.stats_dict()['events']},"
+          f"stats={reg_space.stats_dict()}")
+    print(f"table3_memory_unified,{mem_space.stats_dict()['events']},"
+          f"stats={mem_space.stats_dict()}")
     assert reg == [per_call] * len(reg), "register mode must re-fire every call"
     assert sum(m > 0 for m in mem) == 1, "memory mode must fire exactly once"
+    # fused-kernel events must land in the unified core.stats stream (only
+    # operand a is poisoned, so ev_total == ev_a call by call)
+    assert reg_space.stats_dict()["events"] == sum(reg), (
+        "kernel counters did not reach unified stats"
+    )
+    assert mem_space.stats_dict()["events"] == sum(mem), (
+        "kernel counters did not reach unified stats"
+    )
 
 
 if __name__ == "__main__":

@@ -23,10 +23,10 @@ import jax
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
-from repro.core.repair import RepairConfig
 from repro.data import SyntheticStream
 from repro.launch.train import make_optimizer, train_loop
 from repro.models import build_model
+from repro.runtime import ApproxConfig, ApproxSpace
 
 
 def build_100m(arch: str, repair_mode: str) -> "ArchConfig":
@@ -47,7 +47,7 @@ def build_100m(arch: str, repair_mode: str) -> "ArchConfig":
         dtype_name="float32",
         mamba_per_attn=2,
         slstm_every=4,
-        repair=RepairConfig(
+        repair=ApproxConfig(
             mode=repair_mode, policy="neighbor_mean", max_magnitude=1e3
         ),
         attn_q_block=128,
@@ -78,6 +78,11 @@ def main():
     data = SyntheticStream(cfg, seed=0, batch=args.batch, seq=args.seq)
     mgr = CheckpointManager(args.ckpt_dir, keep=2, scrub=True)
 
+    # One ApproxSpace owns the run: boundary scrub inside the jitted step,
+    # injection window between steps, regions cached by treedef, one stats
+    # stream (incl. the injection ground truth in `flips`).
+    space = ApproxSpace(cfg.repair, ber=args.ber)
+
     t0 = time.time()
     state, hist = train_loop(
         model, opt, data,
@@ -87,13 +92,15 @@ def main():
         checkpoint_manager=mgr,
         checkpoint_every=args.ckpt_every,
         log_every=10,
+        space=space,
     )
     dt = time.time() - t0
 
-    print(f"\n{'step':>6} {'loss':>9} {'acc':>7} {'repairs(nan/inf)':>18}")
+    print(f"\n{'step':>6} {'loss':>9} {'acc':>7} {'flips':>7} "
+          f"{'repairs(nan/inf)':>18}")
     for h in hist:
         print(f"{h['step']:>6} {h['loss']:>9.4f} {h['accuracy']:>7.4f} "
-              f"{h['nan_found']:>9}/{h['inf_found']}")
+              f"{h['flips']:>7} {h['nan_found']:>9}/{h['inf_found']}")
     print(f"\n{args.steps} steps in {dt:.1f}s "
           f"({1000 * dt / args.steps:.0f} ms/step); "
           f"final checkpoint: step {mgr.latest_step()}")

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 suite + example smoke test.
+#
+#   bash scripts/ci.sh          # everything
+#   bash scripts/ci.sh tests    # suite only
+#   bash scripts/ci.sh smoke    # examples only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+what="${1:-all}"
+
+if [[ "$what" == "all" || "$what" == "tests" ]]; then
+    echo "== tier-1 suite =="
+    python -m pytest -x -q
+fi
+
+if [[ "$what" == "all" || "$what" == "smoke" ]]; then
+    echo "== smoke: examples/quickstart.py =="
+    python examples/quickstart.py
+fi
+
+echo "CI OK"

@@ -1,7 +1,7 @@
 """Checkpointing: npz shards + JSON manifest, scrub-on-save, async save,
 elastic reshard on restore, preemption hook.
 
-Fault-tolerance contract (DESIGN.md §5):
+Fault-tolerance contract (README §Checkpointing):
 
   * **scrub-on-save** — state is NaN/Inf-repaired *before* serialization, so
     a checkpoint is always a clean repair source for the ``last_checkpoint``
@@ -37,12 +37,23 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import numpy as np
 
-from ..core import repair as repair_lib
-from ..core import stats as stats_lib
-from ..core.regions import annotate
+from ..runtime import ApproxSpace, ScrubSchedule
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+
+
+def _save_space(repair_cfg: Optional[Any], space: Optional[ApproxSpace]):
+    """The runtime used for scrub-on-save: memory-forced (a checkpoint must
+    be clean regardless of the run's repair mode), zero policy by default."""
+    if space is not None:
+        return space
+    if repair_cfg is None:
+        return ApproxSpace(mode="memory", policy="zero")
+    return ApproxSpace(
+        repair_cfg, mode="memory", max_magnitude=None,
+        scrub=ScrubSchedule(),
+    )
 
 
 def _flatten_with_paths(tree: Any) -> Dict[str, Any]:
@@ -69,19 +80,13 @@ def save_checkpoint(
     tree: Any,
     *,
     scrub: bool = True,
-    repair_cfg: Optional[repair_lib.RepairConfig] = None,
+    repair_cfg: Optional[Any] = None,
     extra_meta: Optional[Dict[str, Any]] = None,
+    space: Optional[ApproxSpace] = None,
 ) -> str:
     """Synchronous checkpoint write.  Returns the checkpoint path."""
     if scrub:
-        cfg = repair_cfg or repair_lib.RepairConfig(mode="memory", policy="zero")
-        # force memory mode for the save-scrub regardless of run mode
-        cfg = repair_lib.RepairConfig(
-            mode="memory", policy=cfg.policy, include_inf=cfg.include_inf
-        )
-        tree, _ = repair_lib.scrub_pytree(
-            tree, cfg, stats_lib.zeros(), annotate(tree)
-        )
+        tree = _save_space(repair_cfg, space).scrub(tree)
 
     host = jax.device_get(tree)
     return _write(directory, step, host, extra_meta)
@@ -183,12 +188,17 @@ class CheckpointManager:
         *,
         keep: int = 3,
         scrub: bool = True,
-        repair_cfg: Optional[repair_lib.RepairConfig] = None,
+        repair_cfg: Optional[Any] = None,
+        space: Optional[ApproxSpace] = None,
     ):
         self.directory = directory
         self.keep = keep
         self.scrub = scrub
         self.repair_cfg = repair_cfg
+        # One runtime for every save of this manager: the region cache is
+        # shared across saves and scrub-on-save events land in its unified
+        # stats stream.
+        self.space = _save_space(repair_cfg, space)
         self._thread: Optional[threading.Thread] = None
         self._last_state: Optional[Tuple[int, Any]] = None
 
@@ -197,15 +207,7 @@ class CheckpointManager:
         """Scrub + device_get synchronously; serialize on a worker thread."""
         self.wait()
         if self.scrub:
-            cfg = self.repair_cfg or repair_lib.RepairConfig(
-                mode="memory", policy="zero"
-            )
-            cfg = repair_lib.RepairConfig(
-                mode="memory", policy=cfg.policy, include_inf=cfg.include_inf
-            )
-            tree, _ = repair_lib.scrub_pytree(
-                tree, cfg, stats_lib.zeros(), annotate(tree)
-            )
+            tree = self.space.scrub(tree)
         host = jax.device_get(tree)
         self._last_state = (step, host)
 
@@ -254,7 +256,7 @@ class CheckpointManager:
             self.wait()
             save_checkpoint(
                 self.directory, step, tree,
-                scrub=self.scrub, repair_cfg=self.repair_cfg,
+                scrub=self.scrub, space=self.space,
             )
             if callable(prev):
                 prev(signum, frame)

@@ -12,7 +12,7 @@ from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 
-from ..core.repair import RepairConfig
+from ..runtime import ApproxConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,14 +59,17 @@ class ArchConfig:
     # numerics
     dtype_name: str = "bfloat16"
 
-    # the paper's technique.  max_magnitude is the beyond-paper extension
-    # (DESIGN.md §2): NaN-only repair provably does not survive sustained
-    # BER in training — a flip on a high exponent bit is a *legal float*
-    # (0.02 -> 5e3/8e7/1e38 for successive bits) that poisons the loss one
-    # matmul later.  Healthy weights/moments are O(1); single-bit exponent
-    # flips either stay within ~8x (amortizable drift, deliberately kept)
-    # or jump >= ~5e3 — 1e3 separates the two regimes with huge margin.
-    repair: RepairConfig = RepairConfig(
+    # the paper's technique, as one unified runtime config (README §Config;
+    # a legacy core.repair.RepairConfig is accepted too — every consumer
+    # reads only the shared mode/policy/include_inf/max_magnitude fields).
+    # max_magnitude is the beyond-paper extension (README §Config): NaN-only
+    # repair provably does not survive sustained BER in training — a flip on
+    # a high exponent bit is a *legal float* (0.02 -> 5e3/8e7/1e38 for
+    # successive bits) that poisons the loss one matmul later.  Healthy
+    # weights/moments are O(1); single-bit exponent flips either stay within
+    # ~8x (amortizable drift, deliberately kept) or jump >= ~5e3 — 1e3
+    # separates the two regimes with huge margin.
+    repair: ApproxConfig = ApproxConfig(
         mode="memory", policy="neighbor_mean", max_magnitude=1e3
     )
 
@@ -133,7 +136,7 @@ SHAPES: Dict[str, ShapeCell] = {
 }
 
 # long_500k requires sub-quadratic context handling: only SSM/hybrid archs
-# run it (DESIGN.md §4 records the skips for the 8 full-attention archs).
+# run it (README §Workloads records the skips for the 8 full-attention archs).
 LONG_CONTEXT_FAMILIES = ("hybrid", "ssm")
 
 

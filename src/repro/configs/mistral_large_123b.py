@@ -3,7 +3,7 @@
 
 88L, d_model 12288, 96 heads (GQA kv=8), d_ff 28672, vocab 32768.
 The FSDP/TP stress case of the assignment: 123 B params — the dry-run must
-shard parameters over both mesh axes to fit (DESIGN.md §5).
+shard parameters over both mesh axes to fit (README §Sharding).
 """
 from .base import ArchConfig
 

@@ -3,7 +3,7 @@
 32L, d_model 4096, 32 heads (GQA kv=8), per-expert d_ff 6400, vocab 32064,
 16 experts top-2.  Expert weights are the prime approximate-memory resident
 (big, cold, read-mostly); the router is pinned to the exact region
-(DESIGN.md §4, nn/moe.py).
+(README §Regions, nn/moe.py).
 """
 from .base import ArchConfig
 

@@ -6,8 +6,10 @@ Public surface:
   policies     repair-value policy lattice (paper §5.2 design space)
   injection    approximate-memory simulator (BER model + bit flips)
   regions      exact/approximate memory partitioning of state pytrees
-  repair       register/memory repair modes (paper §3.3/§3.4)
-  stats        repair-event counters (Table 3 analogue)
+  repair       register/memory repair modes (paper §3.3/§3.4); the pytree
+               entry points are deprecated shims over ``repro.runtime``
+  stats        repair-event counters (Table 3 analogue), incl. the mapping
+               of Pallas kernel counter vectors into the unified stream
   provenance   origin-traceability analysis (Fig. 6 analogue)
   checkpoint_repair  repair-from-checkpoint policy (answers §5.2)
 """

@@ -10,6 +10,11 @@ This is only available at pytree granularity (the reference must be resident
 or fetchable); the in-kernel fused path uses the cheap statistical policies
 and this pass covers anything they mis-estimate, at checkpoint-load and
 periodic-scrub boundaries.
+
+Runtime entry point: ``repro.runtime.ApproxSpace.scrub_with_reference``
+(README §Policies) — it supplies the cached region tree and folds the event
+counts into the unified stats stream; the function below is the underlying
+implementation.
 """
 from __future__ import annotations
 

@@ -132,7 +132,7 @@ def is_extreme_bits(bits: jax.Array, dtype, threshold: float) -> jax.Array:
     """Lanes with |x| ≥ threshold — including ±Inf and NaN — via a single
     integer compare on the exponent field.
 
-    Beyond-paper extension (recorded in DESIGN.md): a bit flip on a high
+    Beyond-paper extension (README §Config): a bit flip on a high
     exponent bit produces ~1e38, which is NOT a NaN but destroys a training
     run within one step (measured in tests/test_e2e_training.py).  The
     repair machinery therefore optionally treats 'exponent field ≥ that of

@@ -18,6 +18,13 @@ The production-grade fused path (detection folded into the HBM→VMEM tile load
 of matmul/attention) lives in ``repro.kernels``; these jnp-level transforms
 are the mode-faithful reference used by the full-model training/serving steps
 and by the oracles.
+
+.. deprecated::
+    The pytree-level entry points here (``use`` with a config, ``scrub_pytree``,
+    ``inject_pytree``) are thin shims over ``repro.runtime.ApproxSpace`` — the
+    single object that owns regions, repair, injection, and the unified stats
+    stream (README §Runtime / §Migration).  ``repair_tensor`` remains the
+    tensor-level primitive shared by both layers.
 """
 from __future__ import annotations
 
@@ -34,7 +41,7 @@ from . import detect, policies, regions as regions_lib, stats as stats_lib
 class RepairConfig:
     """Config-level switch for the whole repair subsystem.
 
-    ``max_magnitude`` (beyond-paper, DESIGN.md §2): also treat |x| ≥ this
+    ``max_magnitude`` (beyond-paper, README §Config): also treat |x| ≥ this
     value as fatal.  The paper repairs NaN patterns only; a flip on a high
     exponent bit yields ~1e38 — not a NaN, but it NaN-poisons the loss one
     matmul later and destroys training (measured).  None = paper-faithful.
@@ -104,16 +111,17 @@ def use(
     paper's argument for the memory-repairing mechanism).
 
     Returns ``repaired`` (stats is None) or ``(repaired, stats')``.
+
+    Deprecated shim: delegates to ``runtime.ApproxSpace.use`` (pure form).
     """
-    if cfg.mode != "register":
-        return x if stats is None else (x, stats)
-    fixed, n, i = repair_tensor(
-        x, policy=cfg.resolved_policy(), include_inf=cfg.include_inf,
-        max_magnitude=cfg.max_magnitude,
-    )
+    from ..runtime import ApproxSpace  # deferred: runtime builds on us
+
     if stats is None:
+        if cfg.mode != "register":
+            return x
+        fixed, _ = ApproxSpace(cfg).use(x, stats_lib.zeros())
         return fixed
-    return fixed, stats_lib.record_repair(stats, n, i)
+    return ApproxSpace(cfg).use(x, stats)
 
 
 # ---------------------------------------------------------------------------
@@ -133,38 +141,15 @@ def scrub_pytree(
     stored state (functional write-back).  Leaves in the exact region are
     untouched (they are error-free by construction).  Non-float leaves pass
     through.
+
+    Deprecated shim: delegates to ``runtime.scrub_tree`` (the implementation
+    behind ``ApproxSpace.scrub``).
     """
-    if cfg.mode != "memory":
-        return tree, stats
+    from ..runtime import space as runtime_space  # deferred: runtime builds on us
+
     if region_tree is None:
         region_tree = regions_lib.annotate(tree)
-    policy = cfg.resolved_policy()
-
-    nan_tot = jnp.zeros((), jnp.int32)
-    inf_tot = jnp.zeros((), jnp.int32)
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    region_leaves = jax.tree.leaves(region_tree)
-    assert len(leaves) == len(region_leaves), "region tree structure mismatch"
-
-    fixed_leaves = []
-    for leaf, region in zip(leaves, region_leaves):
-        if (
-            region is regions_lib.Region.APPROX
-            and hasattr(leaf, "dtype")
-            and jnp.issubdtype(leaf.dtype, jnp.floating)
-        ):
-            fixed, n, i = repair_tensor(
-                leaf, policy=policy, include_inf=cfg.include_inf,
-                max_magnitude=cfg.max_magnitude,
-            )
-            nan_tot = nan_tot + n
-            inf_tot = inf_tot + i
-            fixed_leaves.append(fixed)
-        else:
-            fixed_leaves.append(leaf)
-
-    out = jax.tree_util.tree_unflatten(treedef, fixed_leaves)
-    return out, stats_lib.record_repair(stats, nan_tot, inf_tot)
+    return runtime_space.scrub_tree(tree, cfg, stats, region_tree)
 
 
 def inject_pytree(
@@ -172,27 +157,16 @@ def inject_pytree(
     key: jax.Array,
     ber: float,
     region_tree: Optional[Any] = None,
-) -> Any:
+) -> Tuple[Any, jax.Array]:
     """Simulation-only: one approximate-memory window of bit flips over the
-    approximate-region leaves.  Not part of the production path."""
-    from . import injection  # local import: simulation dependency only
+    approximate-region leaves.  Not part of the production path.
 
-    if ber <= 0.0:
-        return tree
+    Deprecated shim: delegates to ``runtime.inject_tree``.  Returns
+    ``(flipped_tree, n_flips)`` — the ground-truth flip count feeds the
+    previously-dead ``flips`` stats counter.
+    """
+    from ..runtime import space as runtime_space  # deferred: runtime builds on us
+
     if region_tree is None:
         region_tree = regions_lib.annotate(tree)
-
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    region_leaves = jax.tree.leaves(region_tree)
-    keys = jax.random.split(key, max(len(leaves), 1))
-    out = []
-    for leaf, region, k in zip(leaves, region_leaves, keys):
-        if (
-            region is regions_lib.Region.APPROX
-            and hasattr(leaf, "dtype")
-            and jnp.issubdtype(leaf.dtype, jnp.floating)
-        ):
-            out.append(injection.flip_bits(k, leaf, ber))
-        else:
-            out.append(leaf)
-    return jax.tree_util.tree_unflatten(treedef, out)
+    return runtime_space.inject_tree(tree, key, ber, region_tree)

@@ -49,5 +49,24 @@ def record_flips(s: Stats, n) -> Stats:
     return out
 
 
+def record_kernel_counts(s: Stats, counts) -> Stats:
+    """Fold a Pallas kernel counter vector into the unified stream.
+
+    ``counts`` is the int32[8] layout shared by ``kernels.repair_matmul`` and
+    ``kernels.repair_attention`` (see ``kernels.ops`` re-exports): indices
+    (0, 3) are per-operand NaN lane counts, (1, 4) Inf lane counts, and 6 is
+    the tile-visit event total — the kernel's trap analogue, so it adds to
+    ``events`` directly (one poisoned-tile visit ≈ one SIGFPE in the paper's
+    prototype).
+    """
+    counts = jnp.asarray(counts, jnp.int32)
+    return {
+        "flips": s["flips"],
+        "nan_found": s["nan_found"] + counts[0] + counts[3],
+        "inf_found": s["inf_found"] + counts[1] + counts[4],
+        "events": s["events"] + counts[6],
+    }
+
+
 def as_dict(s: Stats) -> Dict[str, int]:
     return {f: int(s[f]) for f in _FIELDS}

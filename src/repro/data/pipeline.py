@@ -1,6 +1,6 @@
 """Stateless-seeded synthetic data pipeline.
 
-Fault-tolerance property (DESIGN.md §5): the batch for step ``i`` is a pure
+Fault-tolerance property (README §Checkpointing): the batch for step ``i`` is a pure
 function of ``(seed, i)`` — a restarted job resumes from the checkpointed
 step with *no data-state replay* and bit-identical batches.  This is the
 cheapest correct answer to "data pipeline state in checkpoints" at

@@ -4,7 +4,7 @@ Every parameter/cache/activation dimension carries a *logical* axis name
 (nn/module.py ParamDef.axes).  One rules table maps logical names to mesh
 axes; changing the parallelism strategy is a table edit, not a model edit.
 
-Default rules (DESIGN.md §5):
+Default rules (README §Sharding):
 
   batch    → (pod, data)    activations/batch dims: pure DP across pods
   embed    → data           FSDP/ZeRO-3: params + Adam moments sharded over

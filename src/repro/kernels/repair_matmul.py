@@ -1,7 +1,7 @@
 """Tiled MXU matmul with *fused reactive NaN repair* on the operand tiles.
 
 This is the paper's mechanism relocated to where a TPU can afford it
-(DESIGN.md §2).  There is no per-instruction trap on a systolic array, and
+(README §Runtime).  There is no per-instruction trap on a systolic array, and
 post-consumption repair is useless (one NaN operand poisons a whole output
 row — Fig. 1), so detection must happen **pre-consumption, on the operand
 tile the kernel already loaded**:

@@ -64,7 +64,7 @@ DEFAULT_N_MICRO = 4
 
 def rules_for_cell(mesh, cfg: ArchConfig, cell: ShapeCell,
                    n_micro: Optional[int] = None):
-    """Sharding-rule overrides per cell kind (DESIGN.md §5)."""
+    """Sharding-rule overrides per cell kind (README §Sharding)."""
     overrides: Dict[str, object] = {}
     if cell.kind == "decode":
         # The KV cache dominates decode.  Shard its sequence dim over every

@@ -15,11 +15,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from ..core import repair as repair_lib
 from ..core import stats as stats_lib
-from ..core.regions import annotate
 from ..distributed import sharding as sh
 from ..models.base import Model
+from ..runtime import ApproxSpace, ScrubSchedule
 
 
 def build_serve_step(model: Model, *, greedy: bool = True) -> Callable:
@@ -33,14 +32,28 @@ def build_serve_step(model: Model, *, greedy: bool = True) -> Callable:
     return serve_step
 
 
-def scrub_cache(model: Model, cache, stats=None):
-    """Memory-repairing mechanism over the decode cache (one-shot)."""
+def scrub_cache(model: Model, cache, stats=None, space: Optional[ApproxSpace] = None):
+    """Memory-repairing mechanism over the decode cache (one-shot).
+
+    Deprecated shim: delegates to a memory-forced ``ApproxSpace.scrub``.
+    """
     stats = stats if stats is not None else stats_lib.zeros()
-    rcfg = model.cfg.repair
-    cfg = repair_lib.RepairConfig(
-        mode="memory", policy=rcfg.policy, include_inf=rcfg.include_inf
+    space = space or serve_space(model)
+    return space.scrub(cache, stats)
+
+
+def serve_space(model: Model, scrub_every: int = 0) -> ApproxSpace:
+    """The serving runtime for ``model``: its repair config, memory-forced
+    scrubbing (a poisoned cache must be repairable even in register-mode
+    runs), and the periodic-scrub cadence."""
+    return ApproxSpace(
+        model.cfg.repair,
+        mode="memory",
+        # NaN/Inf-only for cache scrubs: activations/KV lanes are not O(1)
+        # like weights, so the training-side magnitude clamp does not apply.
+        max_magnitude=None,
+        scrub=ScrubSchedule(boundary=False, interval=scrub_every),
     )
-    return repair_lib.scrub_pytree(cache, cfg, stats, annotate(cache))
 
 
 def serve_shardings(
@@ -99,27 +112,34 @@ def generate(
     max_new: int,
     max_seq: int,
     scrub_every: int = 0,
+    space: Optional[ApproxSpace] = None,
 ) -> Tuple[jax.Array, Dict[str, int]]:
     """CPU-scale greedy generation loop (examples/tests).
 
     Prefill is run token-by-token through serve_step (simple and exercises
     the cache path); production prefill uses model.forward + cache build.
+    One ``ApproxSpace`` owns the run: its scrub schedule drives the periodic
+    cache scrub and its unified stats stream is returned.  Pass ``space`` to
+    accumulate this run's events into a longer-lived runtime (the default
+    space dies with the call).
     """
     B, S0 = prompt.shape
+    space = space or serve_space(model, scrub_every)
     cache = model.init_cache(B, max_seq)
-    step_fn = jax.jit(build_serve_step(model))
+    step_fn = jax.jit(space.wrap_serve_step(build_serve_step(model)))
     stats = stats_lib.zeros()
 
     tokens = prompt
     nxt = prompt[:, :1]
     for t in range(S0 + max_new - 1):
         tok = tokens[:, t : t + 1] if t < S0 else nxt
-        if scrub_every and t % scrub_every == 0:
-            cache, stats = scrub_cache(model, cache, stats)
-        nxt_flat, _, cache = step_fn(
-            params, cache, {"tokens": tok}, jnp.asarray(t, jnp.int32)
+        if space.config.scrub.due(t):
+            cache, stats = space.scrub(cache, stats)
+        nxt_flat, _, cache, stats = step_fn(
+            params, cache, {"tokens": tok}, jnp.asarray(t, jnp.int32), stats
         )
         nxt = nxt_flat[:, None]
         if t >= S0 - 1:
             tokens = jnp.concatenate([tokens, nxt], axis=1)
+    space.record(stats)
     return tokens, stats_lib.as_dict(stats)

@@ -5,19 +5,21 @@ restartable training loop.
 Step anatomy (memory mode, the paper-faithful default):
 
   1. **step-boundary scrub** of the approximate-region state (params +
-     optimizer moments): the memory-repairing mechanism as a functional
-     write-back — the scrubbed tree *is* the new resident state, donated
-     buffers make it in-place under jit.  Cost: one detect+select pass over
-     resident state, fully parallel, no HBM traffic beyond what the step
-     reads anyway when fused (kernels/) — the jnp path used for lowering
-     keeps it a separate fused-by-XLA region.
+     optimizer moments), installed by ``ApproxSpace.wrap_train_step``: the
+     memory-repairing mechanism as a functional write-back — the scrubbed
+     tree *is* the new resident state, donated buffers make it in-place
+     under jit.  Cost: one detect+select pass over resident state, fully
+     parallel, no HBM traffic beyond what the step reads anyway when fused
+     (kernels/) — the jnp path used for lowering keeps it a separate
+     fused-by-XLA region.
   2. forward/backward with per-use repair (`register` mode) or clean reads
      (`memory` mode — state was scrubbed at the boundary).
   3. AdamW update (f32 moments, exact-region step counter).
 
 Injection (`ber > 0`) is the *simulation* of approximate memory and runs
 OUTSIDE the production step, exactly as real bit flips would strike between
-steps.
+steps — `ApproxSpace.inject` is that simulation boundary, and it records the
+ground-truth flip count into the unified stats.
 """
 from __future__ import annotations
 
@@ -30,12 +32,11 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig
-from ..core import repair as repair_lib
 from ..core import stats as stats_lib
-from ..core.regions import annotate
 from ..distributed import sharding as sh
 from ..models.base import Model
-from ..optim import AdamW, OptState, cosine_with_warmup
+from ..optim import AdamW, cosine_with_warmup
+from ..runtime import ApproxSpace
 
 
 # ---------------------------------------------------------------------------
@@ -106,9 +107,16 @@ def build_train_step(
     opt: AdamW,
     *,
     n_micro: int = 1,
+    space: Optional[ApproxSpace] = None,
 ) -> Callable:
-    """Returns train_step(state, batch) -> (state, metrics)."""
-    rcfg = model.cfg.repair
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    The step is the raw compute (forward/backward/update) wrapped by
+    ``space.wrap_train_step`` — the boundary scrub (memory-repairing
+    mechanism, write-back of params + optimizer state) is installed by the
+    runtime, not hand-threaded here.
+    """
+    space = space or ApproxSpace(model.cfg.repair)
 
     def loss_fn(params, batch):
         return model.loss(params, batch)
@@ -116,18 +124,7 @@ def build_train_step(
     def train_step(state, batch):
         params, opt_state, stats = state["params"], state["opt"], state["stats"]
 
-        # (1) memory-repairing mechanism at the step boundary
-        if rcfg.mode == "memory":
-            params, stats = repair_lib.scrub_pytree(
-                params, rcfg, stats, annotate(params)
-            )
-            moments = {"mu": opt_state.mu, "nu": opt_state.nu}
-            moments, stats = repair_lib.scrub_pytree(
-                moments, rcfg, stats, annotate(moments)
-            )
-            opt_state = OptState(opt_state.step, moments["mu"], moments["nu"])
-
-        # (2) forward/backward (microbatched)
+        # forward/backward (microbatched)
         if n_micro == 1:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True
@@ -160,12 +157,12 @@ def build_train_step(
             loss = loss_sum / n_micro
             metrics = {"loss": loss}
 
-        # (3) update
+        # update
         new_params, new_opt, opt_metrics = opt.update(grads, opt_state, params)
         new_state = {"params": new_params, "opt": new_opt, "stats": stats}
         return new_state, {**metrics, **opt_metrics}
 
-    return train_step
+    return space.wrap_train_step(train_step)
 
 
 def jit_train_step(
@@ -203,18 +200,23 @@ def jit_train_step(
 # ---------------------------------------------------------------------------
 
 
-def inject_state(state, key: jax.Array, ber: float):
+def inject_state(state, key: jax.Array, ber: float,
+                 space: Optional[ApproxSpace] = None):
     """One approximate-memory window of bit flips over the approx region of
     params + moments (simulation only — production repair path never calls
-    this)."""
-    params = repair_lib.inject_pytree(state["params"], key, ber)
-    k2 = jax.random.fold_in(key, 1)
-    moments = {"mu": state["opt"].mu, "nu": state["opt"].nu}
-    moments = repair_lib.inject_pytree(moments, k2, ber)
+    this).  The ground-truth flip count is recorded into the state's stats
+    stream (``flips`` in the Table-3 analogue)."""
+    space = space or ApproxSpace(ber=ber)
+    resident = {"params": state["params"], "opt": state["opt"]}
+    # record=False: the flip count goes into state["stats"] below — the
+    # train state's stream is the unified one; recording in the space too
+    # would double-count on a later space.record merge.
+    resident, flips = space.inject(resident, key, ber, record=False)
     return {
-        "params": params,
-        "opt": OptState(state["opt"].step, moments["mu"], moments["nu"]),
-        "stats": state["stats"],
+        **state,
+        "params": resident["params"],
+        "opt": resident["opt"],
+        "stats": stats_lib.record_flips(state["stats"], flips),
     }
 
 
@@ -232,15 +234,24 @@ def train_loop(
     checkpoint_every: int = 0,
     log_every: int = 10,
     n_micro: int = 1,
+    space: Optional[ApproxSpace] = None,
 ) -> Tuple[Dict[str, Any], list]:
-    """Restartable CPU-scale loop used by examples/ and e2e tests."""
+    """Restartable CPU-scale loop used by examples/ and e2e tests.
+
+    One ``ApproxSpace`` owns the whole run: the boundary scrub inside the
+    step, the injection window between steps (simulation), and the region
+    cache shared by both.
+    """
+    space = space or ApproxSpace(model.cfg.repair, ber=ber if ber > 0 else None)
     if state is None:
         state = init_train_state(model, opt, key)
-    step_fn = jax.jit(build_train_step(model, opt, n_micro=n_micro))
+    step_fn = jax.jit(build_train_step(model, opt, n_micro=n_micro, space=space))
     history = []
     for i in range(start_step, steps):
         if ber > 0.0:
-            state = inject_state(state, jax.random.fold_in(key, 10_000 + i), ber)
+            state = inject_state(
+                state, jax.random.fold_in(key, 10_000 + i), ber, space
+            )
         state, metrics = step_fn(state, data_fn(i))
         if log_every and (i % log_every == 0 or i == steps - 1):
             history.append(

@@ -4,7 +4,7 @@ The speech frontend is a stub per the assignment: ``input_specs`` provides
 precomputed frame embeddings (B, S_enc, D) directly; the transformer backbone
 (self-attn encoder + causal decoder with cross-attention) is the real system
 under test.  Conformer-specific encoder details (conv modules) are out of
-backbone scope — recorded in DESIGN.md §Arch-applicability.
+backbone scope — recorded in README §Workloads.
 
 Decode state = per-decoder-layer self-attention KV cache (grows with emitted
 tokens) + per-layer cross-attention KV computed once from the encoder output

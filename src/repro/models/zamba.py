@@ -6,7 +6,7 @@ to ``concat(h, emb0)`` (the original embedding is re-injected, Zamba's
 signature trick), alternating between ``n_shared_blocks`` parameter sets;
 each invocation has its own down-projection back to d_model (the paper's
 per-invocation LoRA, simplified to a full per-invocation projection —
-recorded in DESIGN.md).
+recorded in README §Workloads).
 
 Grouped scan: G = n_layers // mamba_per_attn groups of (mamba_per_attn
 Mamba layers + 1 shared-block application), then the remainder layers.
@@ -14,7 +14,7 @@ Keeps HLO flat in depth for the 81-layer config.
 
 Approximate-memory note: the recurrent SSM state is the long-lived decode
 resident; a NaN there poisons *all future tokens* (temporal Fig. 1), so the
-state flows through ``core.repair.use`` like the KV caches (DESIGN.md §4).
+state flows through ``core.repair.use`` like the KV caches (README §Regions).
 """
 from __future__ import annotations
 

@@ -233,7 +233,7 @@ class Attention:
 
 
 # GQA score tensors shard over (batch, kv): a single model axis caps
-# attention-score TP at n_kv ways (DESIGN.md §5; repeat-KV lifts it, §Perf).
+# attention-score TP at n_kv ways (README §Sharding; repeat-KV lifts it).
 _GQA_ACT = ("act_batch", None, "act_seq", None)
 
 

@@ -8,7 +8,7 @@ as stacked einsums; results gather back with combine weights.  Capacity
 overflow drops tokens (their combine weight is masked), standard GShard
 semantics with capacity_factor slack.
 
-Approximate-memory integration (DESIGN.md §4): expert weights are the big,
+Approximate-memory integration (README §Regions): expert weights are the big,
 cold, read-mostly table — a prime approximate-memory resident, protected via
 ``use``.  The **router is pinned to the exact region** (regions.DEFAULT_RULES
 matches the "router" path) and router logits are additionally sanitized

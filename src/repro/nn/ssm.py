@@ -1,6 +1,6 @@
 """Mamba2 block — chunked SSD (state-space dual) formulation.
 
-TPU adaptation note (DESIGN.md §2): the selective-scan CUDA kernel of the
+TPU adaptation note (README §Workloads): the selective-scan CUDA kernel of the
 original Mamba is replaced by the **chunked matmul form** of Mamba2/SSD —
 within-chunk terms are plain einsums (MXU-friendly), cross-chunk state is a
 short ``lax.scan`` over chunk summaries.  This is the TPU-native way to run

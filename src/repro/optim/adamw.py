@@ -1,7 +1,7 @@
 """AdamW with decoupled weight decay, global-norm clipping, and
 ZeRO-compatible state layout.
 
-State design for the approximate-memory setting (DESIGN.md §4):
+State design for the approximate-memory setting (README §Regions):
 
   * moments (mu, nu) mirror the parameter pytree — they inherit the params'
     logical sharding axes, which under the FSDP rules shards them over the
@@ -84,7 +84,7 @@ class AdamW:
             # be ≥ 0, but a sign-bit flip is a *finite* drift error the NaN
             # scrub deliberately leaves alone — and sqrt(negative) NaN-poisons
             # the whole update.  Clamping at the consumer is the register-mode
-            # philosophy applied to an algebraic invariant (DESIGN.md §2).
+            # philosophy applied to an algebraic invariant (README §Config).
             v = b2 * jnp.maximum(v, 0.0) + (1 - b2) * g * g
             mhat = m / c1
             vhat = v / c2

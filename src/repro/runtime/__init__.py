@@ -1,0 +1,25 @@
+"""Approximate-memory runtime — the paper's technique as one coherent
+service (README §Runtime).
+
+  ApproxConfig    one frozen config: repair mode/policy, refresh→BER point,
+                  region rules, scrub schedule
+  ScrubSchedule   when the memory-repairing mechanism runs
+  ApproxSpace     the runtime object owning regions (cached by treedef), the
+                  unified stats stream (incl. Pallas kernel counters), the
+                  paper's two mechanisms (`use`/`scrub`), the simulation
+                  boundary (`inject`), and the train/serve step decorators
+
+The legacy surface (`core.repair.use` / `scrub_pytree` / `inject_pytree`,
+`launch.serve.scrub_cache`) delegates here; new code should construct an
+``ApproxSpace`` directly.
+"""
+from .config import ApproxConfig, ScrubSchedule  # noqa: F401
+from .space import ApproxSpace, inject_tree, scrub_tree  # noqa: F401
+
+__all__ = [
+    "ApproxConfig",
+    "ApproxSpace",
+    "ScrubSchedule",
+    "inject_tree",
+    "scrub_tree",
+]

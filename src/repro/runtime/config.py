@@ -1,0 +1,137 @@
+"""`ApproxConfig` — the single frozen configuration of the approximate-memory
+runtime.
+
+The paper's deployment has exactly one knob surface: which memory is
+approximate (regions), how broken it is (refresh -> BER), how errors are
+repaired (mode + policy), and when the memory-repairing mechanism runs (the
+scrub schedule).  EDEN and the approximate-computing survey both observe that
+such systems live or die by keeping this a *single* coherent configuration;
+previously ours was scattered over `core.repair.RepairConfig`,
+`core.injection.ApproxMemoryModel`, ad-hoc region rules, and per-call-site
+scrub cadences.  `ApproxConfig` merges all four.
+
+`ApproxConfig` is attribute-compatible with the legacy `RepairConfig`
+(`mode` / `policy` / `include_inf` / `max_magnitude`), so every consumer that
+only reads those fields (`nn/layers.py`, `core.repair.use`, model configs)
+accepts either object unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+from ..core import injection as injection_lib
+from ..core import policies as policies_lib
+from ..core import regions as regions_lib
+
+_MODES = ("off", "register", "memory")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScrubSchedule:
+    """When the memory-repairing mechanism runs.
+
+    boundary   scrub resident state at every step boundary (the paper's
+               write-back point for training; README §Scrub schedule)
+    interval   additionally scrub every ``interval`` steps/tokens (serving
+               cadence; 0 disables the periodic pass)
+    """
+
+    boundary: bool = True
+    interval: int = 0
+
+    def due(self, t: int) -> bool:
+        """Host-side periodic-scrub predicate for step/token counter ``t``."""
+        return bool(self.interval) and t % self.interval == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxConfig:
+    """One frozen config owning repair, injection, regions, and scheduling.
+
+    Repair (legacy ``RepairConfig`` fields, attribute-compatible):
+      mode             "off" | "register" | "memory"
+      policy           repair-value policy (name | float | RepairPolicy)
+      include_inf      treat ±Inf as fatal too
+      max_magnitude    beyond-paper extension (README §Config): also treat
+                       |x| ≥ threshold as fatal — required for training
+                       under sustained BER
+
+    Approximate-memory model (simulation boundary):
+      refresh_interval_s   the refresh-relaxation point; resolves to a BER
+                           and an energy saving via the literature anchors
+                           in ``core.injection``
+      ber                  explicit BER override (None -> from refresh)
+
+    Regions:
+      region_rules     ordered (regex, Region) rules partitioning state
+                       pytrees into exact/approximate memory
+
+    Schedule:
+      scrub            when the memory-repairing mechanism runs
+    """
+
+    mode: str = "memory"
+    policy: Any = "neighbor_mean"
+    include_inf: bool = True
+    max_magnitude: Optional[float] = None
+
+    refresh_interval_s: float = 1.0            # Flikker point (BER ~1e-6)
+    ber: Optional[float] = None
+
+    region_rules: Tuple[Tuple[str, regions_lib.Region], ...] = (
+        regions_lib.DEFAULT_RULES
+    )
+    scrub: ScrubSchedule = ScrubSchedule()
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"bad repair mode {self.mode!r}")
+
+    # ------------------------------------------------------------- resolution
+    def resolved_policy(self) -> policies_lib.RepairPolicy:
+        return policies_lib.get(self.policy)
+
+    @property
+    def memory_model(self) -> injection_lib.ApproxMemoryModel:
+        """The refresh/BER/energy point this config simulates."""
+        return injection_lib.ApproxMemoryModel.from_refresh(
+            self.refresh_interval_s
+        )
+
+    @property
+    def resolved_ber(self) -> float:
+        return self.ber if self.ber is not None else self.memory_model.ber
+
+    # ------------------------------------------------------------ conversion
+    @staticmethod
+    def from_legacy(cfg: Any, **overrides) -> "ApproxConfig":
+        """Lift a legacy ``RepairConfig`` (or any object with its four
+        fields, including an ``ApproxConfig``) into an ``ApproxConfig``."""
+        if isinstance(cfg, ApproxConfig):
+            return dataclasses.replace(cfg, **overrides) if overrides else cfg
+        fields = dict(
+            mode=cfg.mode,
+            policy=cfg.policy,
+            include_inf=cfg.include_inf,
+            max_magnitude=getattr(cfg, "max_magnitude", None),
+        )
+        fields.update(overrides)
+        return ApproxConfig(**fields)
+
+    def legacy(self):
+        """The equivalent legacy ``RepairConfig`` (for shim delegation)."""
+        from ..core.repair import RepairConfig  # deferred: repair shims us
+
+        return RepairConfig(
+            mode=self.mode,
+            policy=self.policy,
+            include_inf=self.include_inf,
+            max_magnitude=self.max_magnitude,
+        )
+
+    def memory_forced(self) -> "ApproxConfig":
+        """Same config with mode pinned to "memory" — the save-scrub and
+        cache-scrub paths always run the memory-repairing mechanism even
+        when the run itself is register-mode or off."""
+        return dataclasses.replace(self, mode="memory")

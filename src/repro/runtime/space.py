@@ -1,0 +1,355 @@
+"""`ApproxSpace` — the single runtime object owning approximate memory.
+
+One `ApproxSpace` owns everything the paper's runtime service needs across
+train / serve / checkpoint:
+
+  * **regions** — the exact/approximate partition of every state pytree it
+    has seen, cached by treedef (region classification is a pure function of
+    tree structure, so it is computed once per structure, not once per call);
+  * **stats** — one unified event stream (`core.stats`), including the Pallas
+    kernel counter vectors (`kernels.ops.MM_*` / `AT_*`), so fused-kernel
+    repairs land in the same Table-3 analogue as the jnp-level mechanisms;
+  * **the paper's two mechanisms** — `use(x)` (register mode, §3.3: repair at
+    every consumption) and `scrub(tree)` (memory mode, §3.4: repair once at
+    the origin, functional write-back);
+  * **the simulation boundary** — `inject(tree, key)` is the only entry point
+    through which simulated bit flips reach runtime state, and it returns /
+    records the ground-truth flip count;
+  * **step decorators** — `wrap_train_step` / `wrap_serve_step` install the
+    boundary scrub so launch builders stay thin.
+
+Functional/stateful split: every mechanism has a pure form (pass `stats`,
+get `(value, stats')` back — safe under jit, this is what the step wrappers
+use) and a convenience form (omit `stats`; the event deltas accumulate into
+the space's host-side `self.stats`).  Never use the convenience form inside
+a jitted function — it would capture tracers.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import detect, injection as injection_lib
+from ..core import regions as regions_lib
+from ..core import stats as stats_lib
+from .config import ApproxConfig, ScrubSchedule
+
+__all__ = ["ApproxSpace", "scrub_tree", "inject_tree", "use_tensor"]
+
+
+def _is_approx_float(leaf, region) -> bool:
+    return (
+        region is regions_lib.Region.APPROX
+        and hasattr(leaf, "dtype")
+        and jnp.issubdtype(leaf.dtype, jnp.floating)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level mechanism implementations (the legacy core.repair pytree
+# functions are thin shims over these).
+# ---------------------------------------------------------------------------
+
+
+def scrub_tree(
+    tree: Any,
+    cfg: Any,                       # ApproxConfig or legacy RepairConfig
+    stats: stats_lib.Stats,
+    region_tree: Any,
+) -> Tuple[Any, stats_lib.Stats]:
+    """Memory-mode repair of every approximate-region float leaf of ``tree``.
+
+    The returned tree *replaces* the resident state (functional write-back;
+    in-place under jit with donated buffers).  Exact-region and non-float
+    leaves pass through untouched.  No-op outside memory mode.
+    """
+    from ..core.repair import repair_tensor  # deferred: repair shims us
+
+    if cfg.mode != "memory":
+        return tree, stats
+    policy = cfg.resolved_policy()
+
+    nan_tot = jnp.zeros((), jnp.int32)
+    inf_tot = jnp.zeros((), jnp.int32)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    region_leaves = jax.tree.leaves(region_tree)
+    assert len(leaves) == len(region_leaves), "region tree structure mismatch"
+
+    fixed_leaves = []
+    for leaf, region in zip(leaves, region_leaves):
+        if _is_approx_float(leaf, region):
+            fixed, n, i = repair_tensor(
+                leaf, policy=policy, include_inf=cfg.include_inf,
+                max_magnitude=cfg.max_magnitude,
+            )
+            nan_tot = nan_tot + n
+            inf_tot = inf_tot + i
+            fixed_leaves.append(fixed)
+        else:
+            fixed_leaves.append(leaf)
+
+    out = jax.tree_util.tree_unflatten(treedef, fixed_leaves)
+    return out, stats_lib.record_repair(stats, nan_tot, inf_tot)
+
+
+def use_tensor(
+    x: jax.Array,
+    cfg: Any,                       # ApproxConfig or legacy RepairConfig
+    stats: stats_lib.Stats,
+) -> Tuple[jax.Array, stats_lib.Stats]:
+    """Register-mode read (§3.3): repair at the consumption site.
+
+    Identity outside register mode (memory mode relies on the scrubbed
+    buffer, so per-use work would be pure overhead — exactly the paper's
+    argument for the memory-repairing mechanism).  Pure; safe under jit.
+    """
+    from ..core.repair import repair_tensor  # deferred: repair shims us
+
+    if cfg.mode != "register":
+        return x, stats
+    fixed, n, i = repair_tensor(
+        x,
+        policy=cfg.resolved_policy(),
+        include_inf=cfg.include_inf,
+        max_magnitude=cfg.max_magnitude,
+    )
+    return fixed, stats_lib.record_repair(stats, n, i)
+
+
+def _leaf_flip_count(before: jax.Array, after: jax.Array) -> jax.Array:
+    """Ground-truth bits-flipped between two same-shape float arrays."""
+    delta = detect.bits_of(before) ^ detect.bits_of(after)
+    return jnp.sum(
+        jax.lax.population_count(delta).astype(jnp.int32)
+    )
+
+
+def inject_tree(
+    tree: Any,
+    key: jax.Array,
+    ber: float,
+    region_tree: Any,
+) -> Tuple[Any, jax.Array]:
+    """One approximate-memory window of bit flips over the approximate-region
+    leaves (simulation only).  Returns ``(flipped_tree, n_flips)`` where
+    ``n_flips`` is the ground-truth number of bits that actually changed
+    (collisions fold by XOR, exactly as two physical flips would)."""
+    zero = jnp.zeros((), jnp.int32)
+    if ber <= 0.0:
+        return tree, zero
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    region_leaves = jax.tree.leaves(region_tree)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    flips = zero
+    for leaf, region, k in zip(leaves, region_leaves, keys):
+        if _is_approx_float(leaf, region):
+            flipped = injection_lib.flip_bits(k, leaf, ber)
+            flips = flips + _leaf_flip_count(leaf, flipped)
+            out.append(flipped)
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out), flips
+
+
+# ---------------------------------------------------------------------------
+# The space.
+# ---------------------------------------------------------------------------
+
+
+class ApproxSpace:
+    """The runtime service over one approximate-memory deployment.
+
+    Construct from an ``ApproxConfig``, a legacy ``RepairConfig``, or field
+    overrides::
+
+        space = ApproxSpace(ApproxConfig(mode="memory", policy="zero"))
+        space = ApproxSpace(model.cfg.repair)          # legacy lift
+        space = ApproxSpace(mode="register")           # field shorthand
+    """
+
+    def __init__(self, config: Any = None, **overrides):
+        if config is None:
+            config = ApproxConfig(**overrides)
+        else:
+            config = ApproxConfig.from_legacy(config, **overrides)
+        self.config: ApproxConfig = config
+        self.stats: stats_lib.Stats = stats_lib.zeros()
+        self._region_cache: Dict[Any, Any] = {}
+
+    # ---------------------------------------------------------------- regions
+    def regions_for(self, tree: Any) -> Any:
+        """Region pytree for ``tree``, cached by treedef.
+
+        Region classification depends only on tree *structure* (key paths),
+        so equal treedefs share one cached region tree — `annotate` no longer
+        reruns per step build or per scrub call.
+        """
+        treedef = jax.tree_util.tree_structure(tree)
+        hit = self._region_cache.get(treedef)
+        if hit is None:
+            hit = regions_lib.annotate(tree, self.config.region_rules)
+            self._region_cache[treedef] = hit
+        return hit
+
+    def region_bytes(self, tree: Any) -> Tuple[int, int]:
+        """(approx_bytes, exact_bytes) of ``tree`` under this space's rules."""
+        return regions_lib.count_bytes(tree, self.regions_for(tree))
+
+    # ------------------------------------------------------------ mechanisms
+    def use(self, x: jax.Array, stats: Optional[stats_lib.Stats] = None):
+        """Register-mode read (§3.3): repair at the consumption site.
+
+        Identity outside register mode.  Pure form with ``stats``; the
+        convenience form records into ``self.stats`` (host-side only).
+        """
+        if stats is not None:
+            return use_tensor(x, self.config, stats)
+        if self.config.mode != "register":
+            return x
+        fixed, self.stats = use_tensor(x, self.config, self.stats)
+        return fixed
+
+    def scrub(self, tree: Any, stats: Optional[stats_lib.Stats] = None):
+        """Memory-mode repair + functional write-back (§3.4).
+
+        Pure form with ``stats``; the convenience form records into
+        ``self.stats`` (host-side only).
+        """
+        out, delta_stats = scrub_tree(
+            tree,
+            self.config,
+            stats if stats is not None else stats_lib.zeros(),
+            self.regions_for(tree),
+        )
+        if stats is None:
+            self.stats = stats_lib.merge(self.stats, delta_stats)
+            return out
+        return out, delta_stats
+
+    def scrub_with_reference(
+        self,
+        tree: Any,
+        ref_tree: Any,
+        stats: Optional[stats_lib.Stats] = None,
+    ):
+        """``last_checkpoint`` repair (README §Policies): replace fatal lanes
+        of approximate-region leaves with values from ``ref_tree`` (e.g. the
+        latest checkpoint) — exact restoration for frozen weights."""
+        from ..core import checkpoint_repair  # deferred: it imports core pkg
+
+        out, delta_stats = checkpoint_repair.scrub_with_reference(
+            tree,
+            ref_tree,
+            stats if stats is not None else stats_lib.zeros(),
+            self.regions_for(tree),
+            include_inf=self.config.include_inf,
+        )
+        if stats is None:
+            self.stats = stats_lib.merge(self.stats, delta_stats)
+            return out
+        return out, delta_stats
+
+    # ------------------------------------------------------------- injection
+    def inject(
+        self,
+        tree: Any,
+        key: jax.Array,
+        ber: Optional[float] = None,
+        *,
+        record: bool = True,
+    ) -> Tuple[Any, jax.Array]:
+        """Simulation boundary: one approximate-memory window of bit flips
+        over the approximate region of ``tree``.
+
+        ``ber`` defaults to the config's refresh-model BER.  Returns
+        ``(flipped_tree, n_flips)`` and records the ground-truth flip count
+        into the unified stats (the previously-dead ``flips`` counter).
+        Pass ``record=False`` when the caller threads ``n_flips`` into its
+        own stats stream (e.g. the train state's) — recording in both would
+        double-count on a later ``space.record`` merge.  Host-side only —
+        injection runs *between* production steps, exactly as physical
+        flips would.
+        """
+        ber = self.config.resolved_ber if ber is None else ber
+        out, flips = inject_tree(tree, key, ber, self.regions_for(tree))
+        if record:
+            self.stats = stats_lib.record_flips(self.stats, flips)
+        return out, flips
+
+    # ----------------------------------------------------------------- stats
+    def record(self, delta: stats_lib.Stats) -> stats_lib.Stats:
+        """Merge a functional stats delta (e.g. from a wrapped step) into the
+        unified stream.  Returns the updated totals."""
+        self.stats = stats_lib.merge(self.stats, delta)
+        return self.stats
+
+    def record_kernel(self, counts: jax.Array) -> stats_lib.Stats:
+        """Fold a Pallas kernel counter vector (``kernels.ops`` int32[8]
+        ``MM_*``/``AT_*`` layout) into the unified stream — fused-kernel
+        repair events finally reach the Table-3 analogue."""
+        self.stats = stats_lib.record_kernel_counts(self.stats, counts)
+        return self.stats
+
+    def stats_dict(self) -> Dict[str, int]:
+        return stats_lib.as_dict(self.stats)
+
+    def reset_stats(self) -> None:
+        self.stats = stats_lib.zeros()
+
+    # ------------------------------------------------------ step decorators
+    def wrap_train_step(self, fn: Callable) -> Callable:
+        """Install the boundary scrub around a raw train step.
+
+        ``fn(state, batch) -> (state, metrics)`` is the pure compute step
+        over the canonical train state ``{"params", "opt", "stats", ...}``.
+        In memory mode (with boundary scrubbing scheduled) the wrapper scrubs
+        params + optimizer state in one pass at the step boundary — the
+        memory-repairing write-back — threading the event counters through
+        ``state["stats"]``.  The wrapped step stays pure/jittable.
+
+        Event semantics: one boundary scrub == at most one ``events``
+        increment per step, even when both a param and a moment lane were
+        fatal (the pre-runtime code ran two scrub passes and could count
+        two).  ``nan_found``/``inf_found`` lane totals are unchanged.
+        """
+
+        def step(state, batch):
+            if self.config.mode == "memory" and self.config.scrub.boundary:
+                resident = {"params": state["params"], "opt": state["opt"]}
+                resident, stats = self.scrub(resident, state["stats"])
+                state = {
+                    **state,
+                    "params": resident["params"],
+                    "opt": resident["opt"],
+                    "stats": stats,
+                }
+            return fn(state, batch)
+
+        return step
+
+    def wrap_serve_step(self, fn: Callable) -> Callable:
+        """Install the boundary scrub around a raw serve step.
+
+        ``fn(params, cache, batch, pos) -> (*outs, cache)`` with the decode
+        cache as the last output.  The wrapped step takes and returns an
+        explicit stats stream:
+
+            step(params, cache, batch, pos, stats)
+                -> (*outs, cache, stats)
+
+        In memory mode the resident cache is scrubbed at the step boundary
+        (clean reads inside the step); in register mode the model's use-site
+        repairs run inside ``fn`` and the scrub is skipped.
+        """
+
+        def step(params, cache, batch, pos, stats):
+            if self.config.mode == "memory" and self.config.scrub.boundary:
+                cache, stats = self.scrub(cache, stats)
+            out = fn(params, cache, batch, pos)
+            return (*out, stats)
+
+        return step

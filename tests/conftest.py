@@ -6,6 +6,15 @@ assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS",
     "dry-run device-count flag leaked into the test environment"
 )
 
+# Property tests degrade to fixed-example replay where hypothesis cannot be
+# installed (tests/_hypothesis_compat.py); the real package wins when present.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_compat
+
+    _hypothesis_compat.install()
+
 import jax
 
 jax.config.update("jax_enable_x64", False)

@@ -60,7 +60,7 @@ def test_training_without_repair_gets_poisoned():
 
 
 def test_nan_only_repair_is_insufficient_for_training():
-    """Beyond-paper finding (DESIGN.md §2): the paper-faithful NaN/Inf-only
+    """Beyond-paper finding (README §Config): the paper-faithful NaN/Inf-only
     repair does NOT survive sustained-BER training — a high-exponent drift
     value (~1e38, a legal float) explodes the loss before it ever becomes a
     NaN in memory.  The magnitude-clamp extension is what makes the

@@ -1,0 +1,226 @@
+"""The `ApproxSpace` redesign: parity with the legacy surface, region-tree
+caching, kernel-counter unification, and the flips ground-truth counter."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import detect, injection, regions as regions_lib
+from repro.core import repair as repair_lib
+from repro.core import stats as stats_lib
+from repro.kernels import ops
+from repro.runtime import ApproxConfig, ApproxSpace, ScrubSchedule
+
+
+def poisoned_state(seed=0):
+    """A train-state-shaped pytree with NaN/Inf lanes injected into the
+    approximate region."""
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    w = jax.random.normal(k1, (16, 32), jnp.float32)
+    v = jax.random.normal(k2, (64,), jnp.float32)
+    w = injection.inject_nan(k3, w, 2)
+    v = v.at[3].set(jnp.inf)
+    return {
+        "params": {"w": w, "router": {"gate": jnp.ones((4,))}},
+        "moments": {"mu": v},
+        "step": jnp.zeros((), jnp.int32),
+        "rng_key": jnp.zeros((2,), jnp.uint32),
+    }
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("mode", ["memory", "off"])
+@pytest.mark.parametrize("policy", ["zero", "neighbor_mean"])
+def test_scrub_bitwise_parity_with_legacy(mode, policy):
+    """ApproxSpace.scrub == legacy scrub_pytree, bit for bit, in both the
+    active and the no-op mode."""
+    tree = poisoned_state()
+    legacy_cfg = repair_lib.RepairConfig(mode=mode, policy=policy)
+    space = ApproxSpace(ApproxConfig(mode=mode, policy=policy))
+
+    legacy_out, legacy_stats = repair_lib.scrub_pytree(
+        tree, legacy_cfg, stats_lib.zeros()
+    )
+    new_out, new_stats = space.scrub(tree, stats_lib.zeros())
+
+    for a, b in zip(jax.tree.leaves(legacy_out), jax.tree.leaves(new_out)):
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            np.testing.assert_array_equal(
+                np.asarray(detect.bits_of(a)), np.asarray(detect.bits_of(b))
+            )
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert stats_lib.as_dict(legacy_stats) == stats_lib.as_dict(new_stats)
+
+
+@pytest.mark.parametrize("mode", ["register", "memory", "off"])
+def test_use_bitwise_parity_with_legacy(mode):
+    """ApproxSpace.use == legacy use, bit for bit, in all three modes."""
+    x = injection.inject_nan(
+        jax.random.PRNGKey(1),
+        jax.random.normal(jax.random.PRNGKey(0), (32, 32), jnp.float32),
+        3,
+    )
+    legacy_cfg = repair_lib.RepairConfig(mode=mode, policy="neighbor_mean")
+    space = ApproxSpace(legacy_cfg)       # legacy-config lift
+
+    legacy_out, legacy_stats = repair_lib.use(x, legacy_cfg, stats_lib.zeros())
+    new_out, new_stats = space.use(x, stats_lib.zeros())
+    np.testing.assert_array_equal(
+        np.asarray(detect.bits_of(legacy_out)),
+        np.asarray(detect.bits_of(new_out)),
+    )
+    assert stats_lib.as_dict(legacy_stats) == stats_lib.as_dict(new_stats)
+
+
+def test_inject_parity_and_flip_ground_truth():
+    """Same key + BER => bitwise-identical flips through both entry points,
+    and the returned count matches the actually-changed bit count."""
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(5), (128, 128))}
+    key = jax.random.PRNGKey(6)
+    space = ApproxSpace(ApproxConfig(ber=1e-5))
+
+    legacy_out, legacy_flips = repair_lib.inject_pytree(tree, key, 1e-5)
+    new_out, new_flips = space.inject(tree, key, 1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(detect.bits_of(legacy_out["w"])),
+        np.asarray(detect.bits_of(new_out["w"])),
+    )
+    assert int(legacy_flips) == int(new_flips)
+
+    delta = np.asarray(detect.bits_of(tree["w"])) ^ np.asarray(
+        detect.bits_of(new_out["w"])
+    )
+    true_flips = int(np.unpackbits(delta.view(np.uint8)).sum())
+    assert int(new_flips) == true_flips > 0
+    # ...and the space recorded them in the unified stream
+    assert space.stats_dict()["flips"] == true_flips
+
+
+def test_inject_state_records_flips_in_train_stats():
+    """The previously-dead `flips` counter: the train-loop injection window
+    must record ground truth into the state's stats."""
+    from repro.launch.train import inject_state
+
+    state = {
+        "params": {"w": jax.random.normal(jax.random.PRNGKey(0), (256, 256))},
+        "opt": {"mu": jnp.zeros((8,)), "step": jnp.zeros((), jnp.int32)},
+        "stats": stats_lib.zeros(),
+    }
+    out = inject_state(state, jax.random.PRNGKey(1), ber=1e-5)
+    assert int(out["stats"]["flips"]) > 0
+    assert int(out["opt"]["step"]) == 0         # exact region untouched
+
+
+# ------------------------------------------------------------------ caching
+def test_region_tree_cached_by_treedef():
+    """Equal treedefs share one region-tree object; distinct treedefs don't."""
+    space = ApproxSpace()
+    t1 = {"w": jnp.zeros((4, 4)), "step": jnp.zeros((), jnp.int32)}
+    t2 = {"w": jnp.ones((8, 2)), "step": jnp.ones((), jnp.int32)}  # same treedef
+    t3 = {"w": jnp.zeros((4,)), "extra": jnp.zeros((2,))}          # different
+    r1, r2, r3 = space.regions_for(t1), space.regions_for(t2), space.regions_for(t3)
+    assert r1 is r2
+    assert r1 is not r3
+    assert r1["w"] is regions_lib.Region.APPROX
+    assert r1["step"] is regions_lib.Region.EXACT
+
+
+def test_custom_region_rules_flow_through_space():
+    rules = ((r"(^|/)frozen($|/)", regions_lib.Region.EXACT),
+             (r".*", regions_lib.Region.APPROX))
+    space = ApproxSpace(ApproxConfig(region_rules=rules))
+    regions = space.regions_for({"frozen": jnp.zeros((2,)), "w": jnp.zeros((2,))})
+    assert regions["frozen"] is regions_lib.Region.EXACT
+    assert regions["w"] is regions_lib.Region.APPROX
+
+
+# --------------------------------------------------------- kernel counters
+def test_kernel_counters_land_in_unified_stats():
+    """Fused-kernel repair events (Pallas counter vectors) must appear in the
+    core.stats Table-3 analogue through the space."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    a = injection.inject_nan(k3, jax.random.normal(k1, (128, 128)), 1)
+    b = jax.random.normal(k2, (128, 128))
+    space = ApproxSpace(mode="memory", policy="zero")
+
+    res = ops.repair_matmul(a, b, mode="memory", policy="zero",
+                            blocks=(64, 64, 64))
+    space.record_kernel(res.counts)
+    d = space.stats_dict()
+    assert d["events"] == int(res.counts[ops.MM_EV_TOTAL]) > 0
+    assert d["nan_found"] == int(res.counts[ops.MM_NAN_A] + res.counts[ops.MM_NAN_B]) > 0
+
+    # attention counters use the same layout and the same unified mapping
+    q = jax.random.normal(k1, (1, 2, 64, 32))
+    kk = injection.inject_nan(k3, jax.random.normal(k2, (1, 2, 64, 32)), 1)
+    v = jax.random.normal(k2, (1, 2, 64, 32))
+    at = ops.flash_attention(q, kk, v, mode="register", blocks=(32, 32))
+    before = d["events"]
+    space.record_kernel(at.counts)
+    assert space.stats_dict()["events"] == before + int(at.counts[ops.AT_EV_TOTAL])
+
+
+# -------------------------------------------------------- step decorators
+def test_wrap_train_step_installs_boundary_scrub():
+    space = ApproxSpace(ApproxConfig(mode="memory", policy="zero"))
+
+    def raw_step(state, batch):
+        # the raw compute must see already-clean params in memory mode
+        return state, {"finite": jnp.isfinite(state["params"]["w"]).all()}
+
+    step = space.wrap_train_step(raw_step)
+    state = {
+        "params": {"w": jnp.array([1.0, jnp.nan, 3.0])},
+        "opt": {"mu": jnp.array([jnp.inf, 0.0])},
+        "stats": stats_lib.zeros(),
+    }
+    out, metrics = jax.jit(step)(state, {})
+    assert bool(metrics["finite"])
+    assert bool(jnp.isfinite(out["params"]["w"]).all())
+    assert bool(jnp.isfinite(out["opt"]["mu"]).all())
+    assert int(out["stats"]["nan_found"]) == 1
+    assert int(out["stats"]["inf_found"]) == 1
+
+
+def test_wrap_serve_step_threads_stats_and_scrubs_cache():
+    space = ApproxSpace(ApproxConfig(mode="memory", policy="zero",
+                                     scrub=ScrubSchedule(boundary=True)))
+
+    def raw_step(params, cache, batch, pos):
+        return jnp.zeros((1,), jnp.int32), cache
+
+    step = space.wrap_serve_step(raw_step)
+    cache = {"k": jnp.array([jnp.nan, 2.0])}
+    nxt, cache_out, stats = jax.jit(step)(
+        {}, cache, {}, jnp.zeros((), jnp.int32), stats_lib.zeros()
+    )
+    assert bool(jnp.isfinite(cache_out["k"]).all())
+    assert int(stats["nan_found"]) == 1
+
+
+def test_schedule_due():
+    sched = ScrubSchedule(boundary=False, interval=4)
+    assert [t for t in range(9) if sched.due(t)] == [0, 4, 8]
+    assert not ScrubSchedule(interval=0).due(0)
+
+
+# ------------------------------------------------------------- config lift
+def test_config_lift_and_memory_model():
+    legacy = repair_lib.RepairConfig(mode="register", policy=1.5,
+                                     include_inf=False, max_magnitude=9.0)
+    cfg = ApproxConfig.from_legacy(legacy)
+    assert (cfg.mode, cfg.policy, cfg.include_inf, cfg.max_magnitude) == (
+        "register", 1.5, False, 9.0
+    )
+    back = cfg.legacy()
+    assert back == legacy
+    # refresh→BER resolution comes along for free
+    flikker = dataclasses.replace(cfg, refresh_interval_s=1.0)
+    assert abs(flikker.resolved_ber - 1e-6) < 1e-9
+    assert abs(flikker.memory_model.energy_saving - 0.225) < 1e-6
+    with pytest.raises(ValueError):
+        ApproxConfig(mode="bogus")
