@@ -70,7 +70,7 @@ def _scrub(a):
     return fixed
 
 
-def run(sizes=None, reuse=8):
+def run(sizes=None, reuse=8, repeats=None, batches=5):
     rows = []
     for n in sizes or CONFIG.sizes:
         key = jax.random.PRNGKey(n)
@@ -79,20 +79,22 @@ def run(sizes=None, reuse=8):
         b = jax.random.normal(k2, (n, n), jnp.float32)
         a_bad = injection.inject_nan(k3, a, CONFIG.n_injected)
 
-        t_normal = _time(lambda: _mm(a, b)) * reuse
-        t_register = _time(lambda: _mm_register(a_bad, b)) * reuse
+        kw = dict(repeats=repeats, batches=batches)
+        t_normal = _time(lambda: _mm(a, b), **kw) * reuse
+        t_register = _time(lambda: _mm_register(a_bad, b), **kw) * reuse
         a_fixed = _scrub(a_bad)                    # memory repair, once
-        t_scrub = _time(lambda: _scrub(a_bad))
-        t_memory = t_scrub + _time(lambda: _mm(a_fixed, b)) * reuse
+        t_scrub = _time(lambda: _scrub(a_bad), **kw)
+        t_memory = t_scrub + _time(lambda: _mm(a_fixed, b), **kw) * reuse
 
         rows.append((n, t_normal, t_register, t_memory))
     return rows
 
 
-def main():
+def main(smoke: bool = False):
     print("# fig7_overhead: R=8 reuses per buffer; times in ms")
     print("name,us_per_call,derived")
-    for n, t_n, t_r, t_m in run():
+    rows = run(sizes=(64,), reuse=2, repeats=2, batches=1) if smoke else run()
+    for n, t_n, t_r, t_m in rows:
         print(f"fig7_normal_N{n},{t_n*1e6:.1f},baseline")
         print(f"fig7_register_N{n},{t_r*1e6:.1f},overhead={100*(t_r/t_n-1):.1f}%")
         print(f"fig7_memory_N{n},{t_m*1e6:.1f},overhead={100*(t_m/t_n-1):.1f}%")

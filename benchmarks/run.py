@@ -1,16 +1,31 @@
-"""Benchmark harness — one section per paper table/figure + the roofline.
+"""Benchmark harness — one section per paper table/figure + the roofline +
+the serving engine.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--smoke]
 
 Each section prints ``name,us_per_call,derived`` CSV (see the individual
 modules for the exact semantics of the middle column).
+
+``--smoke`` runs every section at tiny shapes with fixed seeds — the CI
+mode (scripts/ci.sh): every section executes end to end on every run, so a
+broken bench fails CI instead of rotting silently.  Sections whose ``main``
+accepts a ``smoke`` kwarg shrink themselves; the rest are already tiny.
 """
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import traceback
 
-from . import energy_model, fig6_provenance, fig7_overhead, roofline, table3_counts
+from . import (
+    energy_model,
+    fig6_provenance,
+    fig7_overhead,
+    roofline,
+    serving_engine,
+    table3_counts,
+)
 
 SECTIONS = (
     ("fig7_overhead (paper Fig. 7)", fig7_overhead.main),
@@ -18,15 +33,26 @@ SECTIONS = (
     ("fig6_provenance (paper Fig. 6)", fig6_provenance.main),
     ("energy_model (paper §2.1)", energy_model.main),
     ("roofline (assignment §Roofline)", roofline.main),
+    ("serving_engine (README §Serving engine)", serving_engine.main),
 )
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny shapes + fixed seeds (CI mode)",
+    )
+    args = ap.parse_args(argv)
+
     failures = 0
     for title, fn in SECTIONS:
         print(f"\n===== {title} =====")
         try:
-            fn()
+            if "smoke" in inspect.signature(fn).parameters:
+                fn(smoke=args.smoke)
+            else:
+                fn()
         except Exception:
             failures += 1
             traceback.print_exc()

@@ -54,9 +54,12 @@ def run(n=256, blocks=(64, 64, 64), reuse=5):
     return per_call_visits, reg_events, mem_events, reg_space, mem_space
 
 
-def main():
-    per_call, reg, mem, reg_space, mem_space = run()
-    n_over_bn = 256 // 64
+def main(smoke: bool = False):
+    n, bn, reuse = (128, 64, 3) if smoke else (256, 64, 5)
+    per_call, reg, mem, reg_space, mem_space = run(
+        n=n, blocks=(bn, bn, bn), reuse=reuse
+    )
+    n_over_bn = n // bn
     print("# table3_counts: repair events per mechanism (kernel counters)")
     print("name,us_per_call,derived")
     print(f"table3_intracall_visits,{per_call},expected={n_over_bn}")

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 suite + example smoke test.
+# CI entry point: tier-1 suite + example smoke test + benchmark smoke run.
 #
 #   bash scripts/ci.sh          # everything
 #   bash scripts/ci.sh tests    # suite only
 #   bash scripts/ci.sh smoke    # examples only
+#   bash scripts/ci.sh bench    # benchmark sections only (--smoke shapes)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -18,6 +19,13 @@ fi
 if [[ "$what" == "all" || "$what" == "smoke" ]]; then
     echo "== smoke: examples/quickstart.py =="
     python examples/quickstart.py
+fi
+
+if [[ "$what" == "all" || "$what" == "bench" ]]; then
+    # every section — incl. the serving-engine bench — executes on every CI
+    # run at tiny shapes with fixed seeds, so broken benches fail loudly
+    echo "== benchmarks (smoke shapes) =="
+    python -m benchmarks.run --smoke
 fi
 
 echo "CI OK"

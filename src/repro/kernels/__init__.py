@@ -15,4 +15,4 @@ All kernels use explicit BlockSpec VMEM tiling and are validated on CPU in
 interpret mode; on TPU they lower natively (default_interpret() switches).
 """
 from . import common, mlstm_chunk, ops, ref  # noqa: F401
-from .ops import flash_attention, repair_matmul, scrub  # noqa: F401
+from .ops import flash_attention, repair_matmul, scrub, scrub_pages  # noqa: F401

@@ -31,6 +31,7 @@ from . import repair_matmul as _rm
 from . import scrub as _scrub
 
 scrub = _scrub.scrub
+scrub_pages = _scrub.scrub_pages
 
 # counter-index re-exports (the package re-exports shadow the submodules)
 MM_NAN_A, MM_INF_A, MM_EV_A = _rm.NAN_A, _rm.INF_A, _rm.EV_A

@@ -118,3 +118,42 @@ def scrub(
         interpret=interpret,
     )(x2)
     return out.reshape(orig_shape), counts
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "constant", "include_inf", "interpret", "block"),
+)
+def scrub_pages(
+    x: jax.Array,
+    page_ids: jax.Array,
+    *,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    interpret: Optional[bool] = None,
+    block: Optional[Tuple[int, int]] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Page-view scrub: repair only rows ``page_ids`` of ``x``'s leading
+    (page) axis.  Gather the pages into one contiguous view, run the scrub
+    kernel over that view, scatter the repaired pages back.  HBM traffic is
+    proportional to the *scrubbed* pages, not the whole buffer.
+
+    This is the kernel-level counterpart of the serving engine's
+    page-granular repair.  The engine's pytree path
+    (``ApproxSpace.scrub_pages``) currently uses the jnp ``repair_tensor``
+    for policy parity with ``scrub_tree``; routing it through this kernel
+    (in-place HBM page writes on TPU) is the natural follow-up once the
+    engine runs fused kernels.
+
+    Returns ``(x', counts)`` with the same int32[3] counts as ``scrub``.
+    Duplicate page ids are idempotent (the repaired rows coincide), but
+    inflate the lane counts — pass unique ids when counts matter.
+    """
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+    rows = x[page_ids]
+    fixed, counts = scrub(
+        rows, policy=policy, constant=constant, include_inf=include_inf,
+        interpret=interpret, block=block,
+    )
+    return x.at[page_ids].set(fixed), counts

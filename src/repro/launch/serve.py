@@ -22,10 +22,19 @@ from ..runtime import ApproxSpace, ScrubSchedule
 
 
 def build_serve_step(model: Model, *, greedy: bool = True) -> Callable:
-    """serve_step(params, cache, batch, pos) -> (next_token, logits, cache)."""
+    """serve_step(params, cache, batch, pos) -> (next_token, logits, cache).
+
+    Dispatches on the (trace-time static) token width: multi-token inputs
+    take the batched prefill path (``model.prefill`` — the whole prompt in
+    one pass), single tokens the decode step.  One builder serves both
+    ``generate`` and the serving engine, so the greedy step cannot drift
+    between them.
+    """
 
     def serve_step(params, cache, batch, pos):
-        logits, new_cache = model.serve_step(params, cache, batch, pos)
+        multi = batch["tokens"].shape[1] > 1
+        fn = model.prefill if multi else model.serve_step
+        logits, new_cache = fn(params, cache, batch, pos)
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         return nxt, logits, new_cache
 
@@ -42,18 +51,40 @@ def scrub_cache(model: Model, cache, stats=None, space: Optional[ApproxSpace] = 
     return space.scrub(cache, stats)
 
 
-def serve_space(model: Model, scrub_every: int = 0) -> ApproxSpace:
+# One serving space per (model config, cadence): the space's treedef-cached
+# region trees survive across calls, so repeated scrub_cache / generate runs
+# never rerun `annotate` (rebuilding a fresh space per call discarded them).
+_SPACE_CACHE: Dict[Any, ApproxSpace] = {}
+
+
+def serve_space(
+    model: Model, scrub_every: int = 0, *, memoize: bool = True
+) -> ApproxSpace:
     """The serving runtime for ``model``: its repair config, memory-forced
     scrubbing (a poisoned cache must be repairable even in register-mode
-    runs), and the periodic-scrub cadence."""
-    return ApproxSpace(
-        model.cfg.repair,
-        mode="memory",
-        # NaN/Inf-only for cache scrubs: activations/KV lanes are not O(1)
-        # like weights, so the training-side magnitude clamp does not apply.
-        max_magnitude=None,
-        scrub=ScrubSchedule(boundary=False, interval=scrub_every),
-    )
+    runs), and the periodic-scrub cadence.  Memoized per (model config,
+    cadence) — callers share one long-lived runtime whose region cache and
+    unified stats stream persist across calls.  ``memoize=False`` returns a
+    private space (the serving engine isolates stats per engine)."""
+    key = (model.cfg, scrub_every) if memoize else None
+    try:
+        space = _SPACE_CACHE.get(key) if key is not None else None
+    except TypeError:           # unhashable custom config — skip memoization
+        key = None
+        space = None
+    if space is None:
+        space = ApproxSpace(
+            model.cfg.repair,
+            mode="memory",
+            # NaN/Inf-only for cache scrubs: activations/KV lanes are not
+            # O(1) like weights, so the training-side magnitude clamp does
+            # not apply.
+            max_magnitude=None,
+            scrub=ScrubSchedule(boundary=False, interval=scrub_every),
+        )
+        if key is not None:
+            _SPACE_CACHE[key] = space
+    return space
 
 
 def serve_shardings(
@@ -113,25 +144,53 @@ def generate(
     max_seq: int,
     scrub_every: int = 0,
     space: Optional[ApproxSpace] = None,
+    paged: bool = False,
+    page_size: int = 16,
 ) -> Tuple[jax.Array, Dict[str, int]]:
     """CPU-scale greedy generation loop (examples/tests).
 
-    Prefill is run token-by-token through serve_step (simple and exercises
-    the cache path); production prefill uses model.forward + cache build.
-    One ``ApproxSpace`` owns the run: its scrub schedule drives the periodic
-    cache scrub and its unified stats stream is returned.  Pass ``space`` to
-    accumulate this run's events into a longer-lived runtime (the default
-    space dies with the call).
+    Prefill is one batched ``model.prefill`` call — the whole prompt in a
+    single pass that populates the cache — for architectures whose decode
+    path is length-generic; recurrent decode cells (xLSTM/SSM) fall back to
+    the token-by-token warmup.  One ``ApproxSpace`` owns the run: its scrub
+    schedule drives the periodic cache scrub and its unified stats stream is
+    returned.  Pass ``space`` to accumulate this run's events into a
+    longer-lived runtime (the default space is memoized per model config).
+
+    ``paged=True`` rebases the run onto the serving engine as its
+    single-request-per-row degenerate case: each prompt row becomes one
+    engine request over a paged KV pool (README §Serving engine).  Requires
+    a paged KV layout (``model.supports_paged_kv``) and uniform greedy
+    decoding, which this loop already assumes.
     """
     B, S0 = prompt.shape
+    if max_new <= 0:
+        return prompt, stats_lib.as_dict(stats_lib.zeros())
+    if paged:
+        return _generate_paged(
+            model, params, prompt, max_new=max_new, max_seq=max_seq,
+            page_size=page_size, scrub_every=scrub_every, space=space,
+        )
     space = space or serve_space(model, scrub_every)
     cache = model.init_cache(B, max_seq)
     step_fn = jax.jit(space.wrap_serve_step(build_serve_step(model)))
     stats = stats_lib.zeros()
 
     tokens = prompt
-    nxt = prompt[:, :1]
-    for t in range(S0 + max_new - 1):
+    if model.supports_batched_prefill:
+        # batched prefill: one pass over the whole prompt, cache populated
+        if space.config.scrub.due(0):
+            cache, stats = space.scrub(cache, stats)
+        nxt_flat, _, cache, stats = step_fn(
+            params, cache, {"tokens": prompt}, jnp.zeros((), jnp.int32), stats
+        )
+        nxt = nxt_flat[:, None]
+        tokens = jnp.concatenate([tokens, nxt], axis=1)
+        t0 = S0
+    else:
+        t0 = 0
+        nxt = prompt[:, :1]
+    for t in range(t0, S0 + max_new - 1):
         tok = tokens[:, t : t + 1] if t < S0 else nxt
         if space.config.scrub.due(t):
             cache, stats = space.scrub(cache, stats)
@@ -143,3 +202,52 @@ def generate(
             tokens = jnp.concatenate([tokens, nxt], axis=1)
     space.record(stats)
     return tokens, stats_lib.as_dict(stats)
+
+
+def _generate_paged(
+    model: Model,
+    params,
+    prompt: jax.Array,
+    *,
+    max_new: int,
+    max_seq: int,
+    page_size: int,
+    scrub_every: int = 0,
+    space: Optional[ApproxSpace] = None,
+) -> Tuple[jax.Array, Dict[str, int]]:
+    """``generate`` rebased onto the serving engine (one request per prompt
+    row, pool sized so nothing ever waits — the degenerate case).
+
+    ``scrub_every`` becomes the engine's background sweep cadence with a
+    whole-pool sweep window — the same "additionally scrub every k steps"
+    semantics as the contiguous loop.  A caller-provided ``space`` receives
+    the run's unified stats, keeping the longer-lived-runtime contract.
+    """
+    from ..serving import Engine, ServingConfig  # deferred: serving imports us
+
+    B, S0 = prompt.shape
+    page_size = min(page_size, max_seq)
+    while max_seq % page_size:
+        page_size -= 1
+    pages_per_req = max_seq // page_size
+    n_pages = B * pages_per_req
+    eng = Engine(
+        model,
+        params,
+        ServingConfig(
+            page_size=page_size,
+            n_pages=n_pages,
+            max_batch=B,
+            max_pages_per_request=pages_per_req,
+            sweep_interval=scrub_every,
+            sweep_pages=n_pages,
+        ),
+    )
+    rids = [eng.add_request(prompt[b], max_new=max_new) for b in range(B)]
+    results = eng.run()
+    if space is not None:
+        space.record(eng.unified_stats())
+    out = jnp.asarray(
+        [results[rid]["tokens"] for rid in rids], jnp.int32
+    )
+    return out, eng.stats_dict()

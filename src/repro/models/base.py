@@ -55,6 +55,40 @@ class Model:
     def cache_defs(self, batch: int, max_seq: int):
         raise NotImplementedError
 
+    def paged_cache_defs(self, n_pages: int, page_size: int):
+        """Paged decode-state defs: same treedef as ``cache_defs`` but every
+        leaf has a LEADING page axis — ``(n_pages, ..., page_size, ...)``
+        physical pages indexed by a block table (README §Serving engine).
+        Architectures with constant-size recurrent state (SSM/xLSTM) have no
+        meaningful paging unit and leave this unimplemented."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no paged KV layout"
+        )
+
+    @property
+    def supports_paged_kv(self) -> bool:
+        """Whether this architecture can serve from a paged KV pool."""
+        try:
+            self.paged_cache_defs(1, 1)
+            return True
+        except NotImplementedError:
+            return False
+
+    # Whether serve_step accepts multi-token inputs (B, S>1) — the batched
+    # prefill path.  Recurrent decode cells consume strictly one token.
+    supports_batched_prefill: bool = False
+
+    def prefill(self, params, cache, batch, pos):
+        """Single batched prefill: consume all S prompt tokens in one call,
+        populating cache positions ``pos .. pos+S-1`` and returning the
+        full-sequence logits (one forward pass through the decode path —
+        the production prefill, replacing token-by-token cache warmup)."""
+        if not self.supports_batched_prefill:
+            raise NotImplementedError(
+                f"{type(self).__name__} decodes strictly token-by-token"
+            )
+        return self.serve_step(params, cache, batch, pos)
+
     def init_cache(self, batch: int, max_seq: int, key=None):
         key = key if key is not None else jax.random.PRNGKey(0)
         return module.init_params(self.cache_defs(batch, max_seq), key)

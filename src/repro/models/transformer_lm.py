@@ -98,6 +98,17 @@ class TransformerLM(Model):
             )
         }
 
+    # The decode path is length-generic (attention masks per query position),
+    # so one serve_step call with the whole prompt is a valid batched prefill.
+    supports_batched_prefill: bool = True
+
+    def paged_cache_defs(self, n_pages: int, page_size: int):
+        return {
+            "layers": self.attn.paged_cache_defs(
+                n_pages, page_size, self.cfg.n_layers
+            )
+        }
+
     # --------------------------------------------------------------- forward
     _ACT = ("act_batch", "act_seq", "act_embed")
 
@@ -167,7 +178,9 @@ class TransformerLM(Model):
 
     # ---------------------------------------------------------------- decode
     def serve_step(self, params, cache, batch, pos):
-        """One decode step.  batch["tokens"]: (B, 1); pos: scalar i32."""
+        """One decode step.  batch["tokens"]: (B, S) — S==1 for decode, S>1
+        for batched (chunked) prefill; pos: i32 scalar or (B,) per-request
+        write positions (continuous batching mixes request progress)."""
         h = self.embed(params["embed"], batch["tokens"])
 
         def body(h, xs):

@@ -162,45 +162,63 @@ class Attention:
             "v": ParamDef(shape, self.dtype, ini.zeros, axes),
         }
 
+    def paged_cache_defs(self, n_pages: int, page_size: int, n_layers: int = 1):
+        """Paged KV layout: the pool is a block-table-indexed array of
+        fixed-size pages, page axis LEADING so one page is one contiguous
+        row — the unit of region accounting, BER injection, and targeted
+        scrubbing in the serving engine (README §Serving engine).  A page
+        holds ``page_size`` token positions across all ``n_layers`` layers."""
+        K, Dh = self.n_kv, self.head_dim
+        shape = (n_pages, n_layers, page_size, K, Dh)
+        axes = ("kv_pages", None, "kv_seq", "kv", None)
+        return {
+            "k": ParamDef(shape, self.dtype, ini.zeros, axes),
+            "v": ParamDef(shape, self.dtype, ini.zeros, axes),
+        }
+
     def decode(
         self,
         p,
-        x: jax.Array,        # (B, 1, D) current-token hidden
+        x: jax.Array,        # (B, S, D) hidden; S==1 decode, S>1 chunked prefill
         cache,               # {"k","v"}: (B, S_max, K, Dh)
-        pos: jax.Array,      # scalar int32 — current position (uniform batch)
+        pos: jax.Array,      # i32 write position: scalar (uniform batch) or (B,)
         *,
         update_cache: bool = True,
     ):
-        B = x.shape[0]
+        B, S = x.shape[:2]
         q, k_new, v_new = self._qkv(p, x)
-        pos_arr = jnp.broadcast_to(pos, (B, 1))
+        pos = jnp.asarray(pos, jnp.int32)
+        start = jnp.broadcast_to(pos.reshape(-1), (B,))      # (B,) per-request
+        pos_arr = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
         q, k_new = self._rope(q, k_new, pos_arr, pos_arr)
 
         ck = use(cache["k"], self.rcfg)
         cv = use(cache["v"], self.rcfg)
         if update_cache:
-            ck = jax.lax.dynamic_update_slice(
-                ck, k_new.astype(ck.dtype), (0, pos.astype(jnp.int32), 0, 0)
-            )
-            cv = jax.lax.dynamic_update_slice(
-                cv, v_new.astype(cv.dtype), (0, pos.astype(jnp.int32), 0, 0)
-            )
+            def upd(c, new, s):          # (T,K,Dh), (S,K,Dh), scalar
+                return jax.lax.dynamic_update_slice(
+                    c, new.astype(c.dtype), (s, 0, 0)
+                )
+            ck = jax.vmap(upd)(ck, k_new, start)
+            cv = jax.vmap(upd)(cv, v_new, start)
 
         G = self.groups
         K, Dh = self.n_kv, self.head_dim
-        qg = q.reshape(B, 1, K, G, Dh)
+        qg = q.reshape(B, S, K, G, Dh)
         scores = jnp.einsum(
             "bqkgd,btkd->bkgqt", qg, ck, preferred_element_type=jnp.float32
         ) / math.sqrt(Dh)
         t = jnp.arange(ck.shape[1])
-        valid = (t <= pos)[None, None, None, None, :]
+        # query s may attend to cache positions t <= start + s (causal within
+        # the new chunk, everything before it unconditionally)
+        valid = t[None, None, None, None, :] <= pos_arr[:, None, None, :, None]
         scores = jnp.where(valid, scores, NEG_INF)
         w = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum(
             "bkgqt,btkd->bqkgd", w.astype(cv.dtype), cv,
             preferred_element_type=jnp.float32,
         ).astype(self.dtype)
-        ctx = ctx.reshape(B, 1, self.n_heads, Dh)
+        ctx = ctx.reshape(B, S, self.n_heads, Dh)
         out = self._out(p, ctx)
         return out, {"k": ck, "v": cv}
 

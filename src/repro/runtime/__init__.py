@@ -14,12 +14,18 @@ The legacy surface (`core.repair.use` / `scrub_pytree` / `inject_pytree`,
 ``ApproxSpace`` directly.
 """
 from .config import ApproxConfig, ScrubSchedule  # noqa: F401
-from .space import ApproxSpace, inject_tree, scrub_tree  # noqa: F401
+from .space import (  # noqa: F401
+    ApproxSpace,
+    inject_tree,
+    scrub_pages_tree,
+    scrub_tree,
+)
 
 __all__ = [
     "ApproxConfig",
     "ApproxSpace",
     "ScrubSchedule",
     "inject_tree",
+    "scrub_pages_tree",
     "scrub_tree",
 ]

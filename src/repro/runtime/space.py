@@ -36,7 +36,10 @@ from ..core import regions as regions_lib
 from ..core import stats as stats_lib
 from .config import ApproxConfig, ScrubSchedule
 
-__all__ = ["ApproxSpace", "scrub_tree", "inject_tree", "use_tensor"]
+__all__ = [
+    "ApproxSpace", "scrub_tree", "scrub_pages_tree", "inject_tree",
+    "use_tensor",
+]
 
 
 def _is_approx_float(leaf, region) -> bool:
@@ -87,6 +90,54 @@ def scrub_tree(
             nan_tot = nan_tot + n
             inf_tot = inf_tot + i
             fixed_leaves.append(fixed)
+        else:
+            fixed_leaves.append(leaf)
+
+    out = jax.tree_util.tree_unflatten(treedef, fixed_leaves)
+    return out, stats_lib.record_repair(stats, nan_tot, inf_tot)
+
+
+def scrub_pages_tree(
+    tree: Any,
+    page_ids: jax.Array,            # i32[n] rows of the leading (page) axis
+    cfg: Any,                       # ApproxConfig or legacy RepairConfig
+    stats: stats_lib.Stats,
+    region_tree: Any,
+) -> Tuple[Any, stats_lib.Stats]:
+    """Targeted memory-mode repair: only rows ``page_ids`` along the LEADING
+    axis of every approximate-region float leaf are repaired and written back
+    (functional ``.at[pages].set``).  This is the page-granular half of the
+    paper's reactive design — scrub exactly the pages that faulted instead of
+    the whole resident tree.  Duplicate page ids are idempotent (the same
+    repaired rows are written twice).  No-op outside memory mode.
+
+    The caller guarantees every approximate float leaf shares one leading
+    page axis (the serving KV pool layout, ``Model.paged_cache_defs``).
+    """
+    from ..core.repair import repair_tensor  # deferred: repair shims us
+
+    if cfg.mode != "memory":
+        return tree, stats
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+    policy = cfg.resolved_policy()
+
+    nan_tot = jnp.zeros((), jnp.int32)
+    inf_tot = jnp.zeros((), jnp.int32)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    region_leaves = jax.tree.leaves(region_tree)
+    assert len(leaves) == len(region_leaves), "region tree structure mismatch"
+
+    fixed_leaves = []
+    for leaf, region in zip(leaves, region_leaves):
+        if _is_approx_float(leaf, region):
+            rows = leaf[page_ids]
+            fixed, n, i = repair_tensor(
+                rows, policy=policy, include_inf=cfg.include_inf,
+                max_magnitude=cfg.max_magnitude,
+            )
+            nan_tot = nan_tot + n
+            inf_tot = inf_tot + i
+            fixed_leaves.append(leaf.at[page_ids].set(fixed.astype(leaf.dtype)))
         else:
             fixed_leaves.append(leaf)
 
@@ -221,6 +272,29 @@ class ApproxSpace:
         """
         out, delta_stats = scrub_tree(
             tree,
+            self.config,
+            stats if stats is not None else stats_lib.zeros(),
+            self.regions_for(tree),
+        )
+        if stats is None:
+            self.stats = stats_lib.merge(self.stats, delta_stats)
+            return out
+        return out, delta_stats
+
+    def scrub_pages(
+        self,
+        tree: Any,
+        page_ids: Any,
+        stats: Optional[stats_lib.Stats] = None,
+    ):
+        """Targeted memory-mode repair of rows ``page_ids`` along the leading
+        (page) axis of every approximate-region float leaf — the serving
+        engine's page-granular scrub (repair only the pages that faulted,
+        README §Serving engine).  Same pure/convenience split as ``scrub``.
+        """
+        out, delta_stats = scrub_pages_tree(
+            tree,
+            page_ids,
             self.config,
             stats if stats is not None else stats_lib.zeros(),
             self.regions_for(tree),

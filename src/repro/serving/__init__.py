@@ -1,0 +1,33 @@
+"""Serving engine: continuous batching over a paged approximate-memory KV
+pool with page-granular reactive repair (README §Serving engine).
+
+  ServingConfig     pool geometry, batch shape, repair granularity, sweep
+  PagedKVPool       block-table-indexed physical pages, pre-registered with
+                    the owning ApproxSpace; gather/scatter + byte accounting
+  Scheduler         admit -> prefill -> decode -> finish/evict lifecycle,
+                    admission control against free pages, recompute-style
+                    preemption under page pressure
+  PageRepairManager reactive page-granular scrub + kernel-counter routing +
+                    the demoted background sweep
+  Engine            the facade: add_request / step / run, unified stats
+
+The engine is the subsystem later scaling PRs (sharded pools, async decode,
+multi-tenant QoS) build on; ``launch.serve.generate(..., paged=True)`` is
+its single-request degenerate case.
+"""
+from .config import ServingConfig  # noqa: F401
+from .engine import Engine, engine_space  # noqa: F401
+from .pool import PagedKVPool  # noqa: F401
+from .repair import PageRepairManager  # noqa: F401
+from .scheduler import Request, RequestState, Scheduler  # noqa: F401
+
+__all__ = [
+    "Engine",
+    "PagedKVPool",
+    "PageRepairManager",
+    "Request",
+    "RequestState",
+    "Scheduler",
+    "ServingConfig",
+    "engine_space",
+]

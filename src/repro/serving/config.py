@@ -1,0 +1,83 @@
+"""`ServingConfig` — the knob surface of the continuous-batching engine.
+
+One frozen dataclass owns the pool geometry (pages × page size), the batch
+shape (decode slots × block-table width — both static so every decode step
+hits one compiled executable), the repair granularity, the background-sweep
+cadence, and the simulation BER.  README §Serving engine documents each
+field; the invariants below keep the scheduler deadlock-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+_REPAIR_MODES = ("page", "whole", "off")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Pool / scheduler / repair configuration for the serving engine.
+
+    Pool geometry:
+      page_size              tokens per KV page (the repair + accounting unit)
+      n_pages                pool capacity (one extra null page is allocated
+                             internally for block-table padding)
+
+    Batch shape (static — one compiled decode step for the whole run):
+      max_batch              concurrent decode slots
+      max_pages_per_request  block-table width; caps a request's context at
+                             ``max_seq = page_size * max_pages_per_request``
+
+    Repair:
+      repair                 "page"  — scrub only the faulted pages among
+                                       those the step touched (the paper's
+                                       reactive design at page granularity)
+                             "whole" — scrub the entire pool whenever any
+                                       touched page faulted (the pre-engine
+                                       scrub_cache baseline)
+                             "off"   — no repair (zero-BER / oracle runs)
+      sweep_interval         background low-rate sweep cadence in engine
+                             steps (0 disables); catches flips in cold pages
+                             no step touches.  This is the demoted role of
+                             the old whole-cache ``ScrubSchedule``.
+      sweep_pages            pages repaired per background sweep tick
+
+    Simulation:
+      ber                    bit-error rate of one approximate-memory window
+                             (applied to the pool between engine steps;
+                             0 disables injection)
+      seed                   PRNG seed for injection + pool init
+    """
+
+    page_size: int = 16
+    n_pages: int = 64
+    max_batch: int = 8
+    max_pages_per_request: int = 8
+
+    repair: str = "page"
+    sweep_interval: int = 0
+    sweep_pages: int = 4
+
+    ber: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.repair not in _REPAIR_MODES:
+            raise ValueError(f"bad repair granularity {self.repair!r}")
+        if self.page_size < 1 or self.n_pages < 1:
+            raise ValueError("page_size and n_pages must be >= 1")
+        if self.max_pages_per_request > self.n_pages:
+            # a lone request must always be able to make progress — otherwise
+            # preemption has no victim and the scheduler deadlocks
+            raise ValueError(
+                "max_pages_per_request must not exceed n_pages "
+                f"({self.max_pages_per_request} > {self.n_pages})"
+            )
+
+    @property
+    def max_seq(self) -> int:
+        """Per-request context cap implied by the block-table width."""
+        return self.page_size * self.max_pages_per_request
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache positions."""
+        return -(-n_tokens // self.page_size)

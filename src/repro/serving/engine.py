@@ -1,0 +1,277 @@
+"""`Engine` — continuous batching over the paged approximate-memory KV pool.
+
+The facade every later scaling PR (sharded pools, async decode, multi-tenant
+QoS) builds on:
+
+    engine = Engine(model, params, ServingConfig(...))
+    rid = engine.add_request(prompt_ids, max_new=32)
+    while engine.has_work:
+        out = engine.step()          # {"emitted": {rid: [tok]}, "finished"}
+    engine.results[rid]["tokens"]    # prompt + generated
+
+One engine step is: (1) one approximate-memory window strikes the resident
+pool (simulation boundary, ``ber > 0`` only); (2) admission + batched
+prefill of newly admitted requests (one ``Model.prefill`` call each — the
+whole prompt in one pass); (3) the reactive repair pass over exactly the
+pages this step will touch, then one jitted decode step over the static
+slot batch (per-request positions — requests at different depths share the
+executable); (4) the background sweep tick.  All repair/flip/kernel events
+land in the engine's unified stats stream.
+
+Static shapes: the decode batch is always ``(max_batch, 1)`` tokens over
+``(max_batch, max_pages_per_request)`` block tables (empty slots run the
+null page at position 0 and are ignored), so the whole serving run compiles
+exactly one decode executable; prefill compiles one executable per distinct
+prompt length.
+
+``launch.serve.generate(..., paged=True)`` is the single-request degenerate
+case of this engine.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import stats as stats_lib
+from ..launch.serve import build_serve_step, serve_space
+from ..runtime import ApproxSpace
+from .config import ServingConfig
+from .pool import PagedKVPool
+from .repair import PageRepairManager
+from .scheduler import Request, RequestState, Scheduler
+
+
+def engine_space(model: Any) -> ApproxSpace:
+    """The engine's default runtime: the serving space (memory-forced,
+    NaN/Inf-only, no boundary scrub — the page repair manager owns every
+    scrub), but private to this engine so stats streams stay isolated."""
+    return serve_space(model, scrub_every=0, memoize=False)
+
+
+class Engine:
+    """Continuous-batching serving engine (add_request / step / run)."""
+
+    def __init__(
+        self,
+        model: Any,
+        params: Any,
+        cfg: Optional[ServingConfig] = None,
+        space: Optional[ApproxSpace] = None,
+    ):
+        if not model.supports_paged_kv:
+            raise NotImplementedError(
+                f"{type(model).__name__} has no paged KV layout — the engine "
+                "serves attention-cache architectures"
+            )
+        if not model.supports_batched_prefill:
+            raise NotImplementedError(
+                f"{type(model).__name__} cannot batched-prefill — the engine "
+                "consumes whole prompts in one pass"
+            )
+        self.model = model
+        self.params = params
+        self.cfg = cfg or ServingConfig()
+        self.space = space or engine_space(model)
+        self.pool = PagedKVPool(model, self.space, self.cfg)
+        self.sched = Scheduler(self.pool, self.cfg)
+        self.repair = PageRepairManager(self.pool, self.space, self.cfg)
+        # the one greedy step builder (shared with launch.serve.generate, so
+        # the engine-vs-generate token-parity contract cannot drift)
+        self._step_fn = jax.jit(
+            self.space.wrap_serve_step(build_serve_step(model))
+        )
+        self._stream = stats_lib.zeros()
+        self._requests: Dict[int, Request] = {}
+        self.results: Dict[int, Dict[str, Any]] = {}
+        self._next_rid = 0
+        self._t = 0
+        self._inject_key = jax.random.PRNGKey(self.cfg.seed + 1)
+        self._last_touched: List[int] = []
+        self.tokens_emitted = 0
+
+    # ------------------------------------------------------------------ admit
+    def add_request(self, prompt: Sequence[int], max_new: int) -> int:
+        """Queue one generation request; returns its id."""
+        prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, max_new=int(max_new))
+        self._requests[rid] = req
+        self.sched.add(req)
+        return rid
+
+    @property
+    def has_work(self) -> bool:
+        return self.sched.has_work
+
+    # ------------------------------------------------------------------- step
+    def step(self) -> Dict[str, Any]:
+        """One engine step; returns the tokens emitted and requests finished."""
+        t = self._t
+        emitted: Dict[int, List[int]] = {}
+        finished: List[int] = []
+        # kernel-counter routing targets the pages THIS step touches; stale
+        # entries could point at pages since freed and reallocated
+        self._last_touched = []
+
+        # (1) simulation boundary: one window of flips strikes the pool
+        if self.cfg.ber > 0.0:
+            self._inject_key, k = jax.random.split(self._inject_key)
+            self.pool.tree, _ = self.space.inject(
+                self.pool.tree, k, self.cfg.ber
+            )
+
+        # (2) admission + batched prefill (admitted pages are freshly zeroed,
+        # but the null padding page rides along — one repair pass covers
+        # every admission before any prefill consumes its pages)
+        prefilled = set()
+        admitted = self.sched.admit()
+        if admitted:
+            pages = sorted({p for r in admitted for p in r.pages})
+            self._stream = self.repair.repair_step(pages, self._stream)
+            self._last_touched = pages
+        for req in admitted:
+            self._prefill(req, emitted)
+            prefilled.add(req.rid)
+            if req.state is RequestState.RUNNING and self._maybe_finish(req):
+                finished.append(req.rid)
+
+        # (3) reactive repair over the touched pages, then one decode step.
+        # Reserving a page for one request may preempt another — both one
+        # that hasn't reserved yet (inner state check) and one that already
+        # did (final filter): victims never reach the decode batch.
+        decodable = []
+        for r in list(self.sched.running):
+            if r.rid in prefilled or r.state is not RequestState.RUNNING:
+                continue
+            if self._reserve_next_page(r):
+                decodable.append(r)
+        decodable = [r for r in decodable if r.state is RequestState.RUNNING]
+        if decodable:
+            touched = sorted(
+                set(self._last_touched)
+                | {p for r in decodable for p in r.pages}
+            )
+            self._last_touched = touched
+            self._stream = self.repair.repair_step(touched, self._stream)
+            self._decode(decodable, emitted)
+            for req in decodable:
+                if self._maybe_finish(req):
+                    finished.append(req.rid)
+
+        # (4) background sweep tick
+        self._stream = self.repair.sweep_step(t, self._stream)
+
+        self._t += 1
+        for rid, toks in emitted.items():
+            self.tokens_emitted += len(toks)
+        return {"t": t, "emitted": emitted, "finished": finished}
+
+    def run(self, max_idle_steps: int = 100) -> Dict[int, Dict[str, Any]]:
+        """Drive the engine until every queued request finishes.  Long
+        workloads run as many steps as they need; the guard fires only on
+        genuine stalls (``max_idle_steps`` consecutive steps emitting and
+        finishing nothing)."""
+        idle = 0
+        while self.has_work:
+            out = self.step()
+            idle = 0 if (out["emitted"] or out["finished"]) else idle + 1
+            if idle > max_idle_steps:
+                raise RuntimeError(
+                    f"engine made no progress in {max_idle_steps} steps"
+                )
+        return self.results
+
+    # -------------------------------------------------------------- internals
+    def _reserve_next_page(self, req: Request) -> bool:
+        """Point ``req.pos`` at this step's write position and make sure its
+        block table covers it (growing/preempting under page pressure)."""
+        req.pos = req.n_context - 1
+        return self.sched.ensure_capacity(req)
+
+    def _prefill(self, req: Request, emitted: Dict[int, List[int]]) -> None:
+        """One batched prefill: the whole (re-)prefill context in one
+        ``Model.prefill`` call over the request's gathered pages."""
+        toks = req.prefill_tokens()
+        bt = self.pool.block_table(req.pages)[None, :]
+        view = self.pool.gather(bt)
+        tokens = jnp.asarray([toks], jnp.int32)
+        nxt, _, view, self._stream = self._step_fn(
+            self.params, view, {"tokens": tokens},
+            jnp.zeros((), jnp.int32), self._stream,
+        )
+        self.pool.scatter(view, bt)
+        req.pos = len(toks)
+        tok = int(np.asarray(nxt)[0])
+        req.tokens.append(tok)
+        emitted.setdefault(req.rid, []).append(tok)
+
+    def _decode(
+        self, reqs: List[Request], emitted: Dict[int, List[int]]
+    ) -> None:
+        B, M = self.cfg.max_batch, self.cfg.max_pages_per_request
+        bt = np.full((B, M), self.pool.null_page, np.int32)
+        tokens = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        for req in reqs:
+            bt[req.slot] = self.pool.block_table(req.pages)
+            tokens[req.slot, 0] = req.last_token
+            pos[req.slot] = req.pos
+        view = self.pool.gather(bt)
+        nxt, _, view, self._stream = self._step_fn(
+            self.params, view, {"tokens": jnp.asarray(tokens)},
+            jnp.asarray(pos), self._stream,
+        )
+        self.pool.scatter(view, bt)
+        nxt = np.asarray(nxt)
+        for req in reqs:
+            tok = int(nxt[req.slot])
+            req.tokens.append(tok)
+            req.pos += 1
+            emitted.setdefault(req.rid, []).append(tok)
+
+    def _maybe_finish(self, req: Request) -> bool:
+        if req.done or req.n_context >= self.cfg.max_seq:
+            req.truncated = not req.done
+            self.sched.finish(req)
+            self.results[req.rid] = {
+                "tokens": req.prompt + req.tokens,
+                "generated": list(req.tokens),
+                "n_preempted": req.n_preempted,
+                "truncated": req.truncated,
+            }
+            return True
+        return False
+
+    # ----------------------------------------------------------- observation
+    def record_kernel(self, counts) -> None:
+        """Report a fused-kernel counter vector (``kernels.ops`` int32[8]
+        layout): folded into the unified stats and routed back to the pages
+        the last decode step touched (they are scrubbed next repair pass)."""
+        self.repair.note_kernel(counts, self._last_touched)
+
+    def unified_stats(self) -> stats_lib.Stats:
+        """The space's host-side stream (injection flips, kernel counters)
+        merged with the engine's functional step stream."""
+        return stats_lib.merge(self.space.stats, self._stream)
+
+    def stats_dict(self) -> Dict[str, int]:
+        return stats_lib.as_dict(self.unified_stats())
+
+    def metrics(self) -> Dict[str, Any]:
+        toks = max(self.tokens_emitted, 1)
+        return {
+            "tokens_emitted": self.tokens_emitted,
+            "n_preemptions": self.sched.n_preemptions,
+            "scrubbed_bytes": self.pool.scrubbed_bytes,
+            "scrub_calls": self.pool.scrub_calls,
+            "scrubbed_bytes_per_token": self.pool.scrubbed_bytes / toks,
+            **self.repair.summary(),
+        }

@@ -1,0 +1,220 @@
+"""Paged KV pool: block-table-indexed physical cache pages + the free list.
+
+The pool owns the serving engine's approximate-memory resident.  Physical
+layout (``Model.paged_cache_defs``): every leaf is ``(n_pages+1, L,
+page_size, K, Dh)`` with the page axis LEADING, so one page is one
+contiguous row — the unit of
+
+  * region accounting (the pool tree is pre-registered with the owning
+    ``ApproxSpace``, so classification/BER injection/stats are page-exact),
+  * fault attribution (per-page repair-event counters, routed back from the
+    step that touched the page), and
+  * targeted repair (``ApproxSpace.scrub_pages`` / the Pallas page-view
+    scrub — scrubbed bytes scale with the *faulted* pages, not the pool).
+
+Row ``n_pages`` is the null page: block tables are padded with it, so
+gather/scatter shapes stay static (one compiled executable per run).  It is
+included in every repair candidate set — padding lanes are masked out of
+attention scores, but a NaN there would still poison the context through
+``0 * NaN`` in the value contraction.
+
+Requests never see physical indices: the scheduler hands out block tables
+(request-order lists of page ids) and the engine gathers them into the
+contiguous per-step cache view the model consumes, scattering the view back
+afterwards.  (A paged attention kernel that skips the gather is the natural
+follow-up PR; the repair/scheduling semantics are identical.)
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import stats as stats_lib
+from ..nn import module
+from ..runtime import ApproxSpace
+from .config import ServingConfig
+
+
+def _is_float(leaf) -> bool:
+    return hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating)
+
+
+@jax.jit
+def _reset_pages(tree: Any, ids: jax.Array) -> Any:
+    """Zero the named pages in one fused update (functional on CPU; on TPU
+    buffer donation would make this an in-place page clear)."""
+    return jax.tree.map(
+        lambda leaf: leaf.at[ids].set(0) if _is_float(leaf) else leaf, tree
+    )
+
+
+@jax.jit
+def _gather(tree: Any, block_tables: jax.Array) -> Any:
+    """Pool pages -> contiguous per-request cache views.
+
+    leaf (P, L, pg, K, Dh) x block_tables (R, M) -> (L, R, M*pg, K, Dh) —
+    exactly the treedef/axis order of ``Model.cache_defs``, so the gathered
+    view feeds ``serve_step`` unchanged.
+    """
+
+    def g(leaf):
+        v = leaf[block_tables]                    # (R, M, L, pg, ...)
+        v = jnp.moveaxis(v, 2, 0)                 # (L, R, M, pg, ...)
+        L, R, M, pg = v.shape[:4]
+        return v.reshape(L, R, M * pg, *v.shape[4:])
+
+    return jax.tree.map(g, tree)
+
+
+@jax.jit
+def _scatter(tree: Any, view: Any, block_tables: jax.Array) -> Any:
+    """Write a per-request cache view back into the pool pages.
+
+    Duplicate block-table entries (null-page padding) collide harmlessly —
+    every colliding write targets the null row, whose contents are never
+    consumed unmasked.
+    """
+
+    def s(leaf, v):
+        pg = leaf.shape[2]
+        L, R, V = v.shape[:3]
+        v = v.reshape(L, R, V // pg, pg, *v.shape[3:])
+        v = jnp.moveaxis(v, 0, 2)                 # (R, M, L, pg, ...)
+        return leaf.at[block_tables].set(v.astype(leaf.dtype))
+
+    return jax.tree.map(s, tree, view)
+
+
+class PagedKVPool:
+    """Fixed-size KV pages + free list + per-page fault accounting."""
+
+    def __init__(
+        self,
+        model: Any,
+        space: ApproxSpace,
+        cfg: ServingConfig,
+    ):
+        defs = model.paged_cache_defs(cfg.n_pages + 1, cfg.page_size)
+        self.tree = module.init_params(defs, jax.random.PRNGKey(cfg.seed))
+        self.space = space
+        self.cfg = cfg
+        self.null_page = cfg.n_pages
+        space.regions_for(self.tree)        # pre-register page regions
+
+        self._free: collections.deque = collections.deque(range(cfg.n_pages))
+        # per-page attribution: repair events routed back from steps that
+        # touched the page, and how often each page has been scrubbed
+        self.page_events = np.zeros(cfg.n_pages + 1, np.int64)
+        self.page_scrubs = np.zeros(cfg.n_pages + 1, np.int64)
+        self.scrubbed_bytes = 0
+        self.scrub_calls = 0
+
+    # -------------------------------------------------------------- geometry
+    @property
+    def total_bytes(self) -> int:
+        """Bytes of the whole pool (what a whole-cache scrub processes)."""
+        return sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree.leaves(self.tree)
+            if _is_float(leaf)
+        )
+
+    @property
+    def page_bytes(self) -> int:
+        return self.total_bytes // (self.cfg.n_pages + 1)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    # ------------------------------------------------------------ allocation
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` pages (zeroed) or None if the pool cannot satisfy
+        the request — admission control / preemption trigger upstream."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        if pages:
+            # physical pages are recycled memory: reset so a new request
+            # never reads a previous tenant's (possibly flipped) lanes
+            self.tree = _reset_pages(self.tree, jnp.asarray(pages, jnp.int32))
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            assert 0 <= p < self.null_page, f"bad page id {p}"
+            self._free.append(p)
+
+    def is_free(self, page: int) -> bool:
+        return page in self._free
+
+    # --------------------------------------------------------- gather/scatter
+    def block_table(self, pages: Sequence[int]) -> np.ndarray:
+        """Fixed-width block table row, null-padded (static shapes)."""
+        M = self.cfg.max_pages_per_request
+        assert len(pages) <= M, "request outgrew its block table"
+        row = np.full((M,), self.null_page, np.int32)
+        row[: len(pages)] = pages
+        return row
+
+    def gather(self, block_tables: jax.Array) -> Any:
+        return _gather(self.tree, jnp.asarray(block_tables, jnp.int32))
+
+    def scatter(self, view: Any, block_tables: jax.Array) -> None:
+        self.tree = _scatter(
+            self.tree, view, jnp.asarray(block_tables, jnp.int32)
+        )
+
+    # ----------------------------------------------------------------- repair
+    def fatal_pages(self, page_ids: Sequence[int]) -> List[int]:
+        """The subset of ``page_ids`` holding >=1 non-finite lane — the trap
+        analogue at page granularity (detection only; no repair)."""
+        ids = sorted(set(page_ids))
+        if not ids:
+            return []
+        idx = jnp.asarray(ids, jnp.int32)
+        flags = None
+        for leaf in jax.tree.leaves(self.tree):
+            if not _is_float(leaf):
+                continue
+            rows = leaf[idx]
+            bad = ~jnp.isfinite(rows.reshape(rows.shape[0], -1)).all(axis=1)
+            flags = bad if flags is None else flags | bad
+        mask = np.asarray(flags)
+        return [p for p, b in zip(ids, mask) if b]
+
+    def scrub_pages(
+        self, page_ids: Sequence[int], stats: stats_lib.Stats
+    ) -> stats_lib.Stats:
+        """Targeted scrub of exactly ``page_ids`` (unique'd), with byte
+        accounting — the page-granular reactive repair."""
+        ids = sorted(set(page_ids))
+        if not ids:
+            return stats
+        self.tree, stats = self.space.scrub_pages(
+            self.tree, jnp.asarray(ids, jnp.int32), stats
+        )
+        self.page_scrubs[ids] += 1
+        self.scrubbed_bytes += len(ids) * self.page_bytes
+        self.scrub_calls += 1
+        return stats
+
+    def scrub_all(self, stats: stats_lib.Stats) -> stats_lib.Stats:
+        """Whole-pool scrub (the pre-engine ``scrub_cache`` baseline), with
+        byte accounting."""
+        self.tree, stats = self.space.scrub(self.tree, stats)
+        self.page_scrubs += 1
+        self.scrubbed_bytes += self.total_bytes
+        self.scrub_calls += 1
+        return stats
+
+    def attribute(self, page_ids: Sequence[int], n_events: int) -> None:
+        """Route ``n_events`` repair events back to the pages a step touched
+        (per-page fault ledger for eviction/QoS policies in later PRs)."""
+        if n_events and len(page_ids):
+            ids = sorted(set(page_ids))
+            self.page_events[ids] += n_events

@@ -1,0 +1,128 @@
+"""Page-granular reactive repair + the demoted background sweep.
+
+The paper's thesis — repair only what faulted — applied at the pool's page
+granularity:
+
+  reactive   every engine step knows exactly which pages it touched (the
+             scheduled requests' block tables + the null padding page).  A
+             cheap detection pass over those pages is the trap analogue;
+             only the pages that actually hold a fatal lane are scrubbed
+             (``repair="page"``).  The pre-engine baseline — scrub the whole
+             cache whenever anything faulted — is kept as ``repair="whole"``
+             for the bench comparison.
+
+  routed     fused-kernel counter vectors (``kernels.ops`` ``MM_*``/``AT_*``
+             layout) reported through ``note_kernel`` are folded into the
+             unified stats via ``ApproxSpace.record_kernel`` AND routed back
+             to the step's touched pages: they are marked dirty and scrubbed
+             on the next repair pass, and the pool's per-page event ledger
+             is charged.
+
+  sweep      the old whole-cache ``ScrubSchedule`` interval is demoted to a
+             background low-rate sweep: every ``sweep_interval`` steps a
+             rotating window of ``sweep_pages`` pages is scrubbed, catching
+             flips in cold pages no step touches (their NaNs would otherwise
+             sit resident forever — invisible to reactive repair until read).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence, Set
+
+import numpy as np
+
+from ..core import stats as stats_lib
+from ..kernels import ops as kernel_ops
+from ..runtime import ApproxSpace, ScrubSchedule
+from .config import ServingConfig
+from .pool import PagedKVPool
+
+
+class PageRepairManager:
+    """Owns the dirty set, the sweep cursor, and the repair-mode dispatch."""
+
+    def __init__(
+        self, pool: PagedKVPool, space: ApproxSpace, cfg: ServingConfig
+    ):
+        self.pool = pool
+        self.space = space
+        self.cfg = cfg
+        self.sweep = ScrubSchedule(boundary=False, interval=cfg.sweep_interval)
+        self._dirty: Set[int] = set()
+        self._sweep_cursor = 0
+        self.n_reactive_scrubs = 0
+        self.n_sweep_scrubs = 0
+
+    # ----------------------------------------------------------- kernel route
+    def note_kernel(self, counts, touched: Iterable[int]) -> None:
+        """Fold a Pallas kernel counter vector into the unified stats and
+        route its events back to the pages the reporting step touched."""
+        self.space.record_kernel(counts)
+        events = int(counts[kernel_ops.MM_EV_TOTAL])
+        if events > 0:
+            # freed pages are skipped: they may already belong to (or be
+            # zeroed for) a different request than the one that reported
+            pages = [
+                p for p in touched
+                if p <= self.pool.null_page and not self.pool.is_free(p)
+            ]
+            self._dirty.update(pages)
+            self.pool.attribute(pages, events)
+
+    def mark_dirty(self, pages: Iterable[int]) -> None:
+        self._dirty.update(pages)
+
+    # ---------------------------------------------------------------- repair
+    def repair_step(
+        self, touched: Sequence[int], stats: stats_lib.Stats
+    ) -> stats_lib.Stats:
+        """One reactive repair pass before the step's compute consumes the
+        touched pages.  Detection (the trap analogue) runs over touched ∪
+        dirty ∪ {null}; repair granularity follows ``cfg.repair``."""
+        if self.cfg.repair == "off":
+            return stats
+        candidates = set(touched) | self._dirty | {self.pool.null_page}
+        faulty = self.pool.fatal_pages(candidates)
+        scrub_set = sorted(set(faulty) | self._dirty)
+        self._dirty.clear()
+        if not scrub_set:
+            return stats
+        events0 = int(stats["events"])
+        if self.cfg.repair == "whole":
+            stats = self.pool.scrub_all(stats)
+        else:
+            stats = self.pool.scrub_pages(scrub_set, stats)
+        self.n_reactive_scrubs += 1
+        # the ledger charges only pages that actually held a fatal lane —
+        # dirty-but-clean pages (kernel routing false positives) stay clean
+        delta = int(stats["events"]) - events0
+        if delta > 0:
+            self.pool.attribute(faulty, delta)
+        return stats
+
+    # ----------------------------------------------------------------- sweep
+    def sweep_step(self, t: int, stats: stats_lib.Stats) -> stats_lib.Stats:
+        """Background low-rate sweep tick (page mode; whole mode's interval
+        scrub IS a whole-cache pass, matching the legacy schedule)."""
+        if self.cfg.repair == "off" or not self.sweep.due(t):
+            return stats
+        if self.cfg.repair == "whole":
+            self.n_sweep_scrubs += 1
+            return self.pool.scrub_all(stats)
+        n = self.pool.cfg.n_pages
+        window: List[int] = [
+            (self._sweep_cursor + i) % n
+            for i in range(min(self.cfg.sweep_pages, n))
+        ]
+        self._sweep_cursor = (self._sweep_cursor + len(window)) % n
+        self.n_sweep_scrubs += 1
+        return self.pool.scrub_pages(window, stats)
+
+    # ------------------------------------------------------------------ intro
+    def summary(self) -> dict:
+        return {
+            "reactive_scrubs": self.n_reactive_scrubs,
+            "sweep_scrubs": self.n_sweep_scrubs,
+            "scrub_calls": self.pool.scrub_calls,
+            "scrubbed_bytes": self.pool.scrubbed_bytes,
+            "hot_pages": int(np.count_nonzero(self.pool.page_events)),
+        }

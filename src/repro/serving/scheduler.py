@@ -1,0 +1,164 @@
+"""Continuous-batching scheduler: admit -> prefill -> decode -> finish/evict.
+
+The request lifecycle mirrors the production serving cores in the related
+file sets (vLLM/Bullet): a FIFO waiting queue, admission control against
+free pages, per-step page growth for running requests, and recompute-style
+preemption under page pressure — the evicted request frees its pages and
+rejoins the waiting queue with its generated-so-far tokens folded into the
+prefill prompt, so no output is lost.
+
+The scheduler is pure host-side bookkeeping; all device work (gather, step,
+scatter, repair) lives in the engine.  Deadlock freedom: a preemption victim
+is always the *newest* running request, and only when it is newer than the
+one that needs the page (FIFO priority — a starved newest request skips
+steps instead of evicting its elders); ``ServingConfig`` guarantees a lone
+request can always hold its maximum block table.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import List, Optional
+
+from .config import ServingConfig
+from .pool import PagedKVPool
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its page-mapped cache footprint."""
+
+    rid: int
+    prompt: List[int]
+    max_new: int
+    state: RequestState = RequestState.WAITING
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    pages: List[int] = dataclasses.field(default_factory=list)
+    pos: int = 0                 # next cache write position
+    slot: Optional[int] = None   # decode batch slot while RUNNING
+    n_preempted: int = 0
+    truncated: bool = False      # hit the block-table context cap
+
+    @property
+    def n_context(self) -> int:
+        """Tokens whose KV must be resident (prompt + generated)."""
+        return len(self.prompt) + len(self.tokens)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new
+
+    @property
+    def last_token(self) -> int:
+        return self.tokens[-1] if self.tokens else self.prompt[-1]
+
+    def prefill_tokens(self) -> List[int]:
+        """What a (re-)prefill must consume: the prompt plus anything already
+        generated before a preemption (recompute-style resume)."""
+        return self.prompt + self.tokens
+
+
+class Scheduler:
+    """Admission control + preemption over one ``PagedKVPool``."""
+
+    def __init__(self, pool: PagedKVPool, cfg: ServingConfig):
+        self.pool = pool
+        self.cfg = cfg
+        self.waiting: collections.deque = collections.deque()
+        self.running: List[Request] = []          # admission order
+        self._free_slots = list(range(cfg.max_batch - 1, -1, -1))
+        self.n_preemptions = 0
+
+    # -------------------------------------------------------------- lifecycle
+    def add(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new > self.cfg.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new "
+                f"{len(req.prompt) + req.max_new} exceeds max_seq "
+                f"{self.cfg.max_seq}"
+            )
+        self.waiting.append(req)
+
+    def admit(self) -> List[Request]:
+        """Admit waiting requests while a decode slot AND the pages for their
+        full (re-)prefill context are free.  FIFO — no head-of-line bypass,
+        so a preempted request cannot starve behind newer arrivals."""
+        admitted = []
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            need = self.cfg.pages_for(max(req.n_context, 1))
+            pages = self.pool.alloc(need)
+            if pages is None:
+                break
+            self.waiting.popleft()
+            req.pages = pages
+            req.pos = 0
+            req.slot = self._free_slots.pop()
+            req.state = RequestState.RUNNING
+            self.running.append(req)
+            admitted.append(req)
+        return admitted
+
+    def finish(self, req: Request) -> None:
+        self.pool.free(req.pages)
+        req.pages = []
+        self._free_slots.append(req.slot)
+        req.slot = None
+        req.state = RequestState.FINISHED
+        self.running.remove(req)
+
+    # -------------------------------------------------------------- page flow
+    def ensure_capacity(self, req: Request) -> bool:
+        """Grow ``req``'s block table to cover its next write position,
+        preempting newer requests under page pressure.  Must only be called
+        while ``req`` is RUNNING.  Returns False when the pool stayed full
+        (no preemptable victim — the request skips this step and retries),
+        True when its pages cover position ``req.pos``."""
+        assert req.state is RequestState.RUNNING, req
+        while self.cfg.pages_for(req.pos + 1) > len(req.pages):
+            got = self.pool.alloc(1)
+            if got is not None:
+                req.pages.extend(got)
+                continue
+            victim = self._pick_victim(req)
+            if victim is None:
+                return False
+            self.preempt(victim)
+        return True
+
+    def _pick_victim(self, needy: Request) -> Optional[Request]:
+        """The newest running request — and only if it is newer than
+        ``needy`` (FIFO priority: a request never evicts one admitted before
+        it; when the needy request is itself the newest it simply skips the
+        step until older requests finish and free pages).  Never ``needy``
+        itself: a lone request can always hold its maximum block table
+        (ServingConfig guarantees ``max_pages_per_request <= n_pages``)."""
+        if self.running and self.running[-1] is not needy:
+            return self.running[-1]
+        return None
+
+    def preempt(self, req: Request) -> None:
+        """Recompute-style eviction: drop the pages, keep the tokens, rejoin
+        the head of the waiting queue."""
+        self.pool.free(req.pages)
+        req.pages = []
+        req.pos = 0
+        self._free_slots.append(req.slot)
+        req.slot = None
+        req.state = RequestState.WAITING
+        req.n_preempted += 1
+        self.running.remove(req)
+        self.waiting.appendleft(req)
+        self.n_preemptions += 1
+
+    # ------------------------------------------------------------------ state
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)

@@ -18,3 +18,23 @@ except ModuleNotFoundError:
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+def tiny_transformer():
+    """One shared CPU-scale TransformerLM for the serving test modules —
+    shapes live here so the engine, runtime, and parity tests cannot drift
+    apart.  Repair mode 'off': the serving space owns repair."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.runtime import ApproxConfig
+
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(),
+        n_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+        d_ff=128, vocab=97,
+        repair=ApproxConfig(mode="off"),
+    )
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
