@@ -1,7 +1,7 @@
 """Benchmark harness — one section per paper table/figure + the roofline +
-the serving engine.
+the serving engine + the repair pipeline.
 
-    PYTHONPATH=src python -m benchmarks.run [--smoke]
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [--out BENCH_repair.json]
 
 Each section prints ``name,us_per_call,derived`` CSV (see the individual
 modules for the exact semantics of the middle column).
@@ -10,6 +10,11 @@ modules for the exact semantics of the middle column).
 mode (scripts/ci.sh): every section executes end to end on every run, so a
 broken bench fails CI instead of rotting silently.  Sections whose ``main``
 accepts a ``smoke`` kwarg shrink themselves; the rest are already tiny.
+
+``--out FILE`` records the bench trajectory: sections whose ``main``
+accepts an ``out`` kwarg (currently ``repair_pipeline``: eager-vs-compiled
+scrub/inject wall-time and scrubbed-bytes/step on 1 and 8 fake devices)
+write their JSON record there — the per-PR perf baseline.
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ from . import (
     energy_model,
     fig6_provenance,
     fig7_overhead,
+    repair_pipeline,
     roofline,
     serving_engine,
     table3_counts,
@@ -34,6 +40,7 @@ SECTIONS = (
     ("energy_model (paper §2.1)", energy_model.main),
     ("roofline (assignment §Roofline)", roofline.main),
     ("serving_engine (README §Serving engine)", serving_engine.main),
+    ("repair_pipeline (README §Distributed repair)", repair_pipeline.main),
 )
 
 
@@ -43,16 +50,24 @@ def main(argv=None) -> None:
         "--smoke", action="store_true",
         help="tiny shapes + fixed seeds (CI mode)",
     )
+    ap.add_argument(
+        "--out", default=None,
+        help="JSON record path for sections that support it "
+        "(repair_pipeline)",
+    )
     args = ap.parse_args(argv)
 
     failures = 0
     for title, fn in SECTIONS:
         print(f"\n===== {title} =====")
         try:
-            if "smoke" in inspect.signature(fn).parameters:
-                fn(smoke=args.smoke)
-            else:
-                fn()
+            params = inspect.signature(fn).parameters
+            kwargs = {}
+            if "smoke" in params:
+                kwargs["smoke"] = args.smoke
+            if "out" in params and args.out:
+                kwargs["out"] = args.out
+            fn(**kwargs)
         except Exception:
             failures += 1
             traceback.print_exc()

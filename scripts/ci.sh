@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 suite + example smoke test + benchmark smoke run.
+# CI entry point: tier-1 suite + multidev lane + example smoke test +
+# benchmark smoke run.
 #
-#   bash scripts/ci.sh          # everything
-#   bash scripts/ci.sh tests    # suite only
-#   bash scripts/ci.sh smoke    # examples only
-#   bash scripts/ci.sh bench    # benchmark sections only (--smoke shapes)
+#   bash scripts/ci.sh            # everything
+#   bash scripts/ci.sh tests      # tier-1 suite only (single device)
+#   bash scripts/ci.sh multidev   # distributed-repair suite (8 fake devices)
+#   bash scripts/ci.sh smoke      # examples only
+#   bash scripts/ci.sh bench      # benchmark sections (--smoke shapes),
+#                                 # records BENCH_repair.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,16 +19,28 @@ if [[ "$what" == "all" || "$what" == "tests" ]]; then
     python -m pytest -x -q
 fi
 
+if [[ "$what" == "all" || "$what" == "multidev" ]]; then
+    # dedicated lane in a subprocess: 8 fake host devices, REPRO_MULTIDEV=1
+    # opts out of the tier-1 conftest single-device guard for this run ONLY
+    # (the guard itself stays enforced for every other invocation)
+    echo "== multidev lane (8 fake host devices) =="
+    XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+        REPRO_MULTIDEV=1 \
+        python -m pytest tests/multidev -x -q -m multidev
+fi
+
 if [[ "$what" == "all" || "$what" == "smoke" ]]; then
     echo "== smoke: examples/quickstart.py =="
     python examples/quickstart.py
 fi
 
 if [[ "$what" == "all" || "$what" == "bench" ]]; then
-    # every section — incl. the serving-engine bench — executes on every CI
-    # run at tiny shapes with fixed seeds, so broken benches fail loudly
+    # every section — incl. the serving-engine and repair-pipeline benches —
+    # executes on every CI run at tiny shapes with fixed seeds, so broken
+    # benches fail loudly; the repair bench also asserts compiled <= eager
+    # and records the trajectory to BENCH_repair.json
     echo "== benchmarks (smoke shapes) =="
-    python -m benchmarks.run --smoke
+    python -m benchmarks.run --smoke --out BENCH_repair.json
 fi
 
 echo "CI OK"

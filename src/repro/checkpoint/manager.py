@@ -124,16 +124,8 @@ def _write(directory, step, host_tree, extra_meta) -> str:
     return final
 
 
-def load_checkpoint(
-    directory: str,
-    step: Optional[int] = None,
-    *,
-    like: Any = None,
-    shardings: Any = None,
-) -> Tuple[Any, int]:
-    """Restore (tree, step).  ``like`` supplies the treedef (and target
-    dtypes); ``shardings`` (same structure) triggers the elastic reshard:
-    every global array is device_put onto the new mesh's sharding."""
+def _read_arrays(directory: str, step: Optional[int]) -> Tuple[Dict, Dict]:
+    """One disk read: (manifest, {tree path: host ndarray})."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -141,13 +133,14 @@ def load_checkpoint(
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, _MANIFEST)) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(path, _ARRAYS))
+    with np.load(os.path.join(path, _ARRAYS)) as npz:
+        data = {k: npz[k] for k in npz.files}
+    return manifest, data
 
-    if like is None:
-        # return a flat dict when no treedef is given
-        tree = {k: data[k] for k in data.files}
-        return tree, manifest["step"]
 
+def _materialize(data: Dict, like: Any, shardings: Any) -> Any:
+    """Host arrays -> a tree shaped like ``like``: dtype-cast and (with
+    ``shardings``) device_put onto the target mesh — the elastic reshard."""
     flat_like, treedef = jax.tree_util.tree_flatten(like)
     keys = list(_flatten_with_paths(like).keys())
     assert len(keys) == len(flat_like)
@@ -165,7 +158,24 @@ def load_checkpoint(
             leaves.append(jax.device_put(arr, sh))
         else:
             leaves.append(jax.numpy.asarray(arr))
-    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_checkpoint(
+    directory: str,
+    step: Optional[int] = None,
+    *,
+    like: Any = None,
+    shardings: Any = None,
+) -> Tuple[Any, int]:
+    """Restore (tree, step).  ``like`` supplies the treedef (and target
+    dtypes); ``shardings`` (same structure) triggers the elastic reshard:
+    every global array is device_put onto the new mesh's sharding."""
+    manifest, data = _read_arrays(directory, step)
+    if like is None:
+        # return a flat dict when no treedef is given
+        return data, manifest["step"]
+    return _materialize(data, like, shardings), manifest["step"]
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -240,8 +250,57 @@ class CheckpointManager:
             )
 
     # ------------------------------------------------------------- restore
-    def restore(self, like: Any = None, shardings: Any = None):
-        return load_checkpoint(self.directory, like=like, shardings=shardings)
+    def restore(
+        self,
+        like: Any = None,
+        shardings: Any = None,
+        *,
+        repair: bool = False,
+        step: Optional[int] = None,
+    ):
+        """Restore ``(tree, step)``; with ``shardings`` the elastic reshard
+        device_puts every global array onto the new mesh's placements.
+
+        ``repair=True`` additionally runs the reference repair *after* the
+        device_put onto the target mesh — the ``last_checkpoint`` pass
+        executes shard-local on the restored job's own shardings (one
+        ``RepairPlan``, README §Distributed repair), so a flip that struck
+        between serialization and restart never survives into the run.  The
+        checkpoint is read from disk ONCE: the reference is materialized
+        from the same host arrays as the restored tree.
+        """
+        if repair and like is None:
+            raise ValueError(
+                "repair=True needs `like` (a treedef to repair against)"
+            )
+        manifest, data = _read_arrays(self.directory, step)
+        if like is None:
+            return data, manifest["step"]
+        tree = _materialize(data, like, shardings)
+        if repair:
+            ref = _materialize(data, like, shardings)
+            tree = self.space.scrub_with_reference(tree, ref, donate=True)
+        return tree, manifest["step"]
+
+    def reference_repair(self, tree: Any, *, step: Optional[int] = None):
+        """Repair ``tree`` against the checkpointed reference at ``step``
+        (latest by default): the reference shards are device_put onto
+        ``tree``'s *own* shardings — whatever mesh the job restored onto —
+        and the compiled reference-scope scrub replaces fatal lanes
+        shard-locally.  Events land in the manager's space (unified
+        stream)."""
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+        shs = [getattr(leaf, "sharding", None) for leaf in flat]
+        # host-resident trees (plain numpy leaves) restore the reference
+        # host-side too; any None sharding would break the leaves() pairing
+        shardings = (
+            None if any(s is None for s in shs)
+            else jax.tree_util.tree_unflatten(treedef, shs)
+        )
+        ref, _ = load_checkpoint(
+            self.directory, step, like=tree, shardings=shardings
+        )
+        return self.space.scrub_with_reference(tree, ref)
 
     def latest_step(self) -> Optional[int]:
         return latest_step(self.directory)

@@ -6,24 +6,23 @@ protected buffer — the latest checkpoint.  Repairing a flipped weight from
 its checkpointed value restores it exactly, up to one checkpoint interval of
 optimizer drift; for inference (frozen weights) it is exact.
 
-This is only available at pytree granularity (the reference must be resident
-or fetchable); the in-kernel fused path uses the cheap statistical policies
-and this pass covers anything they mis-estimate, at checkpoint-load and
-periodic-scrub boundaries.
-
-Runtime entry point: ``repro.runtime.ApproxSpace.scrub_with_reference``
-(README §Policies) — it supplies the cached region tree and folds the event
-counts into the unified stats stream; the function below is the underlying
-implementation.
+.. deprecated::
+    The implementation moved to ``repro.runtime`` (README §Migration): the
+    reference scrub is one scope of ``runtime.plan.RepairPlan`` — the same
+    planner that drives the train boundary scrub and the serving page scrub
+    — and its mesh-aware compiled entry point is
+    ``ApproxSpace.scrub_with_reference`` (repairs run shard-local on
+    whatever mesh the restored job uses; ``CheckpointManager.restore`` /
+    ``reference_repair`` call it after the elastic device_put).  This module
+    is a thin shim kept for source compatibility and emits a
+    ``DeprecationWarning`` on every call.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
-
-from . import detect, regions as regions_lib, stats as stats_lib
+from . import regions as regions_lib, stats as stats_lib
 
 
 def scrub_with_reference(
@@ -35,38 +34,21 @@ def scrub_with_reference(
     include_inf: bool = True,
 ) -> Tuple[Any, stats_lib.Stats]:
     """Replace fatal lanes of approximate-region leaves with the values from
-    ``ref_tree`` (same treedef, e.g. the last checkpoint)."""
+    ``ref_tree`` (same treedef, e.g. the last checkpoint).
+
+    Deprecated shim: delegates to ``runtime.reference_scrub_tree`` (the
+    implementation behind ``ApproxSpace.scrub_with_reference``).
+    """
+    from ..runtime import space as runtime_space  # deferred: runtime builds on us
+
+    warnings.warn(
+        "core.checkpoint_repair.scrub_with_reference is a deprecated shim; "
+        "use runtime.ApproxSpace.scrub_with_reference (README §Migration)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     if region_tree is None:
         region_tree = regions_lib.annotate(tree)
-
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    refs = jax.tree.leaves(ref_tree)
-    regs = jax.tree.leaves(region_tree)
-    assert len(leaves) == len(refs) == len(regs), "treedef mismatch"
-
-    nan_tot = jnp.zeros((), jnp.int32)
-    inf_tot = jnp.zeros((), jnp.int32)
-    out = []
-    for leaf, ref, region in zip(leaves, refs, regs):
-        if (
-            region is regions_lib.Region.APPROX
-            and hasattr(leaf, "dtype")
-            and jnp.issubdtype(leaf.dtype, jnp.floating)
-        ):
-            bits = detect.bits_of(leaf)
-            nan_m = detect.is_nan_bits(bits, leaf.dtype)
-            inf_m = (
-                detect.is_inf_bits(bits, leaf.dtype)
-                if include_inf
-                else jnp.zeros_like(nan_m)
-            )
-            mask = nan_m | inf_m
-            out.append(jnp.where(mask, ref.astype(leaf.dtype), leaf))
-            nan_tot = nan_tot + jnp.sum(nan_m.astype(jnp.int32))
-            inf_tot = inf_tot + jnp.sum(inf_m.astype(jnp.int32))
-        else:
-            out.append(leaf)
-    return (
-        jax.tree_util.tree_unflatten(treedef, out),
-        stats_lib.record_repair(stats, nan_tot, inf_tot),
+    return runtime_space.reference_scrub_tree(
+        tree, ref_tree, stats, region_tree, include_inf=include_inf
     )

@@ -20,21 +20,34 @@ are the mode-faithful reference used by the full-model training/serving steps
 and by the oracles.
 
 .. deprecated::
-    The pytree-level entry points here (``use`` with a config, ``scrub_pytree``,
-    ``inject_pytree``) are thin shims over ``repro.runtime.ApproxSpace`` — the
-    single object that owns regions, repair, injection, and the unified stats
-    stream (README §Runtime / §Migration).  ``repair_tensor`` remains the
-    tensor-level primitive shared by both layers.
+    The pytree-level entry points here (``scrub_pytree``, ``inject_pytree``)
+    are thin shims over ``repro.runtime.ApproxSpace`` and emit a
+    ``DeprecationWarning`` on every call — the space is the single object
+    that owns regions, repair, injection, and the unified stats stream
+    (README §Runtime / §Migration).  ``repair_tensor`` / ``fatal_masks``
+    remain the tensor-level primitives shared by both layers, and ``use``
+    remains the per-read entry the nn layers call (warning-free: it is the
+    production register-mode path, not a migration shim).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import detect, policies, regions as regions_lib, stats as stats_lib
+
+
+def _deprecated(name: str, replacement: str) -> None:
+    warnings.warn(
+        f"core.repair.{name} is a deprecated shim; use {replacement} "
+        "(README §Migration)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +78,28 @@ class RepairConfig:
 # ---------------------------------------------------------------------------
 
 
+def fatal_masks(
+    x: jax.Array,
+    *,
+    include_inf: bool = True,
+    max_magnitude: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """(nan_mask, inf_mask) of the fatal lanes of ``x`` — the detection half
+    of ``repair_tensor``, exposed so callers that need per-lane masks (the
+    page-bucketed compiled scrub masks padding rows out of its counts) share
+    one definition of "fatal" with the repair path."""
+    bits = detect.bits_of(x)
+    nan_m = detect.is_nan_bits(bits, x.dtype)
+    if max_magnitude is not None:
+        ext = detect.is_extreme_bits(bits, x.dtype, max_magnitude)
+        inf_m = ext & ~nan_m
+    elif include_inf:
+        inf_m = detect.is_inf_bits(bits, x.dtype)
+    else:
+        inf_m = jnp.zeros_like(nan_m)
+    return nan_m, inf_m
+
+
 def repair_tensor(
     x: jax.Array,
     *,
@@ -80,15 +115,9 @@ def repair_tensor(
     With ``max_magnitude``, |x| ≥ threshold lanes are fatal too (counted with
     the inf bucket — they are the same flip event one mantissa bit away).
     """
-    bits = detect.bits_of(x)
-    nan_m = detect.is_nan_bits(bits, x.dtype)
-    if max_magnitude is not None:
-        ext = detect.is_extreme_bits(bits, x.dtype, max_magnitude)
-        inf_m = ext & ~nan_m
-    elif include_inf:
-        inf_m = detect.is_inf_bits(bits, x.dtype)
-    else:
-        inf_m = jnp.zeros_like(nan_m)
+    nan_m, inf_m = fatal_masks(
+        x, include_inf=include_inf, max_magnitude=max_magnitude
+    )
     mask = nan_m | inf_m
     fixed = jnp.where(mask, policy(x, mask), x)
     return (
@@ -147,6 +176,7 @@ def scrub_pytree(
     """
     from ..runtime import space as runtime_space  # deferred: runtime builds on us
 
+    _deprecated("scrub_pytree", "runtime.ApproxSpace.scrub")
     if region_tree is None:
         region_tree = regions_lib.annotate(tree)
     return runtime_space.scrub_tree(tree, cfg, stats, region_tree)
@@ -167,6 +197,7 @@ def inject_pytree(
     """
     from ..runtime import space as runtime_space  # deferred: runtime builds on us
 
+    _deprecated("inject_pytree", "runtime.ApproxSpace.inject")
     if region_tree is None:
         region_tree = regions_lib.annotate(tree)
     return runtime_space.inject_tree(tree, key, ber, region_tree)

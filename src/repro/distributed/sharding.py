@@ -40,6 +40,10 @@ RULES_SINGLE_POD: Dict[str, MeshAxes] = {
     "expert": "model",
     "kv_seq": None,
     "layers": None,
+    # serving KV-pool page axis (pool.py): pages spread over the DP axis so
+    # page scrubs repair device-local rows — repair granularity follows the
+    # sharding (README §Distributed repair)
+    "page": "data",
     # activation dims (with_sharding_constraint sites inside the models)
     "act_batch": "data",
     "act_seq": None,          # "model" enables sequence parallelism

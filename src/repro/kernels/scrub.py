@@ -120,6 +120,61 @@ def scrub(
     return out.reshape(orig_shape), counts
 
 
+def scrub_sharded(
+    x: jax.Array,
+    mesh,
+    spec,
+    *,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    interpret: Optional[bool] = None,
+    block: Optional[Tuple[int, int]] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Shard-local scrub entry (README §Distributed repair): run the Pallas
+    scrub kernel over each device's *local shard view* via shard_map — no
+    gather, no resharding; every device repairs exactly the rows it holds,
+    which is the placement the ``RepairPlan`` "sharded" path lowers to.
+
+    ``spec`` is the PartitionSpec of ``x`` on ``mesh``.  Returns
+    ``(scrubbed, counts)`` with the same int32[3] counts as ``scrub``,
+    psum-reduced to GLOBAL totals (counted once, never per-replica).  NaN
+    and Inf lane counts match the whole-array kernel exactly; the
+    tile-visit ``events`` entry follows the per-shard tiling (a shard's
+    tiles, not the global array's), the same way the fused kernels' event
+    counts follow their block shapes.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if interpret is None:
+        interpret = common.default_interpret()
+
+    # reduce ONLY over the mesh axes the spec actually shards: along unused
+    # axes every replica computes identical local counts, and psum-ing those
+    # would multiply the global totals by the replication factor
+    used = []
+    for part in spec:
+        if part is None:
+            continue
+        used.extend(part if isinstance(part, (tuple, list)) else (part,))
+    used = tuple(a for a in used if a is not None)
+
+    def local(xs: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        fixed, counts = scrub(
+            xs, policy=policy, constant=constant, include_inf=include_inf,
+            interpret=interpret, block=block,
+        )
+        if used:
+            counts = jax.lax.psum(counts, axis_name=used)
+        return fixed, counts
+
+    return shard_map(
+        local, mesh=mesh, in_specs=(spec,), out_specs=(spec, P()),
+        check_rep=False,
+    )(x)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("policy", "constant", "include_inf", "interpret", "block"),

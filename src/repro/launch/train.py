@@ -173,11 +173,21 @@ def jit_train_step(
     n_micro: int = 1,
     rules=None,
     donate: bool = True,
+    space: Optional[ApproxSpace] = None,
 ):
-    """pjit'd train step with explicit in/out shardings for ``mesh``."""
+    """pjit'd train step with explicit in/out shardings for ``mesh``.
+
+    The owning ``ApproxSpace`` (created here if not passed) is handed the
+    mesh + rules: the boundary scrub inside the step runs sharded through
+    the jit's state shardings, and the *host-side* mechanisms between steps
+    (injection windows, checkpoint scrubs) compile against the same
+    placements — one repair pipeline for both sides of the step boundary.
+    """
     rules = rules or sh.rules_for_mesh(mesh)
     state_sh = train_state_shardings(model, opt, mesh, rules)
-    step = build_train_step(model, opt, n_micro=n_micro)
+    space = space or ApproxSpace(model.cfg.repair)
+    space.use_mesh(mesh, rules)
+    step = build_train_step(model, opt, n_micro=n_micro, space=space)
     cell_inputs = model.input_specs  # noqa: F841  (for symmetry with serve)
     batch_sh = None  # resolved per-call below
 
@@ -204,19 +214,21 @@ def inject_state(state, key: jax.Array, ber: float,
                  space: Optional[ApproxSpace] = None):
     """One approximate-memory window of bit flips over the approx region of
     params + moments (simulation only — production repair path never calls
-    this).  The ground-truth flip count is recorded into the state's stats
-    stream (``flips`` in the Table-3 analogue)."""
+    this).  The ground-truth flip count lands in the state's stats stream
+    (``flips`` in the Table-3 analogue) through the space's one injection
+    entry point — the same stats-threading path the serving engine uses, so
+    train and serve cannot drift.  The resident buffers are donated: the
+    flipped tree *replaces* ``state``, exactly as physical flips would."""
     space = space or ApproxSpace(ber=ber)
     resident = {"params": state["params"], "opt": state["opt"]}
-    # record=False: the flip count goes into state["stats"] below — the
-    # train state's stream is the unified one; recording in the space too
-    # would double-count on a later space.record merge.
-    resident, flips = space.inject(resident, key, ber, record=False)
+    resident, stats = space.inject(
+        resident, key, ber, stats=state["stats"], donate=True
+    )
     return {
         **state,
         "params": resident["params"],
         "opt": resident["opt"],
-        "stats": stats_lib.record_flips(state["stats"], flips),
+        "stats": stats,
     }
 
 
@@ -235,17 +247,37 @@ def train_loop(
     log_every: int = 10,
     n_micro: int = 1,
     space: Optional[ApproxSpace] = None,
+    mesh: Optional[Mesh] = None,
+    rules=None,
 ) -> Tuple[Dict[str, Any], list]:
     """Restartable CPU-scale loop used by examples/ and e2e tests.
 
     One ``ApproxSpace`` owns the whole run: the boundary scrub inside the
     step, the injection window between steps (simulation), and the region
     cache shared by both.
+
+    With ``mesh`` the loop goes multi-device: the state is device_put onto
+    its ``train_state_shardings``, the space is handed the mesh (injection
+    windows and host-side scrubs compile per-shard against those
+    placements), and the step donates the sharded state.
     """
     space = space or ApproxSpace(model.cfg.repair, ber=ber if ber > 0 else None)
     if state is None:
         state = init_train_state(model, opt, key)
-    step_fn = jax.jit(build_train_step(model, opt, n_micro=n_micro, space=space))
+    if mesh is not None:
+        rules = rules or sh.rules_for_mesh(mesh)
+        space.use_mesh(mesh, rules)
+        state = jax.device_put(
+            state, train_state_shardings(model, opt, mesh, rules)
+        )
+        step_fn = jax.jit(
+            build_train_step(model, opt, n_micro=n_micro, space=space),
+            donate_argnums=(0,),
+        )
+    else:
+        step_fn = jax.jit(
+            build_train_step(model, opt, n_micro=n_micro, space=space)
+        )
     history = []
     for i in range(start_step, steps):
         if ber > 0.0:

@@ -1,5 +1,5 @@
 """Approximate-memory runtime — the paper's technique as one coherent
-service (README §Runtime).
+service (README §Runtime / §Distributed repair).
 
   ApproxConfig    one frozen config: repair mode/policy, refresh→BER point,
                   region rules, scrub schedule
@@ -7,25 +7,37 @@ service (README §Runtime).
   ApproxSpace     the runtime object owning regions (cached by treedef), the
                   unified stats stream (incl. Pallas kernel counters), the
                   paper's two mechanisms (`use`/`scrub`), the simulation
-                  boundary (`inject`), and the train/serve step decorators
+                  boundary (`inject`), the train/serve step decorators, and
+                  — via `use_mesh` — the device mesh the repair pipeline
+                  runs on
+  RepairPlan      one planner for every repair pass (train boundary scrub,
+                  serving page scrub, checkpoint-reference repair, the
+                  injection window): scope + placement + the jit-compiled
+                  donated executable, cached per (treedef, avals, shardings)
 
-The legacy surface (`core.repair.use` / `scrub_pytree` / `inject_pytree`,
-`launch.serve.scrub_cache`) delegates here; new code should construct an
-``ApproxSpace`` directly.
+The legacy surface (`core.repair.scrub_pytree` / `inject_pytree`,
+`core.checkpoint_repair.scrub_with_reference`, `launch.serve.scrub_cache`)
+delegates here and warns; new code should construct an ``ApproxSpace``
+directly.
 """
 from .config import ApproxConfig, ScrubSchedule  # noqa: F401
 from .space import (  # noqa: F401
     ApproxSpace,
     inject_tree,
+    reference_scrub_tree,
     scrub_pages_tree,
     scrub_tree,
 )
+from .plan import RepairPlan, serving_scope  # noqa: F401
 
 __all__ = [
     "ApproxConfig",
     "ApproxSpace",
+    "RepairPlan",
     "ScrubSchedule",
     "inject_tree",
+    "reference_scrub_tree",
     "scrub_pages_tree",
     "scrub_tree",
+    "serving_scope",
 ]

@@ -1,0 +1,295 @@
+"""`RepairPlan` — one planner for every repair pass across train / serve /
+checkpoint.
+
+Before this module the runtime had three parallel repair paths that each
+re-decided what to repair and how: the train boundary scrub (whole resident
+tree), the serving page scrub (rows of the pool's leading page axis), and
+the checkpoint-reference repair (replace fatal lanes from a known-good
+copy).  EDEN's observation — approximate-memory error handling must follow
+the physical partition of the resident data — means every one of those
+decisions also depends on *placement*: a sharded state must be repaired
+shard-locally (no gather) with its counters reduced globally.
+
+`RepairPlan` centralizes both decisions:
+
+  scope       what one pass covers —
+                "none"       no-op (repair mode "off" / non-memory modes)
+                "tree"       every approximate-region float leaf
+                "pages"      rows ``page_ids`` of the leading page axis
+                "reference"  fatal lanes replaced from a reference tree
+                "inject"     the simulation boundary (bit-flip window)
+  placement   where it runs —
+                "local"      single-device (or fully replicated) buffers
+                "sharded"    ≥1 leaf carries a multi-device NamedSharding;
+                             the executable repairs each shard in place
+                             under GSPMD and reduces counters globally
+
+and owns the compiled executable for the pair.  Plans are cached on the
+space by ``(scope, treedef, avals, shardings)`` — one *trace* per state
+layout (``ApproxSpace.n_traces`` counts them; asserted in tests), then the
+cached executable runs in place with donated buffers.  Stat outputs are
+*deltas* (merged host-side), so re-entering with a differently-placed stats
+stream can never force a retrace.
+
+Page scrubs bucket their id count to the next power of two: padding entries
+duplicate real ids — duplicates scatter identical repaired rows (determin-
+istic) and are masked out of the lane counts — so the executable count
+stays logarithmic in the pool size instead of linear in faulted pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import regions as regions_lib
+from ..core import stats as stats_lib
+from . import space as space_lib
+
+__all__ = ["RepairPlan", "plan_for", "serving_scope", "SCOPES"]
+
+SCOPES = ("none", "tree", "pages", "reference", "inject")
+
+# serving repair-mode knob (ServingConfig.repair) -> plan scope: the ONE
+# place the whole-cache-vs-faulted-pages decision lives (the serving
+# PageRepairManager routes through this; acceptance — no repair-decision
+# logic outside runtime/).
+_SERVING_SCOPE = {"off": "none", "whole": "tree", "page": "pages"}
+
+
+def serving_scope(repair_mode: str) -> str:
+    """Map the serving repair mode ("off" | "whole" | "page") to the plan
+    scope that implements it."""
+    try:
+        return _SERVING_SCOPE[repair_mode]
+    except KeyError:
+        raise ValueError(f"bad serving repair mode {repair_mode!r}") from None
+
+
+def _sharding_of(leaf) -> Any:
+    return getattr(leaf, "sharding", None)
+
+
+def _placement(shardings: Tuple[Any, ...]) -> str:
+    for s in shardings:
+        if s is not None and getattr(s, "num_devices", 1) > 1:
+            return "sharded"
+    return "local"
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Next power of two ≥ n, clamped to the page-axis size."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return max(1, min(b, cap))
+
+
+@dataclasses.dataclass
+class RepairPlan:
+    """One planned repair pass: scope + placement + compiled executables.
+
+    Obtained via ``ApproxSpace.plan_for`` (cached); ``run`` executes it over
+    a concrete tree and returns ``(tree', delta)`` where ``delta`` is a
+    functional stats delta (``inject`` scope returns ``(tree', n_flips)``).
+    """
+
+    space: Any                       # owning ApproxSpace
+    scope: str                       # one of SCOPES
+    placement: str                   # "local" | "sharded"
+    treedef: Any
+    regions: Any
+    bytes_per_run: int               # approx bytes one full-scope pass touches
+    page_row_bytes: int              # approx bytes of one page row (pages scope)
+    page_capacity: int               # leading page-axis size (pages scope)
+    ber: Optional[float] = None      # inject scope only (static per plan)
+    _execs: Dict[Any, Callable] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------------- run
+    def run(
+        self,
+        tree: Any,
+        *,
+        page_ids: Optional[np.ndarray] = None,
+        reference: Any = None,
+        key: Optional[jax.Array] = None,
+        donate: bool = False,
+    ) -> Tuple[Any, Any]:
+        if self.scope == "none":
+            zero = (
+                jnp.zeros((), jnp.int32)
+                if self.ber is not None
+                else stats_lib.zeros()
+            )
+            return tree, zero
+        leaves = tuple(jax.tree_util.tree_flatten(tree)[0])
+        if self.scope == "tree":
+            out, delta = self._exec(("tree", donate))(leaves)
+        elif self.scope == "pages":
+            ids = np.asarray(page_ids, np.int32).reshape(-1)
+            if ids.size == 0:
+                return tree, stats_lib.zeros()
+            # duplicates in ids are legal (idempotent), so the clamp floor is
+            # the id count itself, not just the page-axis size
+            bucket = _bucket(ids.size, max(self.page_capacity, ids.size))
+            padded = np.full((bucket,), ids[0], np.int32)
+            padded[: ids.size] = ids
+            out, delta = self._exec(("pages", bucket, donate))(
+                leaves,
+                jnp.asarray(padded),
+                jnp.asarray(ids.size, jnp.int32),
+            )
+        elif self.scope == "reference":
+            refs = tuple(jax.tree_util.tree_flatten(reference)[0])
+            out, delta = self._exec(("reference", donate))(leaves, refs)
+        elif self.scope == "inject":
+            out, delta = self._exec(("inject", donate))(leaves, key)
+        else:  # pragma: no cover
+            raise ValueError(f"bad plan scope {self.scope!r}")
+        return jax.tree_util.tree_unflatten(self.treedef, out), delta
+
+    # ----------------------------------------------------------- executables
+    def _exec(self, variant: Tuple) -> Callable:
+        fn = self._execs.get(variant)
+        if fn is None:
+            fn = self._build(variant)
+            self._execs[variant] = fn
+        return fn
+
+    def _build(self, variant: Tuple) -> Callable:
+        space, cfg, treedef, regions = (
+            self.space, self.space.config, self.treedef, self.regions,
+        )
+        kind, donate = variant[0], variant[-1]
+
+        def note():
+            # trace-time side effect: the executable-cache counter.  Runs
+            # once per trace, never per call — asserted in tests.
+            space.n_traces += 1
+
+        if kind == "tree":
+
+            def fn(leaves):
+                note()
+                tree = jax.tree_util.tree_unflatten(treedef, leaves)
+                out, delta = space_lib.scrub_tree(
+                    tree, cfg, stats_lib.zeros(), regions
+                )
+                return tuple(jax.tree_util.tree_flatten(out)[0]), delta
+
+        elif kind == "pages":
+
+            def fn(leaves, page_ids, n_valid):
+                note()
+                tree = jax.tree_util.tree_unflatten(treedef, leaves)
+                out, delta = space_lib.scrub_pages_tree(
+                    tree, page_ids, cfg, stats_lib.zeros(), regions,
+                    n_valid=n_valid,
+                )
+                return tuple(jax.tree_util.tree_flatten(out)[0]), delta
+
+        elif kind == "reference":
+
+            def fn(leaves, refs):
+                note()
+                tree = jax.tree_util.tree_unflatten(treedef, leaves)
+                ref = jax.tree_util.tree_unflatten(treedef, refs)
+                out, delta = space_lib.reference_scrub_tree(
+                    tree, ref, stats_lib.zeros(), regions,
+                    include_inf=cfg.include_inf,
+                )
+                return tuple(jax.tree_util.tree_flatten(out)[0]), delta
+
+        elif kind == "inject":
+            ber = self.ber
+
+            def fn(leaves, key):
+                note()
+                tree = jax.tree_util.tree_unflatten(treedef, leaves)
+                out, flips = space_lib.inject_tree(tree, key, ber, regions)
+                return tuple(jax.tree_util.tree_flatten(out)[0]), flips
+
+        else:  # pragma: no cover
+            raise ValueError(f"bad executable kind {kind!r}")
+
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# The planner.
+# ---------------------------------------------------------------------------
+
+
+def plan_for(
+    space: Any,
+    tree: Any,
+    *,
+    scope: str = "tree",
+    ber: Optional[float] = None,
+) -> RepairPlan:
+    """Plan one repair pass over ``tree`` for ``space``.
+
+    Scope resolution: "tree" and "pages" are memory-mode mechanisms — in any
+    other repair mode they resolve to the "none" no-op plan (matching the
+    eager tree functions' mode gate).  "reference" always runs (an explicit
+    reference repair is a request, not a schedule), and "inject" always runs
+    (the simulation boundary is mode-independent).  Placement is derived
+    from the leaves' shardings: any multi-device NamedSharding makes the
+    plan shard-local.
+    """
+    if scope not in SCOPES:
+        raise ValueError(f"bad plan scope {scope!r}; expected one of {SCOPES}")
+    if scope in ("tree", "pages") and space.config.mode != "memory":
+        scope = "none"
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    # non-array leaves (plain python scalars in user trees) key by type and
+    # pass through the executable untouched, as they did on the eager path
+    avals = tuple(
+        (
+            tuple(getattr(leaf, "shape", ())),
+            str(getattr(leaf, "dtype", type(leaf).__name__)),
+        )
+        for leaf in leaves
+    )
+    shardings = tuple(_sharding_of(leaf) for leaf in leaves)
+    extra = float(ber) if scope == "inject" else None
+    key = (scope, treedef, avals, shardings, extra)
+
+    plan = space._plan_cache.get(key)
+    if plan is not None:
+        return plan
+
+    regions = space.regions_for(tree)
+    region_leaves = jax.tree.leaves(regions)
+    approx_bytes = 0
+    page_row_bytes = 0
+    page_capacity = 0
+    for leaf, region in zip(leaves, region_leaves):
+        if not space_lib._is_approx_float(leaf, region):
+            continue
+        nbytes = leaf.size * leaf.dtype.itemsize
+        approx_bytes += nbytes
+        if leaf.ndim >= 1 and leaf.shape[0]:
+            page_row_bytes += nbytes // leaf.shape[0]
+            page_capacity = (
+                leaf.shape[0] if page_capacity == 0
+                else min(page_capacity, leaf.shape[0])
+            )
+
+    plan = RepairPlan(
+        space=space,
+        scope=scope,
+        placement=_placement(shardings),
+        treedef=treedef,
+        regions=regions,
+        bytes_per_run=0 if scope == "none" else approx_bytes,
+        page_row_bytes=page_row_bytes,
+        page_capacity=max(page_capacity, 1),
+        ber=extra,
+    )
+    space._plan_cache[key] = plan
+    return plan

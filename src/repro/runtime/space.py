@@ -23,6 +23,16 @@ get `(value, stats')` back — safe under jit, this is what the step wrappers
 use) and a convenience form (omit `stats`; the event deltas accumulate into
 the space's host-side `self.stats`).  Never use the convenience form inside
 a jitted function — it would capture tracers.
+
+Mesh-native execution (README §Distributed repair): the space optionally
+carries a device mesh + logical-axis rules (`use_mesh`).  Host-side calls of
+`scrub` / `scrub_pages` / `scrub_with_reference` / `inject` dispatch
+jit-compiled executables planned by `runtime.plan.RepairPlan` — traced once
+per `(treedef, avals, shardings)`, donated buffers on request, per-shard
+local repair under GSPMD with flip/repair counters reduced globally (counted
+once, never per-replica).  Inside an enclosing jit the same tree functions
+below inline into the caller's trace, so both paths share one definition of
+repair.
 """
 from __future__ import annotations
 
@@ -30,6 +40,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import detect, injection as injection_lib
 from ..core import regions as regions_lib
@@ -37,8 +48,8 @@ from ..core import stats as stats_lib
 from .config import ApproxConfig, ScrubSchedule
 
 __all__ = [
-    "ApproxSpace", "scrub_tree", "scrub_pages_tree", "inject_tree",
-    "use_tensor",
+    "ApproxSpace", "scrub_tree", "scrub_pages_tree", "reference_scrub_tree",
+    "inject_tree", "use_tensor",
 ]
 
 
@@ -47,6 +58,15 @@ def _is_approx_float(leaf, region) -> bool:
         region is regions_lib.Region.APPROX
         and hasattr(leaf, "dtype")
         and jnp.issubdtype(leaf.dtype, jnp.floating)
+    )
+
+
+def _has_tracers(tree: Any) -> bool:
+    """True when any leaf is a jax tracer — the caller is inside an enclosing
+    jit, so the mechanism must inline into that trace instead of dispatching
+    a host-side compiled executable."""
+    return any(
+        isinstance(leaf, jax.core.Tracer) for leaf in jax.tree.leaves(tree)
     )
 
 
@@ -103,6 +123,7 @@ def scrub_pages_tree(
     cfg: Any,                       # ApproxConfig or legacy RepairConfig
     stats: stats_lib.Stats,
     region_tree: Any,
+    n_valid: Optional[jax.Array] = None,
 ) -> Tuple[Any, stats_lib.Stats]:
     """Targeted memory-mode repair: only rows ``page_ids`` along the LEADING
     axis of every approximate-region float leaf are repaired and written back
@@ -111,10 +132,16 @@ def scrub_pages_tree(
     the whole resident tree.  Duplicate page ids are idempotent (the same
     repaired rows are written twice).  No-op outside memory mode.
 
+    ``n_valid`` supports the compiled bucketed path (``RepairPlan``): entries
+    ``page_ids[n_valid:]`` are padding duplicates of real ids — their rows
+    are still *repaired* (duplicate scatter writes must carry identical
+    values to stay deterministic) but they are masked out of the lane
+    counts, so padded and unpadded calls report identical stats.
+
     The caller guarantees every approximate float leaf shares one leading
     page axis (the serving KV pool layout, ``Model.paged_cache_defs``).
     """
-    from ..core.repair import repair_tensor  # deferred: repair shims us
+    from ..core.repair import fatal_masks  # deferred: repair shims us
 
     if cfg.mode != "memory":
         return tree, stats
@@ -127,16 +154,26 @@ def scrub_pages_tree(
     region_leaves = jax.tree.leaves(region_tree)
     assert len(leaves) == len(region_leaves), "region tree structure mismatch"
 
+    valid = None
+    if n_valid is not None:
+        valid = jnp.arange(page_ids.shape[0]) < n_valid
+
     fixed_leaves = []
     for leaf, region in zip(leaves, region_leaves):
         if _is_approx_float(leaf, region):
             rows = leaf[page_ids]
-            fixed, n, i = repair_tensor(
-                rows, policy=policy, include_inf=cfg.include_inf,
+            nan_m, inf_m = fatal_masks(
+                rows, include_inf=cfg.include_inf,
                 max_magnitude=cfg.max_magnitude,
             )
-            nan_tot = nan_tot + n
-            inf_tot = inf_tot + i
+            mask = nan_m | inf_m
+            fixed = jnp.where(mask, policy(rows, mask), rows)
+            if valid is not None:
+                vshape = (rows.shape[0],) + (1,) * (rows.ndim - 1)
+                nan_m = nan_m & valid.reshape(vshape)
+                inf_m = inf_m & valid.reshape(vshape)
+            nan_tot = nan_tot + jnp.sum(nan_m.astype(jnp.int32))
+            inf_tot = inf_tot + jnp.sum(inf_m.astype(jnp.int32))
             fixed_leaves.append(leaf.at[page_ids].set(fixed.astype(leaf.dtype)))
         else:
             fixed_leaves.append(leaf)
@@ -167,6 +204,48 @@ def use_tensor(
         max_magnitude=cfg.max_magnitude,
     )
     return fixed, stats_lib.record_repair(stats, n, i)
+
+
+def reference_scrub_tree(
+    tree: Any,
+    ref_tree: Any,
+    stats: stats_lib.Stats,
+    region_tree: Any,
+    *,
+    include_inf: bool = True,
+) -> Tuple[Any, stats_lib.Stats]:
+    """``last_checkpoint`` repair (README §Policies): replace fatal lanes of
+    approximate-region leaves with the values from ``ref_tree`` (same
+    treedef, e.g. the latest checkpoint) — exact restoration for frozen
+    weights, one checkpoint interval of optimizer drift otherwise.
+
+    Unlike ``scrub_tree`` this is NOT gated on the repair mode: a reference
+    repair is always an explicit request (checkpoint restore, periodic
+    reference pass) and must run even in register-mode or off deployments.
+    """
+    from ..core.repair import fatal_masks  # deferred: repair shims us
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    refs = jax.tree.leaves(ref_tree)
+    regs = jax.tree.leaves(region_tree)
+    assert len(leaves) == len(refs) == len(regs), "treedef mismatch"
+
+    nan_tot = jnp.zeros((), jnp.int32)
+    inf_tot = jnp.zeros((), jnp.int32)
+    out = []
+    for leaf, ref, region in zip(leaves, refs, regs):
+        if _is_approx_float(leaf, region):
+            nan_m, inf_m = fatal_masks(leaf, include_inf=include_inf)
+            mask = nan_m | inf_m
+            out.append(jnp.where(mask, jnp.asarray(ref, leaf.dtype), leaf))
+            nan_tot = nan_tot + jnp.sum(nan_m.astype(jnp.int32))
+            inf_tot = inf_tot + jnp.sum(inf_m.astype(jnp.int32))
+        else:
+            out.append(leaf)
+    return (
+        jax.tree_util.tree_unflatten(treedef, out),
+        stats_lib.record_repair(stats, nan_tot, inf_tot),
+    )
 
 
 def _leaf_flip_count(before: jax.Array, after: jax.Array) -> jax.Array:
@@ -222,14 +301,58 @@ class ApproxSpace:
         space = ApproxSpace(mode="register")           # field shorthand
     """
 
-    def __init__(self, config: Any = None, **overrides):
+    def __init__(
+        self,
+        config: Any = None,
+        *,
+        mesh: Any = None,
+        rules: Any = None,
+        **overrides,
+    ):
         if config is None:
             config = ApproxConfig(**overrides)
         else:
             config = ApproxConfig.from_legacy(config, **overrides)
         self.config: ApproxConfig = config
         self.stats: stats_lib.Stats = stats_lib.zeros()
+        self.scrubbed_bytes: int = 0     # host ledger: approx bytes processed
         self._region_cache: Dict[Any, Any] = {}
+        # RepairPlan cache: (scope, treedef, avals, shardings, extra) -> plan
+        self._plan_cache: Dict[Any, Any] = {}
+        self.n_traces: int = 0           # compiled-executable trace counter
+        self.mesh = None
+        self.rules = None
+        if mesh is not None:
+            self.use_mesh(mesh, rules)
+
+    # ------------------------------------------------------------------ mesh
+    def use_mesh(self, mesh: Any, rules: Any = None) -> "ApproxSpace":
+        """Attach a device mesh + logical-axis rules to this runtime.
+
+        The mesh handle is what makes the space *mesh-native*: repair plans
+        derive their placement from it (per-shard local scrub, stats reduced
+        globally), the serving pool uses it to register page-axis shardings,
+        and compiled executables are cached per sharding layout.  Changing
+        the mesh invalidates the plan cache (executables are specialized to
+        device placements); the region cache survives (classification is
+        placement-independent).
+        """
+        from ..distributed import sharding as sh  # deferred: keep layering thin
+
+        if mesh is not self.mesh:
+            self._plan_cache.clear()
+        self.mesh = mesh
+        self.rules = rules if rules is not None else sh.rules_for_mesh(mesh)
+        return self
+
+    # ------------------------------------------------------------------ plans
+    def plan_for(self, tree: Any, *, scope: str = "tree", ber: Optional[float] = None):
+        """The ``RepairPlan`` for one (scope, state layout) pair — cached by
+        ``(scope, treedef, avals, shardings)`` so each distinct layout traces
+        its compiled executable exactly once (README §Distributed repair)."""
+        from . import plan as plan_lib  # deferred: plan builds on us
+
+        return plan_lib.plan_for(self, tree, scope=scope, ber=ber)
 
     # ---------------------------------------------------------------- regions
     def regions_for(self, tree: Any) -> Any:
@@ -264,68 +387,99 @@ class ApproxSpace:
         fixed, self.stats = use_tensor(x, self.config, self.stats)
         return fixed
 
-    def scrub(self, tree: Any, stats: Optional[stats_lib.Stats] = None):
+    def scrub(
+        self,
+        tree: Any,
+        stats: Optional[stats_lib.Stats] = None,
+        *,
+        donate: bool = False,
+    ):
         """Memory-mode repair + functional write-back (§3.4).
 
         Pure form with ``stats``; the convenience form records into
         ``self.stats`` (host-side only).
+
+        Called with concrete arrays (the host-side boundary: checkpoint
+        save, pool scrubs, injection windows) this dispatches the plan's
+        jit-compiled executable — traced once per (treedef, avals,
+        shardings), run in place thereafter; ``donate=True`` donates the
+        input buffers (safe only when the returned tree *replaces* the
+        caller's resident state).  Called under an enclosing jit (tracers,
+        e.g. inside ``wrap_train_step``) it inlines into the caller's trace.
         """
-        out, delta_stats = scrub_tree(
-            tree,
-            self.config,
-            stats if stats is not None else stats_lib.zeros(),
-            self.regions_for(tree),
-        )
-        if stats is None:
-            self.stats = stats_lib.merge(self.stats, delta_stats)
-            return out
-        return out, delta_stats
+        if _has_tracers(tree):
+            out, delta = scrub_tree(
+                tree, self.config, stats_lib.zeros(), self.regions_for(tree)
+            )
+        else:
+            plan = self.plan_for(tree, scope="tree")
+            out, delta = plan.run(tree, donate=donate)
+            self.scrubbed_bytes += plan.bytes_per_run
+        return self._thread_stats(out, delta, stats)
 
     def scrub_pages(
         self,
         tree: Any,
         page_ids: Any,
         stats: Optional[stats_lib.Stats] = None,
+        *,
+        donate: bool = False,
     ):
         """Targeted memory-mode repair of rows ``page_ids`` along the leading
         (page) axis of every approximate-region float leaf — the serving
         engine's page-granular scrub (repair only the pages that faulted,
         README §Serving engine).  Same pure/convenience split as ``scrub``.
+
+        The compiled path buckets the id count to the next power of two
+        (padding with duplicates whose counts are masked), so the number of
+        distinct executables stays logarithmic in the pool size instead of
+        linear in the faulted-page count.
         """
-        out, delta_stats = scrub_pages_tree(
-            tree,
-            page_ids,
-            self.config,
-            stats if stats is not None else stats_lib.zeros(),
-            self.regions_for(tree),
-        )
-        if stats is None:
-            self.stats = stats_lib.merge(self.stats, delta_stats)
-            return out
-        return out, delta_stats
+        if _has_tracers(tree):
+            out, delta = scrub_pages_tree(
+                tree, page_ids, self.config, stats_lib.zeros(),
+                self.regions_for(tree),
+            )
+        else:
+            ids = np.asarray(page_ids, np.int32).reshape(-1)
+            if ids.size == 0 or self.config.mode != "memory":
+                return self._thread_stats(tree, stats_lib.zeros(), stats)
+            plan = self.plan_for(tree, scope="pages")
+            out, delta = plan.run(tree, page_ids=ids, donate=donate)
+            self.scrubbed_bytes += int(ids.size) * plan.page_row_bytes
+        return self._thread_stats(out, delta, stats)
 
     def scrub_with_reference(
         self,
         tree: Any,
         ref_tree: Any,
         stats: Optional[stats_lib.Stats] = None,
+        *,
+        donate: bool = False,
     ):
         """``last_checkpoint`` repair (README §Policies): replace fatal lanes
         of approximate-region leaves with values from ``ref_tree`` (e.g. the
-        latest checkpoint) — exact restoration for frozen weights."""
-        from ..core import checkpoint_repair  # deferred: it imports core pkg
+        latest checkpoint) — exact restoration for frozen weights.  Runs in
+        every repair mode (an explicit reference repair is always a request,
+        README §Checkpointing); only ``tree`` is ever donated."""
+        if _has_tracers(tree) or _has_tracers(ref_tree):
+            out, delta = reference_scrub_tree(
+                tree, ref_tree, stats_lib.zeros(), self.regions_for(tree),
+                include_inf=self.config.include_inf,
+            )
+        else:
+            plan = self.plan_for(tree, scope="reference")
+            out, delta = plan.run(tree, reference=ref_tree, donate=donate)
+            self.scrubbed_bytes += plan.bytes_per_run
+        return self._thread_stats(out, delta, stats)
 
-        out, delta_stats = checkpoint_repair.scrub_with_reference(
-            tree,
-            ref_tree,
-            stats if stats is not None else stats_lib.zeros(),
-            self.regions_for(tree),
-            include_inf=self.config.include_inf,
-        )
+    def _thread_stats(self, out, delta, stats):
+        """Merge a functional delta into the caller's stream (pure form) or
+        the space's host stream (convenience form)."""
         if stats is None:
-            self.stats = stats_lib.merge(self.stats, delta_stats)
+            self.stats = stats_lib.merge(self.stats, delta)
             return out
-        return out, delta_stats
+        return out, stats_lib.merge(stats, delta)
 
     # ------------------------------------------------------------- injection
     def inject(
@@ -334,22 +488,32 @@ class ApproxSpace:
         key: jax.Array,
         ber: Optional[float] = None,
         *,
+        stats: Optional[stats_lib.Stats] = None,
         record: bool = True,
-    ) -> Tuple[Any, jax.Array]:
+        donate: bool = False,
+    ) -> Tuple[Any, Any]:
         """Simulation boundary: one approximate-memory window of bit flips
         over the approximate region of ``tree``.
 
-        ``ber`` defaults to the config's refresh-model BER.  Returns
-        ``(flipped_tree, n_flips)`` and records the ground-truth flip count
-        into the unified stats (the previously-dead ``flips`` counter).
-        Pass ``record=False`` when the caller threads ``n_flips`` into its
-        own stats stream (e.g. the train state's) — recording in both would
-        double-count on a later ``space.record`` merge.  Host-side only —
+        ``ber`` defaults to the config's refresh-model BER.  This is the ONE
+        injection/stat entry point shared by train (``inject_state``) and
+        serve (the engine's step): pass ``stats`` to thread the ground-truth
+        flip count into that stream — returns ``(flipped_tree, stats')``.
+        Without ``stats`` it returns ``(flipped_tree, n_flips)`` and records
+        into ``self.stats`` unless ``record=False``.  Host-side only —
         injection runs *between* production steps, exactly as physical
-        flips would.
+        flips would; the compiled executable (cached per layout, donated
+        buffers with ``donate=True``) flips shard-locally and reduces the
+        flip count globally, never per-replica.
         """
         ber = self.config.resolved_ber if ber is None else ber
-        out, flips = inject_tree(tree, key, ber, self.regions_for(tree))
+        if ber <= 0.0 or _has_tracers(tree):
+            out, flips = inject_tree(tree, key, ber, self.regions_for(tree))
+        else:
+            plan = self.plan_for(tree, scope="inject", ber=ber)
+            out, flips = plan.run(tree, key=key, donate=donate)
+        if stats is not None:
+            return out, stats_lib.record_flips(stats, flips)
         if record:
             self.stats = stats_lib.record_flips(self.stats, flips)
         return out, flips

@@ -121,11 +121,15 @@ class Engine:
         # entries could point at pages since freed and reallocated
         self._last_touched = []
 
-        # (1) simulation boundary: one window of flips strikes the pool
+        # (1) simulation boundary: one window of flips strikes the pool —
+        # the same stats-threading injection entry point the train loop's
+        # inject_state uses (flips land in the engine's functional stream,
+        # donated pool buffers, compiled per pool layout)
         if self.cfg.ber > 0.0:
             self._inject_key, k = jax.random.split(self._inject_key)
-            self.pool.tree, _ = self.space.inject(
-                self.pool.tree, k, self.cfg.ber
+            self.pool.tree, self._stream = self.space.inject(
+                self.pool.tree, k, self.cfg.ber,
+                stats=self._stream, donate=True,
             )
 
         # (2) admission + batched prefill (admitted pages are freshly zeroed,

@@ -32,8 +32,10 @@ from typing import Any, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from ..core import stats as stats_lib
+from ..distributed import sharding as sh
 from ..nn import module
 from ..runtime import ApproxSpace
 from .config import ServingConfig
@@ -104,6 +106,22 @@ class PagedKVPool:
         self.cfg = cfg
         self.null_page = cfg.n_pages
         space.regions_for(self.tree)        # pre-register page regions
+        # mesh-native pool: register page-axis shardings with the runtime —
+        # pages spread over the DP axis (sharding rule "page", degrading to
+        # replicated when n_pages+1 does not divide it), so page scrubs
+        # repair device-local rows and the space's compiled executables
+        # specialize to this placement once.
+        self.shardings = None
+        if space.mesh is not None:
+            rules = space.rules or sh.rules_for_mesh(space.mesh)
+
+            def page_sharding(leaf):
+                axes = ("page",) + (None,) * (leaf.ndim - 1)
+                spec = sh.spec_for_leaf(axes, leaf.shape, space.mesh, rules)
+                return NamedSharding(space.mesh, spec)
+
+            self.shardings = jax.tree.map(page_sharding, self.tree)
+            self.tree = jax.device_put(self.tree, self.shardings)
 
         self._free: collections.deque = collections.deque(range(cfg.n_pages))
         # per-page attribution: repair events routed back from steps that
@@ -191,12 +209,14 @@ class PagedKVPool:
         self, page_ids: Sequence[int], stats: stats_lib.Stats
     ) -> stats_lib.Stats:
         """Targeted scrub of exactly ``page_ids`` (unique'd), with byte
-        accounting — the page-granular reactive repair."""
+        accounting — the page-granular reactive repair.  The pool tree is
+        the resident state, so the compiled executable donates it (in-place
+        page repair on device)."""
         ids = sorted(set(page_ids))
         if not ids:
             return stats
         self.tree, stats = self.space.scrub_pages(
-            self.tree, jnp.asarray(ids, jnp.int32), stats
+            self.tree, jnp.asarray(ids, jnp.int32), stats, donate=True
         )
         self.page_scrubs[ids] += 1
         self.scrubbed_bytes += len(ids) * self.page_bytes
@@ -206,10 +226,24 @@ class PagedKVPool:
     def scrub_all(self, stats: stats_lib.Stats) -> stats_lib.Stats:
         """Whole-pool scrub (the pre-engine ``scrub_cache`` baseline), with
         byte accounting."""
-        self.tree, stats = self.space.scrub(self.tree, stats)
+        self.tree, stats = self.space.scrub(self.tree, stats, donate=True)
         self.page_scrubs += 1
         self.scrubbed_bytes += self.total_bytes
         self.scrub_calls += 1
+        return stats
+
+    def scrub_scope(
+        self, scope: str, page_ids: Sequence[int], stats: stats_lib.Stats
+    ) -> stats_lib.Stats:
+        """Execute one planned repair pass by ``RepairPlan`` scope — the
+        pool's ledger-keeping dispatch for the page repair manager (the
+        scope itself comes from ``runtime.plan.serving_scope``; no repair
+        decisions are made here)."""
+        if scope == "pages":
+            return self.scrub_pages(page_ids, stats)
+        if scope == "tree":
+            return self.scrub_all(stats)
+        assert scope == "none", f"bad plan scope {scope!r}"
         return stats
 
     def attribute(self, page_ids: Sequence[int], n_events: int) -> None:

@@ -32,7 +32,7 @@ import numpy as np
 
 from ..core import stats as stats_lib
 from ..kernels import ops as kernel_ops
-from ..runtime import ApproxSpace, ScrubSchedule
+from ..runtime import ApproxSpace, ScrubSchedule, serving_scope
 from .config import ServingConfig
 from .pool import PagedKVPool
 
@@ -77,8 +77,11 @@ class PageRepairManager:
     ) -> stats_lib.Stats:
         """One reactive repair pass before the step's compute consumes the
         touched pages.  Detection (the trap analogue) runs over touched ∪
-        dirty ∪ {null}; repair granularity follows ``cfg.repair``."""
-        if self.cfg.repair == "off":
+        dirty ∪ {null}; repair granularity is planned by ``RepairPlan``
+        (``serving_scope`` maps ``cfg.repair`` to the plan scope — the
+        whole-vs-page decision lives in runtime/, not here)."""
+        scope = serving_scope(self.cfg.repair)
+        if scope == "none":
             return stats
         candidates = set(touched) | self._dirty | {self.pool.null_page}
         faulty = self.pool.fatal_pages(candidates)
@@ -87,10 +90,7 @@ class PageRepairManager:
         if not scrub_set:
             return stats
         events0 = int(stats["events"])
-        if self.cfg.repair == "whole":
-            stats = self.pool.scrub_all(stats)
-        else:
-            stats = self.pool.scrub_pages(scrub_set, stats)
+        stats = self.pool.scrub_scope(scope, scrub_set, stats)
         self.n_reactive_scrubs += 1
         # the ledger charges only pages that actually held a fatal lane —
         # dirty-but-clean pages (kernel routing false positives) stay clean
@@ -101,13 +101,15 @@ class PageRepairManager:
 
     # ----------------------------------------------------------------- sweep
     def sweep_step(self, t: int, stats: stats_lib.Stats) -> stats_lib.Stats:
-        """Background low-rate sweep tick (page mode; whole mode's interval
-        scrub IS a whole-cache pass, matching the legacy schedule)."""
-        if self.cfg.repair == "off" or not self.sweep.due(t):
+        """Background low-rate sweep tick.  Scope comes from the planner
+        (page mode sweeps a rotating window; whole mode's interval scrub IS
+        a whole-cache pass, matching the legacy schedule)."""
+        scope = serving_scope(self.cfg.repair)
+        if scope == "none" or not self.sweep.due(t):
             return stats
-        if self.cfg.repair == "whole":
+        if scope == "tree":
             self.n_sweep_scrubs += 1
-            return self.pool.scrub_all(stats)
+            return self.pool.scrub_scope(scope, (), stats)
         n = self.pool.cfg.n_pages
         window: List[int] = [
             (self._sweep_cursor + i) % n
@@ -115,7 +117,7 @@ class PageRepairManager:
         ]
         self._sweep_cursor = (self._sweep_cursor + len(window)) % n
         self.n_sweep_scrubs += 1
-        return self.pool.scrub_pages(window, stats)
+        return self.pool.scrub_scope(scope, window, stats)
 
     # ------------------------------------------------------------------ intro
     def summary(self) -> dict:

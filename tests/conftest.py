@@ -1,10 +1,15 @@
 import os
 
-# Tests must see the single real CPU device — the 512-device flag belongs to
-# launch/dryrun.py ONLY (per assignment).  Guard against accidental leakage.
-assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), (
-    "dry-run device-count flag leaked into the test environment"
-)
+# Tier-1 tests must see the single real CPU device — the 512-device flag
+# belongs to launch/dryrun.py ONLY (per assignment).  Guard against
+# accidental leakage.  The ONE sanctioned exception is the multidev CI lane
+# (`scripts/ci.sh multidev`): a separate subprocess that sets REPRO_MULTIDEV=1
+# and runs tests/multidev/ under 8 fake host devices; everything else keeps
+# the guard.
+if not os.environ.get("REPRO_MULTIDEV"):
+    assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), (
+        "dry-run device-count flag leaked into the test environment"
+    )
 
 # Property tests degrade to fixed-example replay where hypothesis cannot be
 # installed (tests/_hypothesis_compat.py); the real package wins when present.

@@ -202,6 +202,164 @@ def test_wrap_serve_step_threads_stats_and_scrubs_cache():
     assert int(stats["nan_found"]) == 1
 
 
+def test_compiled_executables_cached_one_trace_per_layout():
+    """Host-side mechanisms dispatch jit-compiled executables cached by
+    (treedef, avals, shardings): repeated same-layout calls never retrace;
+    a new layout (different avals) compiles exactly one more."""
+    space = ApproxSpace(ApproxConfig(mode="memory", policy="zero"))
+    tree = poisoned_state()
+    out, _ = space.scrub(tree, stats_lib.zeros())
+    assert space.n_traces == 1
+    for _ in range(3):
+        out, _ = space.scrub(out, stats_lib.zeros())
+    assert space.n_traces == 1, "same layout must reuse the cached executable"
+    space.scrub({"w": jnp.zeros((4, 4))}, stats_lib.zeros())
+    assert space.n_traces == 2
+
+
+def test_scrub_donate_consumes_input():
+    """donate=True donates the resident buffers: the returned tree REPLACES
+    the input (in-place under XLA), and the old buffers are invalidated."""
+    space = ApproxSpace(ApproxConfig(mode="memory", policy="zero"))
+    tree = {"w": jnp.ones((32, 32)).at[0, 0].set(jnp.nan)}
+    out = space.scrub(tree, donate=True)
+    assert bool(jnp.isfinite(out["w"]).all())
+    with pytest.raises(RuntimeError):
+        np.asarray(tree["w"])           # donated away
+
+
+def test_inject_threads_caller_stats_stream():
+    """The ONE injection/stat entry point (train + serve): with `stats` the
+    flip count threads into that stream and self.stats stays untouched."""
+    space = ApproxSpace(ApproxConfig(ber=1e-5))
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (256, 256))}
+    out, stream = space.inject(
+        tree, jax.random.PRNGKey(1), 1e-5, stats=stats_lib.zeros()
+    )
+    assert int(stream["flips"]) > 0
+    assert space.stats_dict()["flips"] == 0
+    # parity with the recording form
+    out2, flips = space.inject(tree, jax.random.PRNGKey(1), 1e-5)
+    assert int(flips) == int(stream["flips"])
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(out2["w"]))
+
+
+def test_scrub_pages_bucketing_parity():
+    """The compiled page scrub buckets id counts to powers of two (padding
+    masked out of the counts): every count from 1..n matches the eager
+    unbucketed reference bit-for-bit and stat-for-stat."""
+    from repro.runtime.space import scrub_pages_tree
+
+    pool = {"kv": jax.random.normal(jax.random.PRNGKey(0), (8, 4, 4))}
+    pool["kv"] = (
+        pool["kv"].at[1, 0, 0].set(jnp.nan).at[3, 1, 1].set(jnp.inf)
+        .at[6, 2, 2].set(jnp.nan)
+    )
+    space = ApproxSpace(ApproxConfig(mode="memory", policy="zero"))
+    for ids in ([1], [1, 3], [1, 3, 6], [0, 1, 3, 5, 6]):
+        ref, ref_stats = scrub_pages_tree(
+            pool, jnp.asarray(ids, jnp.int32), space.config,
+            stats_lib.zeros(), space.regions_for(pool),
+        )
+        out, out_stats = space.scrub_pages(pool, ids, stats_lib.zeros())
+        np.testing.assert_array_equal(
+            np.asarray(ref["kv"]), np.asarray(out["kv"])
+        )
+        assert stats_lib.as_dict(ref_stats) == stats_lib.as_dict(out_stats)
+    # buckets of 1, 2, 4, 8 -> at most 4 distinct traces, not one per count
+    assert space.n_traces <= 4
+
+
+def test_repair_plan_scope_resolution():
+    """RepairPlan picks scope from the mechanism + mode: memory-mode scrubs
+    plan their scope, non-memory modes resolve to the no-op plan, reference
+    repair always runs, and the serving mode map lives in runtime.plan."""
+    from repro.runtime import serving_scope
+    from repro.runtime.plan import plan_for
+
+    tree = {"w": jnp.zeros((4, 4))}
+    mem = ApproxSpace(ApproxConfig(mode="memory"))
+    off = ApproxSpace(ApproxConfig(mode="off"))
+    assert plan_for(mem, tree, scope="tree").scope == "tree"
+    assert plan_for(mem, tree, scope="pages").scope == "pages"
+    assert plan_for(off, tree, scope="tree").scope == "none"
+    assert plan_for(off, tree, scope="reference").scope == "reference"
+    assert plan_for(mem, tree).placement == "local"
+    assert (serving_scope("off"), serving_scope("whole"), serving_scope("page")) == (
+        "none", "tree", "pages"
+    )
+    with pytest.raises(ValueError):
+        serving_scope("bogus")
+    with pytest.raises(ValueError):
+        plan_for(mem, tree, scope="bogus")
+
+
+def test_compiled_paths_pass_non_array_leaves_through():
+    """User trees may carry plain python scalars (the eager path passed
+    them through untouched); the compiled path must not choke on them."""
+    space = ApproxSpace(ApproxConfig(mode="memory", policy="zero"))
+    tree = {"w": jnp.array([jnp.nan, 2.0]), "step": 3}
+    out, st = space.scrub(tree, stats_lib.zeros())
+    assert bool(jnp.isfinite(out["w"]).all())
+    assert int(out["step"]) == 3
+    assert stats_lib.as_dict(st)["nan_found"] == 1
+    out2, _ = space.inject(
+        {"w": jnp.ones((64, 64)), "epoch": 7}, jax.random.PRNGKey(0), 1e-4
+    )
+    assert int(out2["epoch"]) == 7
+
+
+def test_plan_run_empty_page_ids_is_noop():
+    """Direct plan users get the same empty-set no-op as scrub_pages."""
+    space = ApproxSpace(ApproxConfig(mode="memory", policy="zero"))
+    pool = {"kv": jnp.ones((4, 2))}
+    plan = space.plan_for(pool, scope="pages")
+    out, delta = plan.run(pool, page_ids=[])
+    np.testing.assert_array_equal(np.asarray(out["kv"]), np.asarray(pool["kv"]))
+    assert stats_lib.as_dict(delta)["events"] == 0
+
+
+def test_scrub_off_mode_noop_through_plan():
+    """mode != memory: scrub is the identity (scope "none"), zero stats
+    delta, zero bytes — matching the eager tree functions' gate."""
+    space = ApproxSpace(ApproxConfig(mode="register"))
+    tree = {"w": jnp.array([jnp.nan, 1.0])}
+    out, st = space.scrub(tree, stats_lib.zeros())
+    assert not bool(jnp.isfinite(out["w"]).all())       # untouched
+    assert stats_lib.as_dict(st)["events"] == 0
+    assert space.scrubbed_bytes == 0
+
+
+def test_scrubbed_bytes_ledger():
+    """The space's host ledger counts approximate-region bytes per pass —
+    full tree for scope "tree", faulted rows only for scope "pages"."""
+    space = ApproxSpace(ApproxConfig(mode="memory", policy="zero"))
+    pool = {"kv": jnp.zeros((8, 4, 4), jnp.float32)}
+    space.scrub(pool)
+    whole = 8 * 4 * 4 * 4
+    assert space.scrubbed_bytes == whole
+    space.scrub_pages(pool, [0, 3])
+    assert space.scrubbed_bytes == whole + 2 * (whole // 8)
+
+
+# -------------------------------------------------------------- deprecation
+def test_legacy_shims_warn():
+    """The legacy pytree entry points are real deprecated shims now: every
+    call emits a DeprecationWarning (satellite: no more docs-only note)."""
+    from repro.core import checkpoint_repair
+
+    tree = {"w": jnp.array([jnp.nan, 1.0])}
+    cfg = repair_lib.RepairConfig(mode="memory", policy="zero")
+    with pytest.warns(DeprecationWarning, match="scrub_pytree"):
+        repair_lib.scrub_pytree(tree, cfg, stats_lib.zeros())
+    with pytest.warns(DeprecationWarning, match="inject_pytree"):
+        repair_lib.inject_pytree(tree, jax.random.PRNGKey(0), 1e-6)
+    with pytest.warns(DeprecationWarning, match="scrub_with_reference"):
+        checkpoint_repair.scrub_with_reference(
+            tree, {"w": jnp.zeros((2,))}, stats_lib.zeros()
+        )
+
+
 def test_schedule_due():
     sched = ScrubSchedule(boundary=False, interval=4)
     assert [t for t in range(9) if sched.due(t)] == [0, 4, 8]
