@@ -1,0 +1,59 @@
+"""Validate BENCH_repair.json against the keys the README quotes.
+
+README §Distributed repair cites the repair-pipeline bench record: eager vs
+compiled scrub/inject wall-time and scrubbed-bytes/step on 1 and 8 fake
+devices, plus the trace count.  If a refactor renames or drops any of those
+keys the bench silently stops backing the README's claims — this check makes
+the bench step fail loudly instead.
+
+    python scripts/check_bench.py BENCH_repair.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+SECTIONS = ("devices_1", "devices_8")
+SECTION_KEYS = (
+    "devices",
+    "placement",
+    "eager_scrub_us",
+    "compiled_scrub_us",
+    "eager_inject_us",
+    "compiled_inject_us",
+    "scrubbed_bytes_per_step",
+    "traces",
+)
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        record = json.load(f)
+    missing = []
+    sections = record.get("sections")
+    if not isinstance(sections, dict):
+        missing.append("sections")
+        sections = {}
+    for name in SECTIONS:
+        sec = sections.get(name)
+        if not isinstance(sec, dict):
+            missing.append(f"sections.{name}")
+            continue
+        for key in SECTION_KEYS:
+            if key not in sec:
+                missing.append(f"sections.{name}.{key}")
+    if missing:
+        print(f"{path}: missing keys the README quotes:", file=sys.stderr)
+        for m in missing:
+            print(f"  - {m}", file=sys.stderr)
+        return 1
+    print(f"{path}: all README-quoted keys present "
+          f"({len(SECTIONS) * len(SECTION_KEYS)} checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    sys.exit(check(sys.argv[1]))

@@ -3,16 +3,31 @@
 # benchmark smoke run.
 #
 #   bash scripts/ci.sh            # everything
+#   bash scripts/ci.sh lint       # ruff check (skipped if ruff is absent)
 #   bash scripts/ci.sh tests      # tier-1 suite only (single device)
 #   bash scripts/ci.sh multidev   # distributed-repair suite (8 fake devices)
 #   bash scripts/ci.sh smoke      # examples only
 #   bash scripts/ci.sh bench      # benchmark sections (--smoke shapes),
-#                                 # records BENCH_repair.json
+#                                 # records + validates BENCH_repair.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 what="${1:-all}"
+
+if [[ "$what" == "all" || "$what" == "lint" ]]; then
+    # lint lane (config in pyproject.toml [tool.ruff]).  ruff is not baked
+    # into every container image; when absent the lane degrades to a loud
+    # skip instead of failing environments that cannot install it.
+    echo "== lint (ruff check) =="
+    if command -v ruff >/dev/null 2>&1; then
+        ruff check .
+    elif python -m ruff --version >/dev/null 2>&1; then
+        python -m ruff check .
+    else
+        echo "ruff not installed — skipping lint lane"
+    fi
+fi
 
 if [[ "$what" == "all" || "$what" == "tests" ]]; then
     echo "== tier-1 suite =="
@@ -41,6 +56,9 @@ if [[ "$what" == "all" || "$what" == "bench" ]]; then
     # and records the trajectory to BENCH_repair.json
     echo "== benchmarks (smoke shapes) =="
     python -m benchmarks.run --smoke --out BENCH_repair.json
+    # the record must keep every key the README quotes (fail loudly if a
+    # refactor renames/drops one — the README's perf claims would go stale)
+    python scripts/check_bench.py BENCH_repair.json
 fi
 
 echo "CI OK"

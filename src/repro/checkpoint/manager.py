@@ -45,7 +45,12 @@ _ARRAYS = "arrays.npz"
 
 def _save_space(repair_cfg: Optional[Any], space: Optional[ApproxSpace]):
     """The runtime used for scrub-on-save: memory-forced (a checkpoint must
-    be clean regardless of the run's repair mode), zero policy by default."""
+    be clean regardless of the run's repair mode), zero policy by default.
+
+    A ``repair_cfg`` carrying an explicit ``RuleSet`` keeps it: save scrubs
+    and restore repairs run as *forced* passes, so every non-exact rule
+    fires with its own detector/fill, and exact-island leaves stay untouched
+    (README §RepairRule)."""
     if space is not None:
         return space
     if repair_cfg is None:

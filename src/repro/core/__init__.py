@@ -3,6 +3,8 @@
 Public surface:
 
   detect       bit-pattern NaN/Inf detection (shared with Pallas kernels)
+  rules        RepairRule API: Detector × Fill × Trigger bound to tree
+               paths by a RuleSet (README §RepairRule)
   policies     repair-value policy lattice (paper §5.2 design space)
   injection    approximate-memory simulator (BER model + bit flips)
   regions      exact/approximate memory partitioning of state pytrees
@@ -21,6 +23,8 @@ from . import (  # noqa: F401
     provenance,
     regions,
     repair,
+    rules,
     stats,
 )
 from .repair import RepairConfig, repair_tensor, scrub_pytree, use  # noqa: F401
+from .rules import Detector, RepairRule, RuleSet  # noqa: F401

@@ -14,6 +14,12 @@ at the bit level rather than with ``jnp.isnan`` for two reasons:
    canonical implementation here makes kernel and reference agree bit-for-bit.
 
 All functions are shape-polymorphic and jit-safe.
+
+This module owns the per-dtype layout constants; *which* of these patterns
+count as fatal for a given leaf is decided one level up by
+``core.rules.Detector`` (README §RepairRule), which also encodes the masks
+and enables into the int32[8] scalar-prefetch operand the Pallas kernels
+consume (``kernels/common.py``).
 """
 from __future__ import annotations
 

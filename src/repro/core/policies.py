@@ -19,6 +19,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from . import tiling
+
 
 @dataclasses.dataclass(frozen=True)
 class RepairPolicy:
@@ -52,16 +54,61 @@ def _clamp_finite_max(x, mask):
     return sign * big
 
 
+def _pairwise_sum(v: jax.Array) -> jax.Array:
+    """Order-fixed pairwise (halving) sum along the last axis.
+
+    A plain ``jnp.sum`` lets XLA pick the reduction order, which differs
+    between shardings (a cross-shard sum reassociates) — the one thing that
+    kept sharded neighbor_mean scrubs off bit parity with single-device
+    (README §Distributed repair).  The halving fold is a fixed association
+    tree built from elementwise adds of identical values, so the result is
+    bit-identical under any GSPMD placement."""
+    n = v.shape[-1]
+    p = 1 << max(0, (n - 1).bit_length())
+    if p != n:
+        pad = jnp.zeros(v.shape[:-1] + (p - n,), v.dtype)
+        v = jnp.concatenate([v, pad], axis=-1)
+    while v.shape[-1] > 1:
+        half = v.shape[-1] // 2
+        v = v[..., :half] + v[..., half:]
+    return v[..., 0]
+
+
 def _neighbor_mean(x, mask):
-    """Mean of the *finite* lanes of the same tensor (or tile, inside a
-    kernel).  This is the cheapest statistically-plausible value: weights and
-    activations in trained nets are near-symmetric around a small mean, so the
-    tile mean is a far better guess than 0 for denominator-bearing tensors
-    (addresses the paper's §5.2 division concern)."""
-    ok = ~mask
-    cnt = jnp.maximum(jnp.sum(ok.astype(x.dtype)), jnp.array(1, x.dtype))
-    total = jnp.sum(jnp.where(ok, x, jnp.zeros_like(x)))
-    return jnp.broadcast_to(total / cnt, x.shape).astype(x.dtype)
+    """TILE-LOCAL mean of the finite lanes: the repaired lane takes the mean
+    of its own tile, matching the fused kernels' tile-mean semantics (the
+    statistics come from the data already resident in VMEM).  This is the
+    cheapest statistically-plausible value: weights and activations in
+    trained nets are near-symmetric around a small mean, so the tile mean is
+    a far better guess than 0 for denominator-bearing tensors (addresses the
+    paper's §5.2 division concern).
+
+    The per-tile reduction is an order-fixed pairwise sum in f32 (same
+    accumulation dtype as the kernels), so the fill value is bit-identical
+    between single-device and sharded executions — sharding can reassociate
+    a free-form ``jnp.sum``, never this fold.
+
+    Tile geometry comes from ``core.tiling`` — the ONE fit shared with the
+    scrub/matmul/attention kernels."""
+    if x.size == 0:
+        return x                      # nothing to fill; zero-size leaf
+    orig_shape = x.shape
+    x2 = x.reshape(1, -1) if x.ndim < 2 else x.reshape(-1, x.shape[-1])
+    ok2 = (~mask).reshape(x2.shape)
+    rows, cols = x2.shape
+    br, bc = tiling.fit_blocks(rows, cols)
+    # (R/br, br, C/bc, bc) -> (R/br, C/bc, br*bc): one row per tile
+    tiles = x2.reshape(rows // br, br, cols // bc, bc).transpose(0, 2, 1, 3)
+    tiles = tiles.reshape(rows // br, cols // bc, br * bc)
+    okt = ok2.reshape(rows // br, br, cols // bc, bc).transpose(0, 2, 1, 3)
+    okt = okt.reshape(rows // br, cols // bc, br * bc)
+    total = _pairwise_sum(jnp.where(okt, tiles.astype(jnp.float32), 0.0))
+    cnt = jnp.maximum(_pairwise_sum(okt.astype(jnp.float32)), 1.0)
+    mean = (total / cnt).astype(x.dtype)          # (R/br, C/bc)
+    fill = jnp.broadcast_to(
+        mean[:, None, :, None], (rows // br, br, cols // bc, bc)
+    )
+    return fill.reshape(rows, cols).reshape(orig_shape)
 
 
 zero = RepairPolicy("zero", _zero)

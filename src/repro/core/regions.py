@@ -14,6 +14,13 @@ lives where.  Defaults (overridable per config):
 
 A region spec is a pytree of ``Region`` values with the same treedef as the
 state it annotates, built from ordered path-pattern rules.
+
+These rules carry the *default* partition (control-plane scalars pinned
+exact).  ``RepairRule.exact_rule()`` bindings in a config's ``RuleSet``
+(README §RepairRule) add exact islands on top: ``ApproxSpace.regions_for``
+overrides a leaf to EXACT when its repair rule is exact, so "exact via
+stronger correction" is expressed per path pattern, not by editing this
+table.
 """
 from __future__ import annotations
 

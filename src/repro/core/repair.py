@@ -38,7 +38,8 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import detect, policies, regions as regions_lib, stats as stats_lib
+from . import policies, regions as regions_lib, stats as stats_lib
+from . import rules as rules_lib
 
 
 def _deprecated(name: str, replacement: str) -> None:
@@ -83,21 +84,21 @@ def fatal_masks(
     *,
     include_inf: bool = True,
     max_magnitude: Optional[float] = None,
+    detector: Optional[rules_lib.Detector] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """(nan_mask, inf_mask) of the fatal lanes of ``x`` — the detection half
     of ``repair_tensor``, exposed so callers that need per-lane masks (the
     page-bucketed compiled scrub masks padding rows out of its counts) share
-    one definition of "fatal" with the repair path."""
-    bits = detect.bits_of(x)
-    nan_m = detect.is_nan_bits(bits, x.dtype)
-    if max_magnitude is not None:
-        ext = detect.is_extreme_bits(bits, x.dtype, max_magnitude)
-        inf_m = ext & ~nan_m
-    elif include_inf:
-        inf_m = detect.is_inf_bits(bits, x.dtype)
-    else:
-        inf_m = jnp.zeros_like(nan_m)
-    return nan_m, inf_m
+    one definition of "fatal" with the repair path.
+
+    Detection is a ``rules.Detector`` (README §RepairRule); the scalar
+    ``include_inf``/``max_magnitude`` form lifts into the equivalent
+    detector, bit for bit."""
+    if detector is None:
+        detector = rules_lib.Detector(
+            nan=True, inf=include_inf, max_magnitude=max_magnitude
+        )
+    return detector.masks(x)
 
 
 def repair_tensor(
@@ -106,6 +107,7 @@ def repair_tensor(
     policy: policies.RepairPolicy,
     include_inf: bool = True,
     max_magnitude: Optional[float] = None,
+    detector: Optional[rules_lib.Detector] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Repair fatal lanes of one tensor.
 
@@ -114,9 +116,12 @@ def repair_tensor(
     left as-is (the paper's core low-overhead argument: only NaNs are fatal).
     With ``max_magnitude``, |x| ≥ threshold lanes are fatal too (counted with
     the inf bucket — they are the same flip event one mantissa bit away).
+    ``detector`` overrides the scalar detection knobs with an explicit
+    ``rules.Detector``.
     """
     nan_m, inf_m = fatal_masks(
-        x, include_inf=include_inf, max_magnitude=max_magnitude
+        x, include_inf=include_inf, max_magnitude=max_magnitude,
+        detector=detector,
     )
     mask = nan_m | inf_m
     fixed = jnp.where(mask, policy(x, mask), x)
@@ -137,7 +142,9 @@ def use(
     In ``register`` mode this is the trap-analogue executed at *every* use.
     In ``memory``/``off`` modes it is the identity (memory mode relies on the
     scrubbed buffer, so per-use work would be pure overhead — exactly the
-    paper's argument for the memory-repairing mechanism).
+    paper's argument for the memory-repairing mechanism) — except for a
+    bound *on-read* rule, whose leaves repair here and only here
+    (README §RepairRule).
 
     Returns ``repaired`` (stats is None) or ``(repaired, stats')``.
 
@@ -146,8 +153,6 @@ def use(
     from ..runtime import ApproxSpace  # deferred: runtime builds on us
 
     if stats is None:
-        if cfg.mode != "register":
-            return x
         fixed, _ = ApproxSpace(cfg).use(x, stats_lib.zeros())
         return fixed
     return ApproxSpace(cfg).use(x, stats)

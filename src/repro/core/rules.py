@@ -1,0 +1,358 @@
+"""`RepairRule` — the repair surface as per-region Detector × Fill × Trigger
+rules bound by path patterns.
+
+The paper leaves two choices open: *which* stored patterns count as fatal
+(§2.2 defines the NaN pattern; §5.2 notes ±Inf and huge-exponent flips are
+one mantissa bit away) and *what value* a fatal lane is fixed to (§5.2's
+"the value to which a NaN is fixed").  EDEN (PAPERS.md) adds the systems
+lesson: approximate-DRAM deployments only work when error tolerance is tuned
+*per data structure*.  One global knob cannot express "fp32 optimizer state
+is range-guarded and conservatively filled, bf16 KV pages are NaN-only and
+zero-filled, embedding tables sit in an ECC-protected exact island".
+
+A rule is the triple the design space factors into:
+
+  Detector   which stored bit patterns are fatal — NaN, ±Inf, exponent-range
+             (the beyond-paper ``max_magnitude`` clamp), or a custom
+             per-dtype bit pattern ((bits & mask) == value, the
+             integrated-ECC analogue for formats the defaults do not cover)
+  Fill       the repair-value policy (``core.policies``: zero, constant,
+             neighbor_mean, clamp_finite_max, ...)
+  Trigger    which scheduled passes repair the leaf —
+               boundary   every memory-mode pass (step boundary, periodic,
+                          reactive; the legacy default)
+               interval   periodic + reactive passes only (skip the
+                          per-step boundary scrub)
+               reactive   reactive passes only (serving page repair /
+                          kernel-event routing)
+               on-read    use()-site repair only (register semantics per
+                          leaf; scheduled scrubs skip it)
+             Forced passes (checkpoint save, reference repair) repair every
+             non-exact leaf regardless of trigger: a checkpoint must never
+             persist a fatal lane.
+
+``RepairRule.exact_rule()`` expresses "exact via stronger correction" as
+just another rule: the matched leaves are pinned to the exact region (never
+injected, never repaired — they are error-free by construction), instead of
+hard-coding the split in the region rules.
+
+A ``RuleSet`` binds rules to state-tree paths with ordered regex patterns
+(first match wins, same matching as ``core.regions``), and is the single
+definition train scrub, serving page repair, and checkpoint-restore repair
+all resolve their behavior from (README §RepairRule).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import detect, policies, regions as regions_lib
+
+__all__ = [
+    "Detector", "RepairRule", "RuleSet", "TRIGGERS", "PASSES", "ruleset_of",
+]
+
+TRIGGERS = ("boundary", "interval", "reactive", "on-read")
+
+# Scheduled-pass tags and which triggers fire on them.  "forced" is the
+# explicit-request tag (checkpoint save scrub, reference repair, direct
+# ``space.scrub`` calls): every trigger fires there.
+PASSES = ("boundary", "interval", "reactive", "forced")
+
+_FIRES = {
+    "boundary": frozenset(("boundary", "interval", "reactive", "forced")),
+    "interval": frozenset(("interval", "reactive", "forced")),
+    "reactive": frozenset(("reactive", "forced")),
+    "on-read": frozenset(("forced",)),
+}
+
+
+# ---------------------------------------------------------------------------
+# Detector.
+# ---------------------------------------------------------------------------
+
+# Detector-constants layout for the Pallas kernels (int32[8], passed as a
+# scalar-prefetch operand — see kernels/common.py):
+#   0 exp_mask   1 man_mask   2 flags   3 range exp-field threshold (shifted)
+#   4 bitpattern mask   5 bitpattern value   6-7 pad
+FLAG_NAN, FLAG_INF, FLAG_RANGE, FLAG_BITPATTERN = 1, 2, 4, 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Detector:
+    """Which stored bit patterns are fatal (per-dtype, via ``core.detect``
+    layout constants).
+
+    nan             the paper's pattern: exp all-ones, mantissa != 0
+    inf             ±Inf (exp all-ones, mantissa == 0) — ignored when
+                    ``max_magnitude`` is set (the range guard subsumes it:
+                    Inf's exponent field is maximal)
+    max_magnitude   beyond-paper range guard: lanes with exponent field ≥
+                    that of the threshold are fatal (README §Config)
+    bitpatterns     custom per-dtype patterns: (dtype_name | None, mask,
+                    value) entries — a lane is fatal when
+                    ``(bits & mask) == value`` and the entry's dtype matches
+                    (None matches any dtype).  Counted in the NaN bucket.
+    """
+
+    nan: bool = True
+    inf: bool = True
+    max_magnitude: Optional[float] = None
+    bitpatterns: Tuple[Tuple[Optional[str], int, int], ...] = ()
+
+    def masks(self, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """(nan_mask, inf_mask) of the fatal lanes of ``x``.
+
+        Branch structure mirrors the legacy ``fatal_masks`` exactly so a
+        one-rule legacy lift is bit-for-bit identical: with
+        ``max_magnitude`` set, the range guard owns the non-NaN bucket
+        (it includes ±Inf by construction); otherwise ``inf`` gates the
+        ±Inf pattern.
+        """
+        bits = detect.bits_of(x)
+        if self.nan:
+            nan_m = detect.is_nan_bits(bits, x.dtype)
+        else:
+            nan_m = jnp.zeros(x.shape, jnp.bool_)
+        for dt, mask, value in self.bitpatterns:
+            if dt is not None and jnp.dtype(dt) != jnp.dtype(x.dtype):
+                continue
+            lay = detect.layout_of(x.dtype)
+            m = jnp.asarray(mask, lay.int_dtype)
+            v = jnp.asarray(value, lay.int_dtype)
+            nan_m = nan_m | ((bits & m) == v)
+        if self.max_magnitude is not None:
+            ext = detect.is_extreme_bits(bits, x.dtype, self.max_magnitude)
+            inf_m = ext & ~nan_m
+        elif self.inf:
+            inf_m = detect.is_inf_bits(bits, x.dtype)
+        else:
+            inf_m = jnp.zeros_like(nan_m)
+        return nan_m, inf_m
+
+    def constants(self, dtype) -> Tuple[int, ...]:
+        """The int32[8] scalar-operand encoding of this detector for
+        ``dtype`` (kernels read it from SMEM instead of baking the NaN
+        pattern in — see kernels/common.py)."""
+        lay = detect.layout_of(dtype)
+        if lay.width > 32:
+            raise TypeError(
+                f"kernel detectors support dtypes up to 32 bits, got {dtype}"
+            )
+        flags = 0
+        if self.nan:
+            flags |= FLAG_NAN
+        range_field = 0
+        if self.max_magnitude is not None:
+            flags |= FLAG_RANGE
+            range_field = (
+                detect.exp_field_of(self.max_magnitude, dtype) << lay.man_bits
+            )
+        elif self.inf:
+            flags |= FLAG_INF
+        bp_mask = bp_value = 0
+        for dt, mask, value in self.bitpatterns:
+            if dt is not None and jnp.dtype(dt) != jnp.dtype(dtype):
+                continue
+            if flags & FLAG_BITPATTERN:
+                raise ValueError(
+                    "kernels support at most one bitpattern per dtype"
+                )
+            flags |= FLAG_BITPATTERN
+            bp_mask, bp_value = int(mask), int(value)
+        return (
+            lay.exp_mask, lay.man_mask, flags, range_field,
+            bp_mask, bp_value, 0, 0,
+        )
+
+    def key(self) -> Tuple:
+        """Hashable digest for plan-cache keys."""
+        return ("det", self.nan, self.inf, self.max_magnitude, self.bitpatterns)
+
+
+# ---------------------------------------------------------------------------
+# RepairRule.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairRule:
+    """Detector × Fill × Trigger for one protection class of leaves."""
+
+    detect: Detector = Detector()
+    fill: Any = "neighbor_mean"       # name | float | RepairPolicy
+    trigger: str = "boundary"
+    exact: bool = False               # ECC-like exact island: never repaired
+    label: str = ""                   # stats key; defaults to the bound pattern
+
+    def __post_init__(self):
+        if self.trigger not in TRIGGERS:
+            raise ValueError(
+                f"bad trigger {self.trigger!r}; expected one of {TRIGGERS}"
+            )
+
+    @staticmethod
+    def exact_rule(label: str = "exact") -> "RepairRule":
+        """The matched leaves live in exact memory (nominal refresh /
+        stronger correction): never injected, never repaired."""
+        return RepairRule(exact=True, label=label)
+
+    def resolved_fill(self) -> policies.RepairPolicy:
+        return policies.get(self.fill)
+
+    def fires(self, pass_tag: str) -> bool:
+        """Does this rule repair on a scheduled pass tagged ``pass_tag``?"""
+        if self.exact:
+            return False
+        return pass_tag in _FIRES[self.trigger]
+
+    def apply(
+        self, x: jax.Array
+    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Repair fatal lanes of one tensor under this rule.  Returns
+        (repaired, nan_count, inf_count) — same contract as the legacy
+        ``repair_tensor``, with detection delegated to the rule's detector."""
+        nan_m, inf_m = self.detect.masks(x)
+        mask = nan_m | inf_m
+        fixed = jnp.where(mask, self.resolved_fill()(x, mask), x)
+        return (
+            fixed,
+            jnp.sum(nan_m.astype(jnp.int32)),
+            jnp.sum(inf_m.astype(jnp.int32)),
+        )
+
+    def key(self) -> Tuple:
+        fill = self.fill
+        if isinstance(fill, policies.RepairPolicy):
+            fill = fill.name
+        return (self.detect.key(), fill, self.trigger, self.exact)
+
+
+# ---------------------------------------------------------------------------
+# RuleSet.
+# ---------------------------------------------------------------------------
+
+# the trailing catch-all applied when no pattern matches (legacy defaults)
+DEFAULT_RULE = RepairRule(label="default")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSet:
+    """Ordered (pattern, RepairRule) bindings over state-tree paths.
+
+    Patterns are regexes searched against the ``a/b/c`` path rendering
+    (``core.regions.path_str``), first match wins — identical matching to
+    the region rules.  Unmatched leaves fall back to ``DEFAULT_RULE``
+    (the legacy single-knob defaults) unless the set ends with its own
+    catch-all.
+    """
+
+    entries: Tuple[Tuple[str, RepairRule], ...]
+
+    def __post_init__(self):
+        # normalize lists and auto-label rules with their binding pattern
+        entries = []
+        for pattern, rule in tuple(self.entries):
+            if not rule.label:
+                rule = dataclasses.replace(rule, label=pattern)
+            entries.append((pattern, rule))
+        object.__setattr__(self, "entries", tuple(entries))
+
+    # ---------------------------------------------------------- constructors
+    @staticmethod
+    def single(rule: RepairRule) -> "RuleSet":
+        """The one-rule compatibility set (legacy scalar-knob lift)."""
+        if not rule.label:
+            rule = dataclasses.replace(rule, label="default")
+        return RuleSet(entries=((r".*", rule),))
+
+    @staticmethod
+    def from_legacy(cfg: Any) -> "RuleSet":
+        """Lift legacy scalar repair fields (``RepairConfig`` /
+        ``ApproxConfig`` without explicit rules) into a one-rule set."""
+        return RuleSet.single(
+            RepairRule(
+                detect=Detector(
+                    nan=True,
+                    inf=cfg.include_inf,
+                    max_magnitude=getattr(cfg, "max_magnitude", None),
+                ),
+                fill=cfg.policy,
+                trigger="boundary",
+                label="default",
+            )
+        )
+
+    # --------------------------------------------------------------- lookup
+    @property
+    def table(self) -> Tuple[RepairRule, ...]:
+        """Rules by index: one per entry, plus the fallback at the end."""
+        return tuple(r for _, r in self.entries) + (DEFAULT_RULE,)
+
+    def labels(self) -> Tuple[str, ...]:
+        """Stats keys, one per rule index.  Duplicate labels (two rules
+        sharing a user label, or a user "default" colliding with the
+        fallback) are suffixed ``#n`` so no rule's counters can shadow
+        another's in the per-rule ledger."""
+        out, seen = [], {}
+        for rule in self.table:
+            n = seen.get(rule.label, 0)
+            seen[rule.label] = n + 1
+            out.append(rule.label if n == 0 else f"{rule.label}#{n}")
+        return tuple(out)
+
+    def rule_for(self, path: str) -> Tuple[int, RepairRule]:
+        """(index, rule) for one rendered tree path (first match wins)."""
+        for i, (pattern, rule) in enumerate(self.entries):
+            if re.search(pattern, path):
+                return i, rule
+        return len(self.entries), DEFAULT_RULE
+
+    def read_rule(self) -> RepairRule:
+        """The rule ``use()`` (register-mode / on-read repair) applies: the
+        first on-read rule if any, else the first non-exact rule, else the
+        fallback — use() sites see single tensors with no tree path."""
+        for _, rule in self.entries:
+            if rule.trigger == "on-read" and not rule.exact:
+                return rule
+        for _, rule in self.entries:
+            if not rule.exact:
+                return rule
+        return DEFAULT_RULE
+
+    def assign(self, tree: Any) -> Tuple[Any, Any]:
+        """(rule_tree, index_tree) matching ``tree``'s structure — the
+        per-leaf rule assignment the planner compiles against."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        indices, rules = [], []
+        for path, _ in flat:
+            i, r = self.rule_for(regions_lib.path_str(path))
+            indices.append(i)
+            rules.append(r)
+        return (
+            jax.tree_util.tree_unflatten(treedef, rules),
+            jax.tree_util.tree_unflatten(treedef, indices),
+        )
+
+    @property
+    def n_rules(self) -> int:
+        return len(self.entries) + 1
+
+    def digest(self) -> Tuple:
+        """Stable hashable token for the plan-cache key: two value-equal
+        rule sets share compiled executables."""
+        return tuple((p, r.key()) for p, r in self.entries)
+
+
+def ruleset_of(cfg: Any) -> RuleSet:
+    """The effective ``RuleSet`` of any repair config: an ``ApproxConfig``
+    exposes ``ruleset`` (explicit rules or the one-rule lift); a legacy
+    ``RepairConfig`` lifts its scalar fields."""
+    rs = getattr(cfg, "ruleset", None)
+    if rs is not None:
+        return rs
+    return RuleSet.from_legacy(cfg)

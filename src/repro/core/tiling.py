@@ -1,0 +1,34 @@
+"""One definition of the VMEM-friendly tile fit shared by the Pallas
+kernels and the jnp policy layer.
+
+The scrub kernel, the fused matmul/attention kernels, and the tile-local
+``neighbor_mean`` policy all need the same answer to "the largest divisor
+of this dimension that fits the VPU-friendly cap" — lane dim a multiple of
+128 up to ``TILE_COLS``, sublane dim a multiple of 8 up to ``TILE_ROWS``,
+degrading by halving for awkward shapes.  Keeping the fit here (rather
+than one hand-copy per call site) makes the documented policy/kernel
+tile agreement structural: change the caps or the rounding once, every
+consumer follows.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+# Default caps: sublane (row) dim ≤ 256, lane (col) dim ≤ 512.
+TILE_ROWS, TILE_COLS = 256, 512
+
+
+def fit(dim: int, cap: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``cap``, found by halving from
+    ``min(dim, cap)``; never below 1 (zero-size dims fit the unit tile)."""
+    if dim <= 0:
+        return 1
+    b = min(dim, cap)
+    while dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+def fit_blocks(rows: int, cols: int) -> Tuple[int, int]:
+    """(block_rows, block_cols) for a 2D view under the default caps."""
+    return fit(rows, TILE_ROWS), fit(cols, TILE_COLS)

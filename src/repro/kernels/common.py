@@ -23,15 +23,77 @@ have.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core import detect
+from ..core import detect, rules as rules_lib
 
 # Policies expressible inside a kernel body.
 KERNEL_POLICIES = ("zero", "constant", "neighbor_mean", "clamp_finite_max")
+
+# ---------------------------------------------------------------------------
+# Detector constants (README §RepairRule).
+#
+# Detection inside a kernel is no longer baked-in NaN-only logic: the IEEE
+# layout constants and the detector's enables travel as a small int32[8]
+# scalar-prefetch operand (SMEM on TPU, available before the kernel body —
+# layout documented on ``core.rules.Detector.constants``):
+#
+#   0 exp_mask   1 man_mask   2 flags   3 range exp-field threshold (shifted)
+#   4 bitpattern mask   5 bitpattern value   6-7 pad
+#
+# so swapping the detector (NaN-only vs +Inf vs range-guarded vs a custom
+# bit pattern) changes an operand, not the compiled kernel.
+# ---------------------------------------------------------------------------
+
+DEFAULT_DETECTOR = rules_lib.Detector()
+
+
+def resolve_detector(
+    detector: Optional[rules_lib.Detector], include_inf: bool
+) -> rules_lib.Detector:
+    """The effective kernel detector: an explicit one wins; otherwise the
+    legacy ``include_inf`` knob lifts into the equivalent detector."""
+    if detector is not None:
+        return detector
+    return rules_lib.Detector(nan=True, inf=include_inf)
+
+
+def detector_operand(
+    detector: rules_lib.Detector, dtype
+) -> jax.Array:
+    """The int32[8] scalar-prefetch operand encoding ``detector`` for
+    ``dtype`` (see ``Detector.constants``)."""
+    import numpy as np
+
+    consts = detector.constants(dtype)
+    # masks are bit patterns: fold into int32 range via two's complement
+    return jnp.asarray(np.asarray(consts, np.uint32).astype(np.int32))
+
+
+def masks_from_consts(
+    bits: jax.Array, consts: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """(nan_mask, inf_mask) of a tile's integer bit view, driven by the
+    detector-constants operand.  Mirrors ``Detector.masks`` exactly (same
+    bucket rules, so kernel counters and the jnp oracle agree): custom bit
+    patterns land in the NaN bucket; the range guard owns the non-NaN
+    bucket when enabled (it subsumes ±Inf)."""
+    u = lambda i: consts[i].astype(jnp.uint32)                       # noqa: E731
+    b = bits.astype(jnp.uint32)
+    exp_mask, man_mask, flags = u(0), u(1), consts[2]
+    exp_all = (b & exp_mask) == exp_mask
+    man_nz = (b & man_mask) != 0
+    nan_m = exp_all & man_nz & ((flags & rules_lib.FLAG_NAN) > 0)
+    nan_m = nan_m | (
+        ((b & u(4)) == u(5)) & ((flags & rules_lib.FLAG_BITPATTERN) > 0)
+    )
+    inf_m = exp_all & ~man_nz & ((flags & rules_lib.FLAG_INF) > 0)
+    ext_m = ((b & exp_mask) >= u(3)) & ((flags & rules_lib.FLAG_RANGE) > 0)
+    inf_m = inf_m | (ext_m & ~nan_m)
+    return nan_m, inf_m
 
 
 def fatal_mask(tile: jax.Array, *, include_inf: bool = True) -> jax.Array:
@@ -75,12 +137,28 @@ def repair_tile(
     policy: str,
     constant: float = 0.0,
     include_inf: bool = True,
+    consts: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Repair a VMEM tile.  Returns (repaired, nan_count, inf_count) where the
-    counts are int32 scalars for the event counters (Table 3 analogue)."""
+    counts are int32 scalars for the event counters (Table 3 analogue).
+
+    With ``consts`` (the detector-constants scalar operand) detection is
+    data-driven — NaN/Inf/range/bit-pattern enables read from SMEM; the bare
+    ``include_inf`` form keeps the legacy static NaN(+Inf) pattern."""
     bits = jax.lax.bitcast_convert_type(
         tile, detect.layout_of(tile.dtype).int_dtype
     )
+    if consts is not None:
+        nan_m, inf_m = masks_from_consts(bits, consts)
+        mask = nan_m | inf_m
+        fixed = jnp.where(
+            mask, repair_value(tile, mask, policy, constant), tile
+        )
+        return (
+            fixed,
+            jnp.sum(nan_m.astype(jnp.int32)),
+            jnp.sum(inf_m.astype(jnp.int32)),
+        )
     nan_m = detect.is_nan_bits(bits, tile.dtype)
     inf_m = detect.is_inf_bits(bits, tile.dtype)
     mask = (nan_m | inf_m) if include_inf else nan_m

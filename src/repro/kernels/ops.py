@@ -49,12 +49,14 @@ class MatmulResult(NamedTuple):
     counts: jax.Array       # int32[8], see repair_matmul layout
 
 
-def _reactive_scrub(x, events, *, policy, constant, include_inf, interpret):
+def _reactive_scrub(
+    x, events, *, policy, constant, include_inf, interpret, detector=None
+):
     """Scrub ``x`` at its origin only when ``events`` fired (reactive)."""
     def do(x):
         fixed, _ = _scrub.scrub(
             x, policy=policy, constant=constant,
-            include_inf=include_inf, interpret=interpret,
+            include_inf=include_inf, interpret=interpret, detector=detector,
         )
         return fixed
     return jax.lax.cond(events > 0, do, lambda x: x, x)
@@ -64,7 +66,7 @@ def _reactive_scrub(x, events, *, policy, constant, include_inf, interpret):
     jax.jit,
     static_argnames=(
         "mode", "policy", "constant", "include_inf", "interpret", "blocks",
-        "out_dtype",
+        "out_dtype", "detector",
     ),
 )
 def repair_matmul(
@@ -78,18 +80,24 @@ def repair_matmul(
     interpret: Optional[bool] = None,
     blocks: Optional[Tuple[int, int, int]] = None,
     out_dtype=None,
+    detector=None,
 ) -> MatmulResult:
-    """c = a @ b with fused reactive NaN repair on both operands."""
+    """c = a @ b with fused reactive NaN repair on both operands.
+
+    ``detector`` (a ``core.rules.Detector``) overrides the fatal-pattern
+    set; it is forwarded to the kernel as a scalar-prefetch operand and to
+    the reactive origin scrub (README §RepairRule)."""
     if mode not in ("register", "memory"):
         raise ValueError(f"mode must be register|memory, got {mode!r}")
     c, counts = _rm.repair_matmul_raw(
         a, b, policy=policy, constant=constant, include_inf=include_inf,
         interpret=interpret, blocks=blocks, out_dtype=out_dtype,
+        detector=detector,
     )
     if mode == "memory":
         kw = dict(
             policy=policy, constant=constant, include_inf=include_inf,
-            interpret=interpret,
+            interpret=interpret, detector=detector,
         )
         a = _reactive_scrub(a, counts[_rm.EV_A], **kw)
         b = _reactive_scrub(b, counts[_rm.EV_B], **kw)
@@ -107,7 +115,7 @@ class AttentionResult(NamedTuple):
     jax.jit,
     static_argnames=(
         "mode", "causal", "policy", "constant", "include_inf", "interpret",
-        "blocks",
+        "blocks", "detector",
     ),
 )
 def flash_attention(
@@ -122,18 +130,23 @@ def flash_attention(
     include_inf: bool = True,
     interpret: Optional[bool] = None,
     blocks: Optional[Tuple[int, int]] = None,
+    detector=None,
 ) -> AttentionResult:
-    """Flash attention with fused reactive repair of the (cached) K/V."""
+    """Flash attention with fused reactive repair of the (cached) K/V.
+
+    ``detector`` overrides the fatal-pattern set for the K/V tiles
+    (scalar-prefetch operand; README §RepairRule)."""
     if mode not in ("register", "memory"):
         raise ValueError(f"mode must be register|memory, got {mode!r}")
     out, counts = _ra.flash_attention_raw(
         q, k, v, causal=causal, policy=policy, constant=constant,
         include_inf=include_inf, interpret=interpret, blocks=blocks,
+        detector=detector,
     )
     if mode == "memory":
         kw = dict(
             policy=policy, constant=constant, include_inf=include_inf,
-            interpret=interpret,
+            interpret=interpret, detector=detector,
         )
         k = _reactive_scrub(k, counts[_ra.EV_K], **kw)
         v = _reactive_scrub(v, counts[_ra.EV_V], **kw)

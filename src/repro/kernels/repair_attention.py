@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import tiling
 from . import common
 
 NEG_INF = -1e30
@@ -41,10 +42,12 @@ NAN_K, INF_K, EV_K, NAN_V, INF_V, EV_V, EV_TOTAL = range(7)
 
 
 def _flash_kernel(
-    q_ref, k_ref, v_ref, o_ref, counts_ref, acc_ref, m_ref, l_ref,
+    consts_ref, q_ref, k_ref, v_ref, o_ref, counts_ref, acc_ref, m_ref, l_ref,
     *, causal: bool, sm_scale: float, policy: str, constant: float,
-    include_inf: bool, bq: int, bk: int, nk: int, out_dtype,
+    bq: int, bk: int, nk: int, out_dtype,
 ):
+    # consts_ref: scalar-prefetch detector constants (int32[2, 8], SMEM) —
+    # row 0 for K tiles, row 1 for V tiles (dtypes may differ).
     b, h = pl.program_id(0), pl.program_id(1)
     qi, kj = pl.program_id(2), pl.program_id(3)
     step = (
@@ -72,11 +75,11 @@ def _flash_kernel(
         # ---- fused reactive repair of the cached K/V tiles ----
         k_fixed, nan_k, inf_k = common.repair_tile(
             k_ref[0, 0], policy=policy, constant=constant,
-            include_inf=include_inf,
+            consts=consts_ref[0],
         )
         v_fixed, nan_v, inf_v = common.repair_tile(
             v_ref[0, 0], policy=policy, constant=constant,
-            include_inf=include_inf,
+            consts=consts_ref[1],
         )
         ev_k = ((nan_k + inf_k) > 0).astype(jnp.int32)
         ev_v = ((nan_v + inf_v) > 0).astype(jnp.int32)
@@ -117,17 +120,14 @@ def _flash_kernel(
         o_ref[0, 0] = (acc_ref[...] / denom).astype(out_dtype)
 
 
-def _pick(dim: int, want: int) -> int:
-    b = min(dim, want)
-    while dim % b:
-        b //= 2
-    return max(b, 1)
+_pick = tiling.fit      # block fit — one definition repo-wide
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "causal", "policy", "constant", "include_inf", "interpret", "blocks",
+        "detector",
     ),
 )
 def flash_attention_raw(
@@ -141,13 +141,17 @@ def flash_attention_raw(
     include_inf: bool = True,
     interpret: Optional[bool] = None,
     blocks: Optional[Tuple[int, int]] = None,
+    detector=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Online-softmax attention with fused K/V tile repair (register-mode
     core; ops.flash_attention adds reactive memory-mode write-back).
 
-    Returns (out (B,H,S,D), counts int32[8])."""
+    ``detector`` (a ``core.rules.Detector``) picks the fatal-pattern set for
+    the cached K/V tiles; its constants ride in as a scalar-prefetch
+    operand.  Returns (out (B,H,S,D), counts int32[8])."""
     if interpret is None:
         interpret = common.default_interpret()
+    det = common.resolve_detector(detector, include_inf)
     B, H, S, D = q.shape
     _, Kh, T, _ = k.shape
     assert H % Kh == 0, (H, Kh)
@@ -159,6 +163,30 @@ def flash_attention_raw(
 
     from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe import
 
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,       # the detector-constants operand
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j, c: (b, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, D),
+                lambda b, h, i, j, c, g=group: (b, h // g, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, D),
+                lambda b, h, i, j, c, g=group: (b, h // g, j, 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j, c: (b, h, i, 0)),
+            pl.BlockSpec((8,), lambda b, h, i, j, c: (0,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+    )
     out, counts = pl.pallas_call(
         functools.partial(
             _flash_kernel,
@@ -166,37 +194,22 @@ def flash_attention_raw(
             sm_scale=sm_scale,
             policy=policy,
             constant=constant,
-            include_inf=include_inf,
             bq=bq,
             bk=bk,
             nk=nk,
             out_dtype=q.dtype,
         ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec(
-                (1, 1, bk, D),
-                lambda b, h, i, j, g=group: (b, h // g, j, 0),
-            ),
-            pl.BlockSpec(
-                (1, 1, bk, D),
-                lambda b, h, i, j, g=group: (b, h // g, j, 0),
-            ),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((8,), lambda b, h, i, j: (0,)),
-        ],
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
             jax.ShapeDtypeStruct((8,), jnp.int32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((bq, D), jnp.float32),
-            pltpu.VMEM((bq, 128), jnp.float32),
-            pltpu.VMEM((bq, 128), jnp.float32),
-        ],
         interpret=interpret,
-    )(q, k, v)
+    )(
+        jnp.stack([
+            common.detector_operand(det, k.dtype),
+            common.detector_operand(det, v.dtype),
+        ]),
+        q, k, v,
+    )
     return out, counts

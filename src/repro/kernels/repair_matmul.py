@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import tiling
 from . import common
 
 # counts layout (int32[8]):
@@ -57,10 +58,12 @@ NAN_A, INF_A, EV_A, NAN_B, INF_B, EV_B, EV_TOTAL = range(7)
 
 
 def _mm_kernel(
-    a_ref, b_ref, c_ref, counts_ref, acc_ref,
-    *, policy: str, constant: float, include_inf: bool, nk: int,
+    consts_ref, a_ref, b_ref, c_ref, counts_ref, acc_ref,
+    *, policy: str, constant: float, nk: int,
     out_dtype,
 ):
+    # consts_ref: scalar-prefetch detector constants (int32[8], SMEM) — the
+    # fatal-pattern definition is an operand, not baked-in NaN-only logic.
     i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     step = (i * pl.num_programs(1) + j) * pl.num_programs(2) + k
 
@@ -73,11 +76,12 @@ def _mm_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # ---- fused reactive repair: operand tiles, pre-MXU ----
+    # row 0: a's dtype constants; row 1: b's (operands may differ in dtype)
     a_fixed, nan_a, inf_a = common.repair_tile(
-        a_ref[...], policy=policy, constant=constant, include_inf=include_inf
+        a_ref[...], policy=policy, constant=constant, consts=consts_ref[0]
     )
     b_fixed, nan_b, inf_b = common.repair_tile(
-        b_ref[...], policy=policy, constant=constant, include_inf=include_inf
+        b_ref[...], policy=policy, constant=constant, consts=consts_ref[1]
     )
     ev_a = ((nan_a + inf_a) > 0).astype(jnp.int32)
     ev_b = ((nan_b + inf_b) > 0).astype(jnp.int32)
@@ -99,17 +103,14 @@ def _mm_kernel(
         c_ref[...] = acc_ref[...].astype(out_dtype)
 
 
-def _pick(dim: int, want: int) -> int:
-    b = min(dim, want)
-    while dim % b:
-        b //= 2
-    return max(b, 1)
+_pick = tiling.fit      # MXU-aligned block fit — one definition repo-wide
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "policy", "constant", "include_inf", "interpret", "blocks", "out_dtype",
+        "policy", "constant", "include_inf", "interpret", "blocks",
+        "out_dtype", "detector",
     ),
 )
 def repair_matmul_raw(
@@ -122,11 +123,16 @@ def repair_matmul_raw(
     interpret: Optional[bool] = None,
     blocks: Optional[Tuple[int, int, int]] = None,
     out_dtype=None,
+    detector=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """c = repair(a) @ repair(b), plus event counters.  Register-mode core;
-    ops.repair_matmul adds the reactive memory-mode write-back on top."""
+    ops.repair_matmul adds the reactive memory-mode write-back on top.
+
+    ``detector`` (a ``core.rules.Detector``) picks the fatal-pattern set;
+    its constants ride into the kernel as a scalar-prefetch operand."""
     if interpret is None:
         interpret = common.default_interpret()
+    det = common.resolve_detector(detector, include_inf)
     (M, K), (K2, N) = a.shape, b.shape
     assert K == K2, (a.shape, b.shape)
     out_dtype = out_dtype or a.dtype
@@ -138,29 +144,38 @@ def repair_matmul_raw(
 
     from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe import
 
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,       # the detector-constants operand
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k, c: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k, c: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k, c: (i, j)),
+            pl.BlockSpec((8,), lambda i, j, k, c: (0,)),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
     c, counts = pl.pallas_call(
         functools.partial(
             _mm_kernel,
             policy=policy,
             constant=constant,
-            include_inf=include_inf,
             nk=nk,
             out_dtype=out_dtype,
         ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-            pl.BlockSpec((8,), lambda i, j, k: (0,)),
-        ],
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((M, N), out_dtype),
             jax.ShapeDtypeStruct((8,), jnp.int32),
         ],
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(a, b)
+    )(
+        jnp.stack([
+            common.detector_operand(det, a.dtype),
+            common.detector_operand(det, b.dtype),
+        ]),
+        a, b,
+    )
     return c, counts

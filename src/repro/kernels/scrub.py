@@ -31,12 +31,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import tiling
 from . import common
 
 
 def _scrub_kernel(
-    x_ref, out_ref, counts_ref, *, policy: str, constant: float, include_inf: bool
+    consts_ref, x_ref, out_ref, counts_ref, *, policy: str, constant: float
 ):
+    # consts_ref is the scalar-prefetch detector-constants operand (int32[8],
+    # SMEM): detection enables/masks are data, not baked-in NaN-only logic.
     step = pl.program_id(0) * pl.num_programs(1) + pl.program_id(1)
 
     @pl.when(step == 0)
@@ -45,7 +48,7 @@ def _scrub_kernel(
 
     tile = x_ref[...]
     fixed, n_nan, n_inf = common.repair_tile(
-        tile, policy=policy, constant=constant, include_inf=include_inf
+        tile, policy=policy, constant=constant, consts=consts_ref[...]
     )
     out_ref[...] = fixed
     event = ((n_nan + n_inf) > 0).astype(jnp.int32)
@@ -56,19 +59,16 @@ def _scrub_kernel(
 
 def _choose_blocks(rows: int, cols: int) -> Tuple[int, int]:
     """Pick VMEM-friendly tile sizes: lane dim a multiple of 128 (≤512),
-    sublane dim a multiple of 8 (≤256), clamped to the array."""
-    bc = min(cols, 512)
-    while cols % bc:
-        bc //= 2
-    br = min(rows, 256)
-    while rows % br:
-        br //= 2
-    return max(br, 1), max(bc, 1)
+    sublane dim a multiple of 8 (≤256), clamped to the array — the shared
+    fit from ``core.tiling`` (also the neighbor_mean policy's tile)."""
+    return tiling.fit_blocks(rows, cols)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("policy", "constant", "include_inf", "interpret", "block"),
+    static_argnames=(
+        "policy", "constant", "include_inf", "interpret", "block", "detector",
+    ),
 )
 def scrub(
     x: jax.Array,
@@ -78,14 +78,21 @@ def scrub(
     include_inf: bool = True,
     interpret: Optional[bool] = None,
     block: Optional[Tuple[int, int]] = None,
+    detector=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Repair all fatal lanes of ``x`` in place.  Returns (scrubbed, counts).
 
     counts = int32[3]: [nan lanes, inf lanes, tile-visits with ≥1 fatal lane].
     Arbitrary-rank inputs are viewed as 2D (leading dims folded into rows).
+
+    ``detector`` (a ``core.rules.Detector``) selects which stored patterns
+    are fatal; its constants enter the kernel as a scalar-prefetch operand
+    (README §RepairRule).  Default: the legacy NaN(+Inf) pattern via
+    ``include_inf``.
     """
     if interpret is None:
         interpret = common.default_interpret()
+    det = common.resolve_detector(detector, include_inf)
     orig_shape = x.shape
     if x.ndim == 0:
         x2 = x.reshape(1, 1)
@@ -97,26 +104,29 @@ def scrub(
     br, bc = block if block is not None else _choose_blocks(rows, cols)
     grid = (rows // br, cols // bc)
 
-    out, counts = pl.pallas_call(
-        functools.partial(
-            _scrub_kernel,
-            policy=policy,
-            constant=constant,
-            include_inf=include_inf,
-        ),
+    from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe import
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,       # the detector-constants operand
         grid=grid,
-        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j, c: (i, j))],
         out_specs=[
-            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
-            pl.BlockSpec((3,), lambda i, j: (0,)),
+            pl.BlockSpec((br, bc), lambda i, j, c: (i, j)),
+            pl.BlockSpec((3,), lambda i, j, c: (0,)),
         ],
+    )
+    out, counts = pl.pallas_call(
+        functools.partial(_scrub_kernel, policy=policy, constant=constant),
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((rows, cols), x2.dtype),
             jax.ShapeDtypeStruct((3,), jnp.int32),
         ],
-        input_output_aliases={0: 0},   # in-place in HBM, like the paper
+        # operand 0 is the scalar prefetch; x is operand 1 — aliased onto the
+        # scrubbed output: in-place in HBM, like the paper
+        input_output_aliases={1: 0},
         interpret=interpret,
-    )(x2)
+    )(common.detector_operand(det, x2.dtype), x2)
     return out.reshape(orig_shape), counts
 
 
@@ -130,6 +140,7 @@ def scrub_sharded(
     include_inf: bool = True,
     interpret: Optional[bool] = None,
     block: Optional[Tuple[int, int]] = None,
+    detector=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Shard-local scrub entry (README §Distributed repair): run the Pallas
     scrub kernel over each device's *local shard view* via shard_map — no
@@ -163,7 +174,7 @@ def scrub_sharded(
     def local(xs: jax.Array) -> Tuple[jax.Array, jax.Array]:
         fixed, counts = scrub(
             xs, policy=policy, constant=constant, include_inf=include_inf,
-            interpret=interpret, block=block,
+            interpret=interpret, block=block, detector=detector,
         )
         if used:
             counts = jax.lax.psum(counts, axis_name=used)
@@ -177,7 +188,9 @@ def scrub_sharded(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("policy", "constant", "include_inf", "interpret", "block"),
+    static_argnames=(
+        "policy", "constant", "include_inf", "interpret", "block", "detector",
+    ),
 )
 def scrub_pages(
     x: jax.Array,
@@ -188,6 +201,7 @@ def scrub_pages(
     include_inf: bool = True,
     interpret: Optional[bool] = None,
     block: Optional[Tuple[int, int]] = None,
+    detector=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Page-view scrub: repair only rows ``page_ids`` of ``x``'s leading
     (page) axis.  Gather the pages into one contiguous view, run the scrub
@@ -209,6 +223,6 @@ def scrub_pages(
     rows = x[page_ids]
     fixed, counts = scrub(
         rows, policy=policy, constant=constant, include_inf=include_inf,
-        interpret=interpret, block=block,
+        interpret=interpret, block=block, detector=detector,
     )
     return x.at[page_ids].set(fixed), counts

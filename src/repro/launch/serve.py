@@ -65,7 +65,12 @@ def serve_space(
     runs), and the periodic-scrub cadence.  Memoized per (model config,
     cadence) — callers share one long-lived runtime whose region cache and
     unified stats stream persist across calls.  ``memoize=False`` returns a
-    private space (the serving engine isolates stats per engine)."""
+    private space (the serving engine isolates stats per engine).
+
+    A model config carrying an explicit ``RuleSet`` keeps it: per-path
+    rules already say how cache leaves are protected, so the scalar
+    ``max_magnitude=None`` override below only applies to single-knob
+    configs (README §RepairRule)."""
     key = (model.cfg, scrub_every) if memoize else None
     try:
         space = _SPACE_CACHE.get(key) if key is not None else None
@@ -180,7 +185,7 @@ def generate(
     if model.supports_batched_prefill:
         # batched prefill: one pass over the whole prompt, cache populated
         if space.config.scrub.due(0):
-            cache, stats = space.scrub(cache, stats)
+            cache, stats = space.scrub(cache, stats, trigger="interval")
         nxt_flat, _, cache, stats = step_fn(
             params, cache, {"tokens": prompt}, jnp.zeros((), jnp.int32), stats
         )
@@ -193,7 +198,7 @@ def generate(
     for t in range(t0, S0 + max_new - 1):
         tok = tokens[:, t : t + 1] if t < S0 else nxt
         if space.config.scrub.due(t):
-            cache, stats = space.scrub(cache, stats)
+            cache, stats = space.scrub(cache, stats, trigger="interval")
         nxt_flat, _, cache, stats = step_fn(
             params, cache, {"tokens": tok}, jnp.asarray(t, jnp.int32), stats
         )

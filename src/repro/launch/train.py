@@ -20,18 +20,22 @@ Injection (`ber > 0`) is the *simulation* of approximate memory and runs
 OUTSIDE the production step, exactly as real bit flips would strike between
 steps — `ApproxSpace.inject` is that simulation boundary, and it records the
 ground-truth flip count into the unified stats.
+
+Per-region repair semantics come from the config's ``RuleSet``
+(README §RepairRule): the boundary scrub is a "boundary"-tagged pass, so an
+``"opt/.*"`` rule can range-guard optimizer moments while a reactive-only
+rule skips the per-step scrub entirely, and exact-island rules exclude their
+leaves from injection and repair alike — all resolved by the same
+``ApproxSpace`` the serving engine and checkpoint manager use.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from ..configs.base import ArchConfig
 from ..core import stats as stats_lib
 from ..distributed import sharding as sh
 from ..models.base import Model

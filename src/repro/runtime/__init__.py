@@ -2,7 +2,12 @@
 service (README §Runtime / §Distributed repair).
 
   ApproxConfig    one frozen config: repair mode/policy, refresh→BER point,
-                  region rules, scrub schedule
+                  region rules, scrub schedule, and (README §RepairRule) an
+                  optional RuleSet of per-region Detector × Fill × Trigger
+                  rules — scalar knobs lift into a one-rule set
+  Detector /      the rule grammar (re-exported from core.rules): which
+  RepairRule /    stored patterns are fatal, what value repairs them, which
+  RuleSet         passes fire, bound to tree paths by ordered regexes
   ScrubSchedule   when the memory-repairing mechanism runs
   ApproxSpace     the runtime object owning regions (cached by treedef), the
                   unified stats stream (incl. Pallas kernel counters), the
@@ -20,6 +25,7 @@ The legacy surface (`core.repair.scrub_pytree` / `inject_pytree`,
 delegates here and warns; new code should construct an ``ApproxSpace``
 directly.
 """
+from ..core.rules import Detector, RepairRule, RuleSet  # noqa: F401
 from .config import ApproxConfig, ScrubSchedule  # noqa: F401
 from .space import (  # noqa: F401
     ApproxSpace,
@@ -33,7 +39,10 @@ from .plan import RepairPlan, serving_scope  # noqa: F401
 __all__ = [
     "ApproxConfig",
     "ApproxSpace",
+    "Detector",
     "RepairPlan",
+    "RepairRule",
+    "RuleSet",
     "ScrubSchedule",
     "inject_tree",
     "reference_scrub_tree",

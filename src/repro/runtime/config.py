@@ -23,6 +23,7 @@ from typing import Any, Optional, Tuple
 from ..core import injection as injection_lib
 from ..core import policies as policies_lib
 from ..core import regions as regions_lib
+from ..core import rules as rules_lib
 
 _MODES = ("off", "register", "memory")
 
@@ -69,6 +70,17 @@ class ApproxConfig:
 
     Schedule:
       scrub            when the memory-repairing mechanism runs
+
+    Rules (README §RepairRule):
+      rules            an explicit ``RuleSet`` binding per-region
+                       Detector × Fill × Trigger rules to tree paths.
+                       ``None`` (the default) lifts the scalar repair
+                       fields above into a one-rule set — the legacy
+                       single-knob behavior, bit for bit.  When ``rules``
+                       is given it is the single source of truth for
+                       detection/fill/trigger; the scalar fields remain as
+                       attribute-compatible defaults for path-free reads
+                       (``use()``) and shim delegation.
     """
 
     mode: str = "memory"
@@ -83,10 +95,24 @@ class ApproxConfig:
         regions_lib.DEFAULT_RULES
     )
     scrub: ScrubSchedule = ScrubSchedule()
+    rules: Optional[rules_lib.RuleSet] = None
 
     def __post_init__(self):
         if self.mode not in _MODES:
             raise ValueError(f"bad repair mode {self.mode!r}")
+        if isinstance(self.rules, (tuple, list)):
+            # accept raw (pattern, rule) bindings for config ergonomics
+            object.__setattr__(
+                self, "rules", rules_lib.RuleSet(tuple(self.rules))
+            )
+
+    @property
+    def ruleset(self) -> rules_lib.RuleSet:
+        """The effective rule set: explicit ``rules`` or the one-rule lift
+        of the scalar repair fields (legacy compatibility)."""
+        if self.rules is not None:
+            return self.rules
+        return rules_lib.RuleSet.from_legacy(self)
 
     # ------------------------------------------------------------- resolution
     def resolved_policy(self) -> policies_lib.RepairPolicy:

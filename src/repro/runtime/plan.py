@@ -95,6 +95,13 @@ class RepairPlan:
     Obtained via ``ApproxSpace.plan_for`` (cached); ``run`` executes it over
     a concrete tree and returns ``(tree', delta)`` where ``delta`` is a
     functional stats delta (``inject`` scope returns ``(tree', n_flips)``).
+
+    The plan compiles a *per-leaf rule assignment* (README §RepairRule):
+    each leaf's Detector × Fill come from the space's ``RuleSet``, the
+    plan's ``trigger`` tag gates which rules fire, and the executable
+    returns per-rule [nan, inf, events] deltas that ``run`` folds into the
+    space's rule ledger.  The rule-set digest joins the cache key, so one
+    executable exists per (layout, rule-set).
     """
 
     space: Any                       # owning ApproxSpace
@@ -102,6 +109,10 @@ class RepairPlan:
     placement: str                   # "local" | "sharded"
     treedef: Any
     regions: Any
+    rule_tree: Any                   # per-leaf RepairRule assignment
+    index_tree: Any                  # per-leaf rule index (counter ledger)
+    n_rules: int
+    trigger: str                     # pass tag for rule gating
     bytes_per_run: int               # approx bytes one full-scope pass touches
     page_row_bytes: int              # approx bytes of one page row (pages scope)
     page_capacity: int               # leading page-axis size (pages scope)
@@ -126,8 +137,9 @@ class RepairPlan:
             )
             return tree, zero
         leaves = tuple(jax.tree_util.tree_flatten(tree)[0])
+        rule_counts = None
         if self.scope == "tree":
-            out, delta = self._exec(("tree", donate))(leaves)
+            out, delta, rule_counts = self._exec(("tree", donate))(leaves)
         elif self.scope == "pages":
             ids = np.asarray(page_ids, np.int32).reshape(-1)
             if ids.size == 0:
@@ -137,18 +149,22 @@ class RepairPlan:
             bucket = _bucket(ids.size, max(self.page_capacity, ids.size))
             padded = np.full((bucket,), ids[0], np.int32)
             padded[: ids.size] = ids
-            out, delta = self._exec(("pages", bucket, donate))(
+            out, delta, rule_counts = self._exec(("pages", bucket, donate))(
                 leaves,
                 jnp.asarray(padded),
                 jnp.asarray(ids.size, jnp.int32),
             )
         elif self.scope == "reference":
             refs = tuple(jax.tree_util.tree_flatten(reference)[0])
-            out, delta = self._exec(("reference", donate))(leaves, refs)
+            out, delta, rule_counts = self._exec(("reference", donate))(
+                leaves, refs
+            )
         elif self.scope == "inject":
             out, delta = self._exec(("inject", donate))(leaves, key)
         else:  # pragma: no cover
             raise ValueError(f"bad plan scope {self.scope!r}")
+        if rule_counts is not None:
+            self.space.record_rule_counts(rule_counts)
         return jax.tree_util.tree_unflatten(self.treedef, out), delta
 
     # ----------------------------------------------------------- executables
@@ -163,6 +179,9 @@ class RepairPlan:
         space, cfg, treedef, regions = (
             self.space, self.space.config, self.treedef, self.regions,
         )
+        rule_tree, index_tree, n_rules, trigger = (
+            self.rule_tree, self.index_tree, self.n_rules, self.trigger,
+        )
         kind, donate = variant[0], variant[-1]
 
         def note():
@@ -175,21 +194,23 @@ class RepairPlan:
             def fn(leaves):
                 note()
                 tree = jax.tree_util.tree_unflatten(treedef, leaves)
-                out, delta = space_lib.scrub_tree(
-                    tree, cfg, stats_lib.zeros(), regions
+                out, delta, rc = space_lib.scrub_tree_rules(
+                    tree, cfg, stats_lib.zeros(), regions,
+                    rule_tree, index_tree, n_rules, trigger,
                 )
-                return tuple(jax.tree_util.tree_flatten(out)[0]), delta
+                return tuple(jax.tree_util.tree_flatten(out)[0]), delta, rc
 
         elif kind == "pages":
 
             def fn(leaves, page_ids, n_valid):
                 note()
                 tree = jax.tree_util.tree_unflatten(treedef, leaves)
-                out, delta = space_lib.scrub_pages_tree(
+                out, delta, rc = space_lib.scrub_pages_tree_rules(
                     tree, page_ids, cfg, stats_lib.zeros(), regions,
+                    rule_tree, index_tree, n_rules, trigger,
                     n_valid=n_valid,
                 )
-                return tuple(jax.tree_util.tree_flatten(out)[0]), delta
+                return tuple(jax.tree_util.tree_flatten(out)[0]), delta, rc
 
         elif kind == "reference":
 
@@ -197,11 +218,11 @@ class RepairPlan:
                 note()
                 tree = jax.tree_util.tree_unflatten(treedef, leaves)
                 ref = jax.tree_util.tree_unflatten(treedef, refs)
-                out, delta = space_lib.reference_scrub_tree(
+                out, delta, rc = space_lib.reference_scrub_tree_rules(
                     tree, ref, stats_lib.zeros(), regions,
-                    include_inf=cfg.include_inf,
+                    rule_tree, index_tree, n_rules,
                 )
-                return tuple(jax.tree_util.tree_flatten(out)[0]), delta
+                return tuple(jax.tree_util.tree_flatten(out)[0]), delta, rc
 
         elif kind == "inject":
             ber = self.ber
@@ -229,6 +250,7 @@ def plan_for(
     *,
     scope: str = "tree",
     ber: Optional[float] = None,
+    trigger: str = "forced",
 ) -> RepairPlan:
     """Plan one repair pass over ``tree`` for ``space``.
 
@@ -239,11 +261,19 @@ def plan_for(
     (the simulation boundary is mode-independent).  Placement is derived
     from the leaves' shardings: any multi-device NamedSharding makes the
     plan shard-local.
+
+    ``trigger`` tags the pass for rule gating (README §RepairRule): only
+    rules whose trigger fires on this tag repair their leaves, so one
+    (layout, trigger) pair is one executable.  The rule-set digest joins the
+    cache key; reference/inject scopes ignore the trigger (forced /
+    mode-independent respectively).
     """
     if scope not in SCOPES:
         raise ValueError(f"bad plan scope {scope!r}; expected one of {SCOPES}")
     if scope in ("tree", "pages") and space.config.mode != "memory":
         scope = "none"
+    if scope not in ("tree", "pages"):
+        trigger = "forced"
 
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     # non-array leaves (plain python scalars in user trees) key by type and
@@ -257,20 +287,27 @@ def plan_for(
     )
     shardings = tuple(_sharding_of(leaf) for leaf in leaves)
     extra = float(ber) if scope == "inject" else None
-    key = (scope, treedef, avals, shardings, extra)
+    key = (
+        scope, trigger, treedef, avals, shardings, extra,
+        space._rules_digest,
+    )
 
     plan = space._plan_cache.get(key)
     if plan is not None:
         return plan
 
     regions = space.regions_for(tree)
+    rule_tree, index_tree = space.rules_for(tree)
     region_leaves = jax.tree.leaves(regions)
+    rule_leaves = jax.tree.leaves(rule_tree)
     approx_bytes = 0
     page_row_bytes = 0
     page_capacity = 0
-    for leaf, region in zip(leaves, region_leaves):
+    for leaf, region, rule in zip(leaves, region_leaves, rule_leaves):
         if not space_lib._is_approx_float(leaf, region):
             continue
+        if scope in ("tree", "pages") and not rule.fires(trigger):
+            continue    # the ledger counts only what this pass repairs
         nbytes = leaf.size * leaf.dtype.itemsize
         approx_bytes += nbytes
         if leaf.ndim >= 1 and leaf.shape[0]:
@@ -286,6 +323,10 @@ def plan_for(
         placement=_placement(shardings),
         treedef=treedef,
         regions=regions,
+        rule_tree=rule_tree,
+        index_tree=index_tree,
+        n_rules=space.ruleset.n_rules,
+        trigger=trigger,
         bytes_per_run=0 if scope == "none" else approx_bytes,
         page_row_bytes=page_row_bytes,
         page_capacity=max(page_capacity, 1),

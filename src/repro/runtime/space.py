@@ -44,6 +44,7 @@ import numpy as np
 
 from ..core import detect, injection as injection_lib
 from ..core import regions as regions_lib
+from ..core import rules as rules_lib
 from ..core import stats as stats_lib
 from .config import ApproxConfig, ScrubSchedule
 
@@ -61,6 +62,20 @@ def _is_approx_float(leaf, region) -> bool:
     )
 
 
+def _is_repair_rules(rules: Any) -> bool:
+    """Is ``rules`` a repair ``RuleSet`` (or raw (pattern, RepairRule)
+    bindings) rather than a mesh sharding-rules table?"""
+    if isinstance(rules, rules_lib.RuleSet):
+        return True
+    if isinstance(rules, (tuple, list)) and rules:
+        return all(
+            isinstance(e, (tuple, list)) and len(e) == 2
+            and isinstance(e[1], rules_lib.RepairRule)
+            for e in rules
+        )
+    return False
+
+
 def _has_tracers(tree: Any) -> bool:
     """True when any leaf is a jax tracer — the caller is inside an enclosing
     jit, so the mechanism must inline into that trace instead of dispatching
@@ -76,45 +91,182 @@ def _has_tracers(tree: Any) -> bool:
 # ---------------------------------------------------------------------------
 
 
+# (ruleset, treedef) -> (rule_tree, index_tree): the eager entry points'
+# analogue of ApproxSpace._rule_cache.  Path matching is a pure function of
+# (rule set, tree structure), so value-equal rule sets share entries; the
+# population is bounded by distinct configs × state layouts in the process.
+_ASSIGN_CACHE: Dict[Any, Tuple[Any, Any]] = {}
+
+
+def _assignment_for(cfg: Any, tree: Any):
+    """(ruleset, rule_tree, index_tree) for callers that did not pre-compute
+    the per-leaf rule assignment (the legacy eager entry points) — cached by
+    (ruleset, treedef) so per-call regex matching never lands on a hot
+    path."""
+    ruleset = rules_lib.ruleset_of(cfg)
+    try:
+        key = (ruleset, jax.tree_util.tree_structure(tree))
+        hit = _ASSIGN_CACHE.get(key)
+    except TypeError:               # unhashable custom fill — skip the cache
+        key, hit = None, None
+    if hit is None:
+        hit = ruleset.assign(tree)
+        if key is not None:
+            _ASSIGN_CACHE[key] = hit
+    return ruleset, hit[0], hit[1]
+
+
+def _finish_rule_counts(rc: jax.Array) -> jax.Array:
+    """Append the per-rule events column: one pass with ≥1 fatal lane under
+    rule i is one event for rule i (the per-rule Table-3 analogue)."""
+    events = ((rc[:, 0] + rc[:, 1]) > 0).astype(jnp.int32)[:, None]
+    return jnp.concatenate([rc, events], axis=1)
+
+
+def scrub_tree_rules(
+    tree: Any,
+    cfg: Any,                       # ApproxConfig or legacy RepairConfig
+    stats: stats_lib.Stats,
+    region_tree: Any,
+    rule_tree: Any,
+    index_tree: Any,
+    n_rules: int,
+    trigger: str = "forced",
+) -> Tuple[Any, stats_lib.Stats, jax.Array]:
+    """Rule-parameterized memory-mode repair: every approximate-region float
+    leaf is repaired under ITS assigned ``RepairRule`` (detector + fill),
+    gated by the rule's trigger against this pass's ``trigger`` tag.
+
+    Returns ``(tree', stats', rule_counts)`` where ``rule_counts`` is
+    int32[n_rules, 3] = per-rule [nan, inf, events] deltas for this pass —
+    the per-rule counters the space folds into its unified ledger.
+    """
+    if cfg.mode != "memory":
+        return tree, stats, jnp.zeros((n_rules, 3), jnp.int32)
+
+    nan_tot = jnp.zeros((), jnp.int32)
+    inf_tot = jnp.zeros((), jnp.int32)
+    rc = jnp.zeros((n_rules, 2), jnp.int32)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    region_leaves = jax.tree.leaves(region_tree)
+    rule_leaves = jax.tree.leaves(rule_tree)
+    index_leaves = jax.tree.leaves(index_tree)
+    assert len(leaves) == len(region_leaves) == len(rule_leaves), (
+        "region/rule tree structure mismatch"
+    )
+
+    fixed_leaves = []
+    for leaf, region, rule, idx in zip(
+        leaves, region_leaves, rule_leaves, index_leaves
+    ):
+        if _is_approx_float(leaf, region) and rule.fires(trigger):
+            fixed, n, i = rule.apply(leaf)
+            nan_tot = nan_tot + n
+            inf_tot = inf_tot + i
+            rc = rc.at[idx, 0].add(n).at[idx, 1].add(i)
+            fixed_leaves.append(fixed)
+        else:
+            fixed_leaves.append(leaf)
+
+    out = jax.tree_util.tree_unflatten(treedef, fixed_leaves)
+    return (
+        out,
+        stats_lib.record_repair(stats, nan_tot, inf_tot),
+        _finish_rule_counts(rc),
+    )
+
+
 def scrub_tree(
     tree: Any,
     cfg: Any,                       # ApproxConfig or legacy RepairConfig
     stats: stats_lib.Stats,
     region_tree: Any,
+    *,
+    trigger: str = "forced",
 ) -> Tuple[Any, stats_lib.Stats]:
     """Memory-mode repair of every approximate-region float leaf of ``tree``.
 
     The returned tree *replaces* the resident state (functional write-back;
     in-place under jit with donated buffers).  Exact-region and non-float
     leaves pass through untouched.  No-op outside memory mode.
-    """
-    from ..core.repair import repair_tensor  # deferred: repair shims us
 
+    Repair semantics come from the config's ``RuleSet`` (README §RepairRule):
+    a legacy scalar config lifts to one catch-all rule, reproducing the
+    pre-rules behavior bit for bit.  Per-rule counters are dropped here —
+    use ``ApproxSpace.scrub`` (or ``scrub_tree_rules``) to collect them.
+    """
+    ruleset, rule_tree, index_tree = _assignment_for(cfg, tree)
+    out, stats, _ = scrub_tree_rules(
+        tree, cfg, stats, region_tree, rule_tree, index_tree,
+        ruleset.n_rules, trigger,
+    )
+    return out, stats
+
+
+def scrub_pages_tree_rules(
+    tree: Any,
+    page_ids: jax.Array,            # i32[n] rows of the leading (page) axis
+    cfg: Any,                       # ApproxConfig or legacy RepairConfig
+    stats: stats_lib.Stats,
+    region_tree: Any,
+    rule_tree: Any,
+    index_tree: Any,
+    n_rules: int,
+    trigger: str = "forced",
+    n_valid: Optional[jax.Array] = None,
+) -> Tuple[Any, stats_lib.Stats, jax.Array]:
+    """Rule-parameterized page scrub: rows ``page_ids`` of each leaf are
+    repaired under the leaf's assigned rule (detector + fill), gated by the
+    rule's trigger.  Returns ``(tree', stats', rule_counts)`` —
+    see ``scrub_tree_rules`` for the counts layout and ``scrub_pages_tree``
+    for the page semantics."""
     if cfg.mode != "memory":
-        return tree, stats
-    policy = cfg.resolved_policy()
+        return tree, stats, jnp.zeros((n_rules, 3), jnp.int32)
+    page_ids = jnp.asarray(page_ids, jnp.int32)
 
     nan_tot = jnp.zeros((), jnp.int32)
     inf_tot = jnp.zeros((), jnp.int32)
+    rc = jnp.zeros((n_rules, 2), jnp.int32)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     region_leaves = jax.tree.leaves(region_tree)
-    assert len(leaves) == len(region_leaves), "region tree structure mismatch"
+    rule_leaves = jax.tree.leaves(rule_tree)
+    index_leaves = jax.tree.leaves(index_tree)
+    assert len(leaves) == len(region_leaves) == len(rule_leaves), (
+        "region/rule tree structure mismatch"
+    )
+
+    valid = None
+    if n_valid is not None:
+        valid = jnp.arange(page_ids.shape[0]) < n_valid
 
     fixed_leaves = []
-    for leaf, region in zip(leaves, region_leaves):
-        if _is_approx_float(leaf, region):
-            fixed, n, i = repair_tensor(
-                leaf, policy=policy, include_inf=cfg.include_inf,
-                max_magnitude=cfg.max_magnitude,
-            )
+    for leaf, region, rule, idx in zip(
+        leaves, region_leaves, rule_leaves, index_leaves
+    ):
+        if _is_approx_float(leaf, region) and rule.fires(trigger):
+            rows = leaf[page_ids]
+            nan_m, inf_m = rule.detect.masks(rows)
+            mask = nan_m | inf_m
+            fixed = jnp.where(mask, rule.resolved_fill()(rows, mask), rows)
+            if valid is not None:
+                vshape = (rows.shape[0],) + (1,) * (rows.ndim - 1)
+                nan_m = nan_m & valid.reshape(vshape)
+                inf_m = inf_m & valid.reshape(vshape)
+            n = jnp.sum(nan_m.astype(jnp.int32))
+            i = jnp.sum(inf_m.astype(jnp.int32))
             nan_tot = nan_tot + n
             inf_tot = inf_tot + i
-            fixed_leaves.append(fixed)
+            rc = rc.at[idx, 0].add(n).at[idx, 1].add(i)
+            fixed_leaves.append(leaf.at[page_ids].set(fixed.astype(leaf.dtype)))
         else:
             fixed_leaves.append(leaf)
 
     out = jax.tree_util.tree_unflatten(treedef, fixed_leaves)
-    return out, stats_lib.record_repair(stats, nan_tot, inf_tot)
+    return (
+        out,
+        stats_lib.record_repair(stats, nan_tot, inf_tot),
+        _finish_rule_counts(rc),
+    )
 
 
 def scrub_pages_tree(
@@ -124,6 +276,8 @@ def scrub_pages_tree(
     stats: stats_lib.Stats,
     region_tree: Any,
     n_valid: Optional[jax.Array] = None,
+    *,
+    trigger: str = "forced",
 ) -> Tuple[Any, stats_lib.Stats]:
     """Targeted memory-mode repair: only rows ``page_ids`` along the LEADING
     axis of every approximate-region float leaf are repaired and written back
@@ -140,46 +294,15 @@ def scrub_pages_tree(
 
     The caller guarantees every approximate float leaf shares one leading
     page axis (the serving KV pool layout, ``Model.paged_cache_defs``).
+    Repair semantics per leaf come from the config's ``RuleSet``
+    (README §RepairRule); legacy scalar configs lift to one catch-all rule.
     """
-    from ..core.repair import fatal_masks  # deferred: repair shims us
-
-    if cfg.mode != "memory":
-        return tree, stats
-    page_ids = jnp.asarray(page_ids, jnp.int32)
-    policy = cfg.resolved_policy()
-
-    nan_tot = jnp.zeros((), jnp.int32)
-    inf_tot = jnp.zeros((), jnp.int32)
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    region_leaves = jax.tree.leaves(region_tree)
-    assert len(leaves) == len(region_leaves), "region tree structure mismatch"
-
-    valid = None
-    if n_valid is not None:
-        valid = jnp.arange(page_ids.shape[0]) < n_valid
-
-    fixed_leaves = []
-    for leaf, region in zip(leaves, region_leaves):
-        if _is_approx_float(leaf, region):
-            rows = leaf[page_ids]
-            nan_m, inf_m = fatal_masks(
-                rows, include_inf=cfg.include_inf,
-                max_magnitude=cfg.max_magnitude,
-            )
-            mask = nan_m | inf_m
-            fixed = jnp.where(mask, policy(rows, mask), rows)
-            if valid is not None:
-                vshape = (rows.shape[0],) + (1,) * (rows.ndim - 1)
-                nan_m = nan_m & valid.reshape(vshape)
-                inf_m = inf_m & valid.reshape(vshape)
-            nan_tot = nan_tot + jnp.sum(nan_m.astype(jnp.int32))
-            inf_tot = inf_tot + jnp.sum(inf_m.astype(jnp.int32))
-            fixed_leaves.append(leaf.at[page_ids].set(fixed.astype(leaf.dtype)))
-        else:
-            fixed_leaves.append(leaf)
-
-    out = jax.tree_util.tree_unflatten(treedef, fixed_leaves)
-    return out, stats_lib.record_repair(stats, nan_tot, inf_tot)
+    ruleset, rule_tree, index_tree = _assignment_for(cfg, tree)
+    out, stats, _ = scrub_pages_tree_rules(
+        tree, page_ids, cfg, stats, region_tree, rule_tree, index_tree,
+        ruleset.n_rules, trigger, n_valid,
+    )
+    return out, stats
 
 
 def use_tensor(
@@ -191,19 +314,69 @@ def use_tensor(
 
     Identity outside register mode (memory mode relies on the scrubbed
     buffer, so per-use work would be pure overhead — exactly the paper's
-    argument for the memory-repairing mechanism).  Pure; safe under jit.
-    """
-    from ..core.repair import repair_tensor  # deferred: repair shims us
+    argument for the memory-repairing mechanism) — with ONE exception: a
+    bound *on-read* rule requests use-site repair explicitly, so it fires
+    in memory mode too (its leaves are skipped by every scheduled scrub;
+    use() is their only repair point).  Pure; safe under jit.
 
-    if cfg.mode != "register":
+    Use sites see single tensors with no tree path, so the ruleset's
+    *read rule* applies (the first on-read rule, else the first non-exact
+    rule — the one-rule legacy lift reproduces the scalar knobs exactly).
+    """
+    if cfg.mode == "off":
         return x, stats
-    fixed, n, i = repair_tensor(
-        x,
-        policy=cfg.resolved_policy(),
-        include_inf=cfg.include_inf,
-        max_magnitude=cfg.max_magnitude,
-    )
+    rule = rules_lib.ruleset_of(cfg).read_rule()
+    if cfg.mode != "register" and rule.trigger != "on-read":
+        return x, stats
+    fixed, n, i = rule.apply(x)
     return fixed, stats_lib.record_repair(stats, n, i)
+
+
+def reference_scrub_tree_rules(
+    tree: Any,
+    ref_tree: Any,
+    stats: stats_lib.Stats,
+    region_tree: Any,
+    rule_tree: Any,
+    index_tree: Any,
+    n_rules: int,
+) -> Tuple[Any, stats_lib.Stats, jax.Array]:
+    """Rule-parameterized ``last_checkpoint`` repair: each leaf's fatal
+    lanes — as defined by ITS rule's detector — are replaced from
+    ``ref_tree``.  A reference repair is a forced pass: every non-exact
+    rule fires regardless of its trigger (a checkpoint-backed repair is
+    always an explicit request).  Returns ``(tree', stats', rule_counts)``.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    refs = jax.tree.leaves(ref_tree)
+    regs = jax.tree.leaves(region_tree)
+    rule_leaves = jax.tree.leaves(rule_tree)
+    index_leaves = jax.tree.leaves(index_tree)
+    assert len(leaves) == len(refs) == len(regs), "treedef mismatch"
+
+    nan_tot = jnp.zeros((), jnp.int32)
+    inf_tot = jnp.zeros((), jnp.int32)
+    rc = jnp.zeros((n_rules, 2), jnp.int32)
+    out = []
+    for leaf, ref, region, rule, idx in zip(
+        leaves, refs, regs, rule_leaves, index_leaves
+    ):
+        if _is_approx_float(leaf, region) and rule.fires("forced"):
+            nan_m, inf_m = rule.detect.masks(leaf)
+            mask = nan_m | inf_m
+            out.append(jnp.where(mask, jnp.asarray(ref, leaf.dtype), leaf))
+            n = jnp.sum(nan_m.astype(jnp.int32))
+            i = jnp.sum(inf_m.astype(jnp.int32))
+            nan_tot = nan_tot + n
+            inf_tot = inf_tot + i
+            rc = rc.at[idx, 0].add(n).at[idx, 1].add(i)
+        else:
+            out.append(leaf)
+    return (
+        jax.tree_util.tree_unflatten(treedef, out),
+        stats_lib.record_repair(stats, nan_tot, inf_tot),
+        _finish_rule_counts(rc),
+    )
 
 
 def reference_scrub_tree(
@@ -213,6 +386,7 @@ def reference_scrub_tree(
     region_tree: Any,
     *,
     include_inf: bool = True,
+    cfg: Any = None,
 ) -> Tuple[Any, stats_lib.Stats]:
     """``last_checkpoint`` repair (README §Policies): replace fatal lanes of
     approximate-region leaves with the values from ``ref_tree`` (same
@@ -222,30 +396,25 @@ def reference_scrub_tree(
     Unlike ``scrub_tree`` this is NOT gated on the repair mode: a reference
     repair is always an explicit request (checkpoint restore, periodic
     reference pass) and must run even in register-mode or off deployments.
+
+    With ``cfg`` (an ``ApproxConfig``/``RepairConfig``) the per-leaf
+    detectors come from its ``RuleSet``; the bare ``include_inf`` form keeps
+    the legacy NaN/Inf definition for shim callers.
     """
-    from ..core.repair import fatal_masks  # deferred: repair shims us
-
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    refs = jax.tree.leaves(ref_tree)
-    regs = jax.tree.leaves(region_tree)
-    assert len(leaves) == len(refs) == len(regs), "treedef mismatch"
-
-    nan_tot = jnp.zeros((), jnp.int32)
-    inf_tot = jnp.zeros((), jnp.int32)
-    out = []
-    for leaf, ref, region in zip(leaves, refs, regs):
-        if _is_approx_float(leaf, region):
-            nan_m, inf_m = fatal_masks(leaf, include_inf=include_inf)
-            mask = nan_m | inf_m
-            out.append(jnp.where(mask, jnp.asarray(ref, leaf.dtype), leaf))
-            nan_tot = nan_tot + jnp.sum(nan_m.astype(jnp.int32))
-            inf_tot = inf_tot + jnp.sum(inf_m.astype(jnp.int32))
-        else:
-            out.append(leaf)
-    return (
-        jax.tree_util.tree_unflatten(treedef, out),
-        stats_lib.record_repair(stats, nan_tot, inf_tot),
+    if cfg is not None:
+        ruleset, rule_tree, index_tree = _assignment_for(cfg, tree)
+    else:
+        ruleset = rules_lib.RuleSet.single(
+            rules_lib.RepairRule(
+                detect=rules_lib.Detector(nan=True, inf=include_inf)
+            )
+        )
+        rule_tree, index_tree = ruleset.assign(tree)
+    out, stats, _ = reference_scrub_tree_rules(
+        tree, ref_tree, stats, region_tree, rule_tree, index_tree,
+        ruleset.n_rules,
     )
+    return out, stats
 
 
 def _leaf_flip_count(before: jax.Array, after: jax.Array) -> jax.Array:
@@ -299,6 +468,12 @@ class ApproxSpace:
         space = ApproxSpace(ApproxConfig(mode="memory", policy="zero"))
         space = ApproxSpace(model.cfg.repair)          # legacy lift
         space = ApproxSpace(mode="register")           # field shorthand
+        space = ApproxSpace(mode="memory", rules=RuleSet(...))  # repair rules
+
+    The ``rules`` keyword is overloaded for ergonomics: a ``RuleSet`` (or
+    raw ``(pattern, RepairRule)`` bindings) is a *repair*-rules config
+    override; anything else is the mesh's logical-axis *sharding* rules
+    table and only meaningful together with ``mesh``.
     """
 
     def __init__(
@@ -309,6 +484,12 @@ class ApproxSpace:
         rules: Any = None,
         **overrides,
     ):
+        sharding_rules = rules
+        if rules is not None and _is_repair_rules(rules):
+            # a repair RuleSet must never be silently captured by the
+            # sharding-rules slot — route it into the config override
+            overrides["rules"] = rules
+            sharding_rules = None
         if config is None:
             config = ApproxConfig(**overrides)
         else:
@@ -317,13 +498,28 @@ class ApproxSpace:
         self.stats: stats_lib.Stats = stats_lib.zeros()
         self.scrubbed_bytes: int = 0     # host ledger: approx bytes processed
         self._region_cache: Dict[Any, Any] = {}
-        # RepairPlan cache: (scope, treedef, avals, shardings, extra) -> plan
+        # per-leaf RepairRule assignment cache: treedef -> (rules, indices)
+        self._rule_cache: Dict[Any, Any] = {}
+        # RepairPlan cache: (scope, trigger, treedef, avals, shardings,
+        # extra, ruleset digest) -> plan
         self._plan_cache: Dict[Any, Any] = {}
         self.n_traces: int = 0           # compiled-executable trace counter
+        # per-rule [nan, inf, events] ledger (int32[n_rules, 3]), fed by
+        # every host-dispatched repair pass; see rule_stats()
+        self._rule_counts: Optional[jax.Array] = None
+        # resolve the rule set once (the config is frozen): every pass,
+        # plan, and ledger in this runtime shares this one definition
+        self._ruleset: rules_lib.RuleSet = config.ruleset
+        self._rules_digest = self._ruleset.digest()
         self.mesh = None
-        self.rules = None
+        self.rules = None                # sharding rules (use_mesh), NOT repair rules
         if mesh is not None:
-            self.use_mesh(mesh, rules)
+            self.use_mesh(mesh, sharding_rules)
+
+    @property
+    def ruleset(self) -> rules_lib.RuleSet:
+        """The repair ``RuleSet`` this runtime resolves every pass from."""
+        return self._ruleset
 
     # ------------------------------------------------------------------ mesh
     def use_mesh(self, mesh: Any, rules: Any = None) -> "ApproxSpace":
@@ -346,26 +542,57 @@ class ApproxSpace:
         return self
 
     # ------------------------------------------------------------------ plans
-    def plan_for(self, tree: Any, *, scope: str = "tree", ber: Optional[float] = None):
-        """The ``RepairPlan`` for one (scope, state layout) pair — cached by
-        ``(scope, treedef, avals, shardings)`` so each distinct layout traces
-        its compiled executable exactly once (README §Distributed repair)."""
+    def plan_for(
+        self,
+        tree: Any,
+        *,
+        scope: str = "tree",
+        ber: Optional[float] = None,
+        trigger: str = "forced",
+    ):
+        """The ``RepairPlan`` for one (scope, trigger, state layout) pair —
+        cached by ``(scope, trigger, treedef, avals, shardings, rule-set
+        digest)`` so each distinct layout × rule-set traces its compiled
+        executable exactly once (README §Distributed repair)."""
         from . import plan as plan_lib  # deferred: plan builds on us
 
-        return plan_lib.plan_for(self, tree, scope=scope, ber=ber)
+        return plan_lib.plan_for(self, tree, scope=scope, ber=ber, trigger=trigger)
 
     # ---------------------------------------------------------------- regions
+    def rules_for(self, tree: Any) -> Tuple[Any, Any]:
+        """``(rule_tree, index_tree)`` — the per-leaf ``RepairRule``
+        assignment for ``tree``, cached by treedef (path matching depends
+        only on tree structure).  The planner compiles executables against
+        this assignment; indices key the per-rule counter ledger."""
+        treedef = jax.tree_util.tree_structure(tree)
+        hit = self._rule_cache.get(treedef)
+        if hit is None:
+            hit = self.ruleset.assign(tree)
+            self._rule_cache[treedef] = hit
+        return hit
+
     def regions_for(self, tree: Any) -> Any:
         """Region pytree for ``tree``, cached by treedef.
 
         Region classification depends only on tree *structure* (key paths),
         so equal treedefs share one cached region tree — `annotate` no longer
         reruns per step build or per scrub call.
+
+        Exact-island rules (``RepairRule.exact_rule``) override the region
+        to EXACT: "exact via stronger correction" is just another rule, and
+        it removes the leaf from injection and repair alike.
         """
         treedef = jax.tree_util.tree_structure(tree)
         hit = self._region_cache.get(treedef)
         if hit is None:
             hit = regions_lib.annotate(tree, self.config.region_rules)
+            rule_tree, _ = self.rules_for(tree)
+            hit = jax.tree_util.tree_map(
+                lambda region, rule: (
+                    regions_lib.Region.EXACT if rule.exact else region
+                ),
+                hit, rule_tree,
+            )
             self._region_cache[treedef] = hit
         return hit
 
@@ -377,13 +604,13 @@ class ApproxSpace:
     def use(self, x: jax.Array, stats: Optional[stats_lib.Stats] = None):
         """Register-mode read (§3.3): repair at the consumption site.
 
-        Identity outside register mode.  Pure form with ``stats``; the
-        convenience form records into ``self.stats`` (host-side only).
+        Identity outside register mode, unless an *on-read* rule is bound
+        (README §RepairRule — its leaves repair here and only here).  Pure
+        form with ``stats``; the convenience form records into
+        ``self.stats`` (host-side only).
         """
         if stats is not None:
             return use_tensor(x, self.config, stats)
-        if self.config.mode != "register":
-            return x
         fixed, self.stats = use_tensor(x, self.config, self.stats)
         return fixed
 
@@ -393,6 +620,7 @@ class ApproxSpace:
         stats: Optional[stats_lib.Stats] = None,
         *,
         donate: bool = False,
+        trigger: str = "forced",
     ):
         """Memory-mode repair + functional write-back (§3.4).
 
@@ -406,13 +634,19 @@ class ApproxSpace:
         input buffers (safe only when the returned tree *replaces* the
         caller's resident state).  Called under an enclosing jit (tracers,
         e.g. inside ``wrap_train_step``) it inlines into the caller's trace.
+
+        ``trigger`` tags the pass for rule gating (README §RepairRule):
+        scheduled callers pass "boundary"/"interval"/"reactive"; the default
+        "forced" is an explicit request that every non-exact rule honors.
         """
         if _has_tracers(tree):
-            out, delta = scrub_tree(
-                tree, self.config, stats_lib.zeros(), self.regions_for(tree)
+            rule_tree, index_tree = self.rules_for(tree)
+            out, delta, _ = scrub_tree_rules(
+                tree, self.config, stats_lib.zeros(), self.regions_for(tree),
+                rule_tree, index_tree, self.ruleset.n_rules, trigger,
             )
         else:
-            plan = self.plan_for(tree, scope="tree")
+            plan = self.plan_for(tree, scope="tree", trigger=trigger)
             out, delta = plan.run(tree, donate=donate)
             self.scrubbed_bytes += plan.bytes_per_run
         return self._thread_stats(out, delta, stats)
@@ -424,11 +658,14 @@ class ApproxSpace:
         stats: Optional[stats_lib.Stats] = None,
         *,
         donate: bool = False,
+        trigger: str = "forced",
     ):
         """Targeted memory-mode repair of rows ``page_ids`` along the leading
         (page) axis of every approximate-region float leaf — the serving
         engine's page-granular scrub (repair only the pages that faulted,
-        README §Serving engine).  Same pure/convenience split as ``scrub``.
+        README §Serving engine).  Same pure/convenience split as ``scrub``,
+        same ``trigger`` tagging (the page repair manager passes
+        "reactive").
 
         The compiled path buckets the id count to the next power of two
         (padding with duplicates whose counts are masked), so the number of
@@ -436,15 +673,17 @@ class ApproxSpace:
         linear in the faulted-page count.
         """
         if _has_tracers(tree):
-            out, delta = scrub_pages_tree(
+            rule_tree, index_tree = self.rules_for(tree)
+            out, delta, _ = scrub_pages_tree_rules(
                 tree, page_ids, self.config, stats_lib.zeros(),
-                self.regions_for(tree),
+                self.regions_for(tree), rule_tree, index_tree,
+                self.ruleset.n_rules, trigger,
             )
         else:
             ids = np.asarray(page_ids, np.int32).reshape(-1)
             if ids.size == 0 or self.config.mode != "memory":
                 return self._thread_stats(tree, stats_lib.zeros(), stats)
-            plan = self.plan_for(tree, scope="pages")
+            plan = self.plan_for(tree, scope="pages", trigger=trigger)
             out, delta = plan.run(tree, page_ids=ids, donate=donate)
             self.scrubbed_bytes += int(ids.size) * plan.page_row_bytes
         return self._thread_stats(out, delta, stats)
@@ -461,11 +700,12 @@ class ApproxSpace:
         of approximate-region leaves with values from ``ref_tree`` (e.g. the
         latest checkpoint) — exact restoration for frozen weights.  Runs in
         every repair mode (an explicit reference repair is always a request,
-        README §Checkpointing); only ``tree`` is ever donated."""
+        README §Checkpointing — a forced pass under rule gating); only
+        ``tree`` is ever donated."""
         if _has_tracers(tree) or _has_tracers(ref_tree):
             out, delta = reference_scrub_tree(
                 tree, ref_tree, stats_lib.zeros(), self.regions_for(tree),
-                include_inf=self.config.include_inf,
+                cfg=self.config,
             )
         else:
             plan = self.plan_for(tree, scope="reference")
@@ -532,11 +772,41 @@ class ApproxSpace:
         self.stats = stats_lib.record_kernel_counts(self.stats, counts)
         return self.stats
 
+    def record_rule_counts(self, rule_counts: Any) -> None:
+        """Fold one pass's per-rule [nan, inf, events] delta (int32[n_rules,
+        3], from a rule-parameterized executable) into the per-rule ledger.
+        Accumulation stays lazy (jnp adds); ``rule_stats()`` materializes."""
+        if self._rule_counts is None:
+            self._rule_counts = jnp.zeros(
+                (self.ruleset.n_rules, 3), jnp.int32
+            )
+        self._rule_counts = self._rule_counts + rule_counts
+
+    def rule_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-rule counters: ``{rule label: {nan_found, inf_found,
+        events}}`` over every host-dispatched repair pass (boundary scrubs
+        inlined into an enclosing jit contribute to the aggregate stream
+        only — per-rule vectors cannot escape a trace)."""
+        labels = self.ruleset.labels()
+        if self._rule_counts is None:
+            rc = np.zeros((len(labels), 3), np.int64)
+        else:
+            rc = np.asarray(self._rule_counts)
+        return {
+            label: {
+                "nan_found": int(rc[i, 0]),
+                "inf_found": int(rc[i, 1]),
+                "events": int(rc[i, 2]),
+            }
+            for i, label in enumerate(labels)
+        }
+
     def stats_dict(self) -> Dict[str, int]:
         return stats_lib.as_dict(self.stats)
 
     def reset_stats(self) -> None:
         self.stats = stats_lib.zeros()
+        self._rule_counts = None
 
     # ------------------------------------------------------ step decorators
     def wrap_train_step(self, fn: Callable) -> Callable:
@@ -558,7 +828,9 @@ class ApproxSpace:
         def step(state, batch):
             if self.config.mode == "memory" and self.config.scrub.boundary:
                 resident = {"params": state["params"], "opt": state["opt"]}
-                resident, stats = self.scrub(resident, state["stats"])
+                resident, stats = self.scrub(
+                    resident, state["stats"], trigger="boundary"
+                )
                 state = {
                     **state,
                     "params": resident["params"],
@@ -586,7 +858,7 @@ class ApproxSpace:
 
         def step(params, cache, batch, pos, stats):
             if self.config.mode == "memory" and self.config.scrub.boundary:
-                cache, stats = self.scrub(cache, stats)
+                cache, stats = self.scrub(cache, stats, trigger="boundary")
             out = fn(params, cache, batch, pos)
             return (*out, stats)
 

@@ -72,9 +72,23 @@ class Engine:
                 "consumes whole prompts in one pass"
             )
         self.model = model
-        self.params = params
         self.cfg = cfg or ServingConfig()
         self.space = space or engine_space(model)
+        # mesh-native serving (ROADMAP leftover): when the engine's space
+        # carries a mesh, model params are device_put onto their logical-axis
+        # shardings — the same `serve_shardings` placement jit_serve_step
+        # uses — instead of staying replicated alongside the sharded pool.
+        self.params_shardings = None
+        if self.space.mesh is not None:
+            from ..distributed import sharding as sh  # deferred: keep layering thin
+
+            rules = self.space.rules or sh.rules_for_mesh(self.space.mesh)
+            self.params_shardings = sh.tree_shardings(
+                model.abstract_params(), model.logical_axes(),
+                self.space.mesh, rules,
+            )
+            params = jax.device_put(params, self.params_shardings)
+        self.params = params
         self.pool = PagedKVPool(model, self.space, self.cfg)
         self.sched = Scheduler(self.pool, self.cfg)
         self.repair = PageRepairManager(self.pool, self.space, self.cfg)
@@ -268,6 +282,11 @@ class Engine:
 
     def stats_dict(self) -> Dict[str, int]:
         return stats_lib.as_dict(self.unified_stats())
+
+    def rule_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-rule repair counters (README §RepairRule) over every pool
+        repair pass this engine ran."""
+        return self.space.rule_stats()
 
     def metrics(self) -> Dict[str, Any]:
         toks = max(self.tokens_emitted, 1)

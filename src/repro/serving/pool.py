@@ -35,6 +35,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from ..core import stats as stats_lib
+from ..core.regions import Region
 from ..distributed import sharding as sh
 from ..nn import module
 from ..runtime import ApproxSpace
@@ -189,24 +190,49 @@ class PagedKVPool:
 
     # ----------------------------------------------------------------- repair
     def fatal_pages(self, page_ids: Sequence[int]) -> List[int]:
-        """The subset of ``page_ids`` holding >=1 non-finite lane — the trap
-        analogue at page granularity (detection only; no repair)."""
+        """The subset of ``page_ids`` holding >=1 fatal lane — the trap
+        analogue at page granularity (detection only; no repair).
+
+        "Fatal" is per-leaf: each pool leaf's assigned ``RepairRule``
+        supplies the detector (README §RepairRule), so a NaN-only KV rule
+        and a range-guarded rule disagree about the same bit pattern by
+        design.  The probe gate mirrors the repair gate exactly
+        (approximate-region float leaves whose rule fires reactively):
+        exact-region/exact-island leaves are never probed, and leaves a
+        reactive pass would not repair must not keep re-flagging their
+        pages as faulty — that would dispatch a no-op scrub every step
+        forever."""
         ids = sorted(set(page_ids))
         if not ids:
             return []
         idx = jnp.asarray(ids, jnp.int32)
+        regions = self.space.regions_for(self.tree)
+        rule_tree, _ = self.space.rules_for(self.tree)
         flags = None
-        for leaf in jax.tree.leaves(self.tree):
-            if not _is_float(leaf):
+        for leaf, region, rule in zip(
+            jax.tree.leaves(self.tree),
+            jax.tree.leaves(regions),
+            jax.tree.leaves(rule_tree),
+        ):
+            if not _is_float(leaf) or region is not Region.APPROX:
+                continue
+            if not rule.fires("reactive"):
                 continue
             rows = leaf[idx]
-            bad = ~jnp.isfinite(rows.reshape(rows.shape[0], -1)).all(axis=1)
+            nan_m, inf_m = rule.detect.masks(rows)
+            bad = (nan_m | inf_m).reshape(rows.shape[0], -1).any(axis=1)
             flags = bad if flags is None else flags | bad
+        if flags is None:
+            return []
         mask = np.asarray(flags)
         return [p for p, b in zip(ids, mask) if b]
 
     def scrub_pages(
-        self, page_ids: Sequence[int], stats: stats_lib.Stats
+        self,
+        page_ids: Sequence[int],
+        stats: stats_lib.Stats,
+        *,
+        trigger: str = "reactive",
     ) -> stats_lib.Stats:
         """Targeted scrub of exactly ``page_ids`` (unique'd), with byte
         accounting — the page-granular reactive repair.  The pool tree is
@@ -215,34 +241,55 @@ class PagedKVPool:
         ids = sorted(set(page_ids))
         if not ids:
             return stats
+        # the plan knows what THIS pass actually repairs (rule gating by
+        # trigger): a pass no rule fires on is a no-op — don't dispatch it
+        # and don't charge the ledger for work that never happened
+        plan = self.space.plan_for(self.tree, scope="pages", trigger=trigger)
+        if plan.scope == "none" or plan.page_row_bytes == 0:
+            return stats
         self.tree, stats = self.space.scrub_pages(
-            self.tree, jnp.asarray(ids, jnp.int32), stats, donate=True
+            self.tree, jnp.asarray(ids, jnp.int32), stats, donate=True,
+            trigger=trigger,
         )
         self.page_scrubs[ids] += 1
-        self.scrubbed_bytes += len(ids) * self.page_bytes
+        self.scrubbed_bytes += len(ids) * plan.page_row_bytes
         self.scrub_calls += 1
         return stats
 
-    def scrub_all(self, stats: stats_lib.Stats) -> stats_lib.Stats:
+    def scrub_all(
+        self, stats: stats_lib.Stats, *, trigger: str = "reactive"
+    ) -> stats_lib.Stats:
         """Whole-pool scrub (the pre-engine ``scrub_cache`` baseline), with
-        byte accounting."""
-        self.tree, stats = self.space.scrub(self.tree, stats, donate=True)
+        byte accounting — gated and charged like ``scrub_pages``: only the
+        bytes the pass's firing rules cover."""
+        plan = self.space.plan_for(self.tree, scope="tree", trigger=trigger)
+        if plan.scope == "none" or plan.bytes_per_run == 0:
+            return stats
+        self.tree, stats = self.space.scrub(
+            self.tree, stats, donate=True, trigger=trigger
+        )
         self.page_scrubs += 1
-        self.scrubbed_bytes += self.total_bytes
+        self.scrubbed_bytes += plan.bytes_per_run
         self.scrub_calls += 1
         return stats
 
     def scrub_scope(
-        self, scope: str, page_ids: Sequence[int], stats: stats_lib.Stats
+        self,
+        scope: str,
+        page_ids: Sequence[int],
+        stats: stats_lib.Stats,
+        *,
+        trigger: str = "reactive",
     ) -> stats_lib.Stats:
         """Execute one planned repair pass by ``RepairPlan`` scope — the
         pool's ledger-keeping dispatch for the page repair manager (the
         scope itself comes from ``runtime.plan.serving_scope``; no repair
-        decisions are made here)."""
+        decisions are made here).  ``trigger`` tags the pass for rule
+        gating (reactive repair vs the background interval sweep)."""
         if scope == "pages":
-            return self.scrub_pages(page_ids, stats)
+            return self.scrub_pages(page_ids, stats, trigger=trigger)
         if scope == "tree":
-            return self.scrub_all(stats)
+            return self.scrub_all(stats, trigger=trigger)
         assert scope == "none", f"bad plan scope {scope!r}"
         return stats
 

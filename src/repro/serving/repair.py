@@ -90,7 +90,9 @@ class PageRepairManager:
         if not scrub_set:
             return stats
         events0 = int(stats["events"])
-        stats = self.pool.scrub_scope(scope, scrub_set, stats)
+        stats = self.pool.scrub_scope(
+            scope, scrub_set, stats, trigger="reactive"
+        )
         self.n_reactive_scrubs += 1
         # the ledger charges only pages that actually held a fatal lane —
         # dirty-but-clean pages (kernel routing false positives) stay clean
@@ -109,7 +111,7 @@ class PageRepairManager:
             return stats
         if scope == "tree":
             self.n_sweep_scrubs += 1
-            return self.pool.scrub_scope(scope, (), stats)
+            return self.pool.scrub_scope(scope, (), stats, trigger="interval")
         n = self.pool.cfg.n_pages
         window: List[int] = [
             (self._sweep_cursor + i) % n
@@ -117,7 +119,7 @@ class PageRepairManager:
         ]
         self._sweep_cursor = (self._sweep_cursor + len(window)) % n
         self.n_sweep_scrubs += 1
-        return self.pool.scrub_scope(scope, window, stats)
+        return self.pool.scrub_scope(scope, window, stats, trigger="interval")
 
     # ------------------------------------------------------------------ intro
     def summary(self) -> dict:

@@ -43,6 +43,18 @@ def test_neighbor_mean_value():
     assert abs(got - finite_mean) < 1e-5
 
 
+def test_neighbor_mean_zero_size_and_tile_shapes():
+    """Zero-size leaves (empty optimizer slots) must pass through the
+    tile-local mean untouched, and awkward shapes must still tile."""
+    empty = jnp.zeros((0, 8), jnp.float32)
+    out, n, i = repair.repair_tensor(empty, policy=policies.neighbor_mean)
+    assert out.shape == (0, 8) and int(n) == 0 and int(i) == 0
+    for shape in [(1,), (7, 3), (300, 520)]:
+        x = jnp.ones(shape).at[(0,) * len(shape)].set(jnp.nan)
+        fixed, *_ = repair.repair_tensor(x, policy=policies.neighbor_mean)
+        assert bool(jnp.isfinite(fixed).all())
+
+
 def test_constant_policy_and_registry():
     x = poisoned()
     fixed, *_ = repair.repair_tensor(x, policy=policies.get(1.5))

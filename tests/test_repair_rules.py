@@ -1,0 +1,404 @@
+"""The `RepairRule` API (README §RepairRule): rule grammar, path binding,
+trigger gating, exact islands, per-rule counters, plan caching per
+(layout, rule-set), legacy single-knob parity, and the acceptance
+end-to-end — one mixed RuleSet shared by train scrub, serving page repair,
+and checkpoint-restore repair."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_transformer
+from repro.core import stats as stats_lib
+from repro.core.regions import Region
+from repro.core.repair import repair_tensor
+from repro.core.rules import Detector, RepairRule, RuleSet, ruleset_of
+from repro.runtime import ApproxConfig, ApproxSpace
+
+
+# One mixed rule set, used across the whole module (the acceptance shape):
+# range-guarded neighbor_mean for optimizer state, NaN-only zero-fill for
+# KV pages, an exact island for embeddings, and a conservative default.
+MIXED = RuleSet((
+    (r"(^|/)opt(/|$)",
+     RepairRule(detect=Detector(max_magnitude=1e3), fill="neighbor_mean")),
+    (r"(^|/)(k|v)(/|$)",
+     RepairRule(detect=Detector(inf=False), fill="zero", trigger="reactive")),
+    (r"(^|/)embed(/|$)", RepairRule.exact_rule()),
+))
+
+
+def mixed_state():
+    k = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(k, 3)
+    return {
+        "params": {"w": jax.random.normal(k1, (8, 16))},
+        "opt": {"mu": jax.random.normal(k2, (8, 16))},
+        "k": jax.random.normal(k3, (4, 8)),
+        "embed": {"table": jnp.ones((4, 4))},
+    }
+
+
+# ----------------------------------------------------------------- grammar
+def test_rule_grammar_and_validation():
+    r = RepairRule(detect=Detector(inf=False), fill="zero", trigger="reactive")
+    assert not r.exact
+    assert r.fires("reactive") and r.fires("forced")
+    assert not r.fires("boundary") and not r.fires("interval")
+    b = RepairRule()                       # the legacy-shaped default
+    assert all(b.fires(p) for p in ("boundary", "interval", "reactive", "forced"))
+    i = RepairRule(trigger="interval")
+    assert not i.fires("boundary") and i.fires("interval") and i.fires("reactive")
+    o = RepairRule(trigger="on-read")
+    assert not o.fires("boundary") and o.fires("forced")
+    e = RepairRule.exact_rule()
+    assert not e.fires("forced")           # exact islands never repair
+    with pytest.raises(ValueError):
+        RepairRule(trigger="bogus")
+
+
+def test_path_binding_first_match_wins_and_fallback():
+    idx_opt, rule_opt = MIXED.rule_for("opt/mu")
+    idx_kv, rule_kv = MIXED.rule_for("layers/k/0")
+    idx_e, rule_e = MIXED.rule_for("embed/table")
+    idx_d, rule_d = MIXED.rule_for("params/w")
+    assert (idx_opt, idx_kv, idx_e) == (0, 1, 2)
+    assert rule_opt.detect.max_magnitude == 1e3
+    assert rule_kv.detect.inf is False and rule_kv.fill == "zero"
+    assert rule_e.exact
+    assert idx_d == len(MIXED.entries) and rule_d.fill == "neighbor_mean"
+    assert MIXED.labels()[0] == r"(^|/)opt(/|$)"       # auto-labeled
+
+
+def test_detector_masks_per_kind():
+    x = jnp.array([1.0, jnp.nan, jnp.inf, -jnp.inf, 2e4], jnp.float32)
+    nan_only = Detector(inf=False)
+    n, i = nan_only.masks(x)
+    assert n.tolist() == [False, True, False, False, False]
+    assert i.tolist() == [False] * 5
+    ranged = Detector(max_magnitude=1e3)
+    n, i = ranged.masks(x)
+    assert n.tolist() == [False, True, False, False, False]
+    assert i.tolist() == [False, False, True, True, True]   # inf subsumed
+    # custom bit pattern: treat exact -0.0 as fatal (mask = value = sign bit)
+    negzero = Detector(nan=False, inf=False,
+                       bitpatterns=(("float32", 0xFFFFFFFF, 0x80000000),))
+    n, i = negzero.masks(jnp.array([0.0, -0.0, 1.0], jnp.float32))
+    assert n.tolist() == [False, True, False]
+
+
+def test_exact_rule_is_region_override_and_skips_injection():
+    space = ApproxSpace(ApproxConfig(mode="memory", rules=MIXED, ber=1e-3))
+    tree = mixed_state()
+    regions = space.regions_for(tree)
+    assert regions["embed"]["table"] is Region.EXACT
+    assert regions["params"]["w"] is Region.APPROX
+    out, flips = space.inject(tree, jax.random.PRNGKey(1), 1e-2)
+    np.testing.assert_array_equal(                 # exact island: no flips
+        np.asarray(out["embed"]["table"]), np.asarray(tree["embed"]["table"])
+    )
+    assert int(flips) > 0                          # the rest was struck
+
+
+# ---------------------------------------------------------------- triggers
+def test_trigger_gating_across_pass_tags():
+    """A reactive-only KV rule skips boundary passes but fires on reactive
+    and forced passes; the boundary-trigger default fires everywhere."""
+    space = ApproxSpace(ApproxConfig(mode="memory", rules=MIXED))
+    tree = mixed_state()
+    tree = {
+        **tree,
+        "k": tree["k"].at[0, 0].set(jnp.nan),
+        "params": {"w": tree["params"]["w"].at[1, 1].set(jnp.nan)},
+    }
+    out, st = space.scrub(tree, stats_lib.zeros(), trigger="boundary")
+    assert bool(jnp.isfinite(out["params"]["w"]).all())   # default rule fired
+    assert bool(jnp.isnan(out["k"][0, 0]))                # reactive rule held
+    assert stats_lib.as_dict(st)["nan_found"] == 1
+
+    out, st = space.scrub(tree, stats_lib.zeros(), trigger="reactive")
+    assert bool(jnp.isfinite(out["k"]).all())             # now it fires
+    assert stats_lib.as_dict(st)["nan_found"] == 2
+
+    out, st = space.scrub(tree, stats_lib.zeros())        # forced default
+    assert bool(jnp.isfinite(out["k"]).all())
+    assert bool(jnp.isfinite(out["params"]["w"]).all())
+
+
+def test_nan_only_kv_rule_leaves_inf_resident():
+    """The "kv" rule is NaN-only: a stored Inf is not fatal under it, while
+    the default rule (include_inf) would have repaired it."""
+    space = ApproxSpace(ApproxConfig(mode="memory", rules=MIXED))
+    tree = mixed_state()
+    tree["k"] = tree["k"].at[1, 2].set(jnp.inf)
+    out, st = space.scrub(tree, stats_lib.zeros(), trigger="reactive")
+    assert bool(jnp.isinf(out["k"][1, 2]))
+    assert stats_lib.as_dict(st)["inf_found"] == 0
+
+
+def test_range_guarded_opt_rule_uses_neighbor_mean():
+    space = ApproxSpace(ApproxConfig(mode="memory", rules=MIXED))
+    tree = mixed_state()
+    tree["opt"]["mu"] = tree["opt"]["mu"].at[0, 0].set(2.0e4)   # legal float
+    out, st = space.scrub(tree, stats_lib.zeros(), trigger="boundary")
+    fixed = float(out["opt"]["mu"][0, 0])
+    assert abs(fixed) < 1e3                         # range guard fired
+    assert stats_lib.as_dict(st)["inf_found"] == 1  # range bucket
+    # params/w falls to the default rule: no range guard there
+    tree2 = mixed_state()
+    tree2["params"]["w"] = tree2["params"]["w"].at[0, 0].set(2.0e4)
+    out2, st2 = space.scrub(tree2, stats_lib.zeros(), trigger="boundary")
+    assert float(out2["params"]["w"][0, 0]) == 2.0e4
+
+
+# ---------------------------------------------------------- per-rule stats
+def test_per_rule_counters_in_unified_stats():
+    space = ApproxSpace(ApproxConfig(mode="memory", rules=MIXED))
+    tree = mixed_state()
+    tree["opt"]["mu"] = tree["opt"]["mu"].at[0, 0].set(jnp.nan)
+    tree["k"] = tree["k"].at[0, 0].set(jnp.nan).at[1, 1].set(jnp.nan)
+    space.scrub(tree)                              # forced host-side pass
+    rs = space.rule_stats()
+    labels = space.ruleset.labels()
+    assert rs[labels[0]]["nan_found"] == 1         # opt rule
+    assert rs[labels[0]]["events"] == 1
+    assert rs[labels[1]]["nan_found"] == 2         # kv rule
+    assert rs[labels[2]] == {"nan_found": 0, "inf_found": 0, "events": 0}
+    assert rs["default"]["nan_found"] == 0
+    # aggregate stream agrees with the per-rule ledger
+    assert space.stats_dict()["nan_found"] == 3
+
+
+# ------------------------------------------------------------ plan caching
+def test_one_trace_per_layout_and_ruleset():
+    """Same layout + same rule set reuses the executable; a different
+    trigger (different gating) and a different rule set each trace once."""
+    space = ApproxSpace(ApproxConfig(mode="memory", rules=MIXED))
+    tree = mixed_state()
+    out, _ = space.scrub(tree, stats_lib.zeros(), trigger="boundary")
+    assert space.n_traces == 1
+    for _ in range(3):
+        out, _ = space.scrub(out, stats_lib.zeros(), trigger="boundary")
+    assert space.n_traces == 1, "same (layout, rule-set) must never retrace"
+    space.scrub(tree, stats_lib.zeros(), trigger="reactive")
+    assert space.n_traces == 2, "a new trigger tag is a new gating"
+
+    # a value-equal rule set on a fresh space shares nothing (fresh cache)
+    # but still traces exactly once per layout
+    other = ApproxSpace(ApproxConfig(mode="memory", rules=MIXED))
+    other.scrub(tree, stats_lib.zeros(), trigger="boundary")
+    assert other.n_traces == 1
+
+
+# ------------------------------------------------------------ legacy parity
+@pytest.mark.parametrize("policy", ["zero", "neighbor_mean"])
+@pytest.mark.parametrize("max_magnitude", [None, 1e3])
+def test_legacy_single_knob_bit_exact_parity(policy, max_magnitude):
+    """A legacy scalar config through the rules machinery reproduces the
+    pre-redesign per-leaf repair_tensor loop bit for bit, and matches an
+    explicitly-constructed one-rule RuleSet."""
+    cfg = ApproxConfig(mode="memory", policy=policy,
+                       max_magnitude=max_magnitude)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    tree = {
+        "w": jax.random.normal(k1, (16, 32)).at[0, 0].set(jnp.nan)
+        .at[3, 4].set(jnp.inf).at[5, 5].set(4e4),
+        "mu": jax.random.normal(k2, (64,)).at[7].set(jnp.nan),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+    # pre-redesign reference: the scalar-knob per-leaf loop
+    ref, nan_tot, inf_tot = {}, 0, 0
+    for key in ("w", "mu"):
+        fixed, n, i = repair_tensor(
+            tree[key], policy=cfg.resolved_policy(),
+            include_inf=cfg.include_inf, max_magnitude=cfg.max_magnitude,
+        )
+        ref[key] = fixed
+        nan_tot += int(n)
+        inf_tot += int(i)
+
+    space = ApproxSpace(cfg)
+    out, st = space.scrub(tree, stats_lib.zeros())
+    for key in ("w", "mu"):
+        np.testing.assert_array_equal(
+            np.asarray(out[key]).view(np.uint32),
+            np.asarray(ref[key]).view(np.uint32),
+        )
+    assert stats_lib.as_dict(st)["nan_found"] == nan_tot
+    assert stats_lib.as_dict(st)["inf_found"] == inf_tot
+
+    # the explicit one-rule lift is the same rule set (same digest)
+    explicit = ApproxConfig(
+        mode="memory",
+        rules=RuleSet.single(RepairRule(
+            detect=Detector(inf=True, max_magnitude=max_magnitude),
+            fill=policy,
+        )),
+    )
+    assert explicit.ruleset.digest() == cfg.ruleset.digest()
+
+
+def test_ruleset_of_accepts_legacy_repair_config():
+    from repro.core.repair import RepairConfig
+
+    rs = ruleset_of(RepairConfig(mode="memory", policy="zero",
+                                 include_inf=False))
+    rule = rs.read_rule()
+    assert rule.fill == "zero" and rule.detect.inf is False
+    assert ruleset_of(ApproxConfig(rules=MIXED)) is not None
+
+
+def test_space_rules_kwarg_routes_to_config():
+    """ApproxSpace(rules=RuleSet) must configure REPAIR rules, not be
+    silently captured by the mesh sharding-rules slot."""
+    space = ApproxSpace(mode="memory", rules=MIXED)
+    assert space.ruleset.digest() == MIXED.digest()
+    assert space.rules is None                      # sharding slot untouched
+    # raw (pattern, rule) bindings route the same way
+    space2 = ApproxSpace(mode="memory", rules=tuple(MIXED.entries))
+    assert space2.ruleset.digest() == MIXED.digest()
+    # exact island actually applies
+    regions = space.regions_for(mixed_state())
+    assert regions["embed"]["table"] is Region.EXACT
+
+
+def test_on_read_rule_repairs_at_use_in_memory_mode():
+    """An on-read rule's leaves are skipped by scheduled scrubs; use() is
+    their only repair point — so use() must fire for it even in memory
+    mode (identity stays identity for boundary-trigger rule sets)."""
+    on_read = RuleSet.single(
+        RepairRule(detect=Detector(), fill="zero", trigger="on-read")
+    )
+    space = ApproxSpace(ApproxConfig(mode="memory", rules=on_read))
+    x = jnp.array([1.0, jnp.nan, 3.0])
+    out, st = space.scrub({"w": x}, stats_lib.zeros(), trigger="boundary")
+    assert bool(jnp.isnan(out["w"][1]))             # scheduled scrub skips
+    fixed, st = space.use(x, stats_lib.zeros())
+    assert bool(jnp.isfinite(fixed).all())          # use-site repairs
+    assert stats_lib.as_dict(st)["nan_found"] == 1
+    # legacy memory-mode configs keep the identity fast path
+    legacy = ApproxSpace(ApproxConfig(mode="memory"))
+    assert legacy.use(x) is x
+
+
+def test_pool_ledger_not_charged_for_gated_noop_pass():
+    """A sweep (interval pass) over a pool whose every rule is
+    reactive-only repairs nothing — the byte/scrub ledgers must not charge
+    phantom work."""
+    from repro.serving import PagedKVPool, ServingConfig
+
+    model, _ = tiny_transformer()
+    reactive_only = RuleSet.single(
+        RepairRule(detect=Detector(inf=False), fill="zero",
+                   trigger="reactive")
+    )
+    space = ApproxSpace(ApproxConfig(mode="memory", rules=reactive_only))
+    pool = PagedKVPool(model, space, ServingConfig(
+        page_size=4, n_pages=4, max_batch=1, max_pages_per_request=2,
+    ))
+    stats = pool.scrub_scope("pages", [0, 1], stats_lib.zeros(),
+                             trigger="interval")
+    assert pool.scrubbed_bytes == 0 and pool.scrub_calls == 0
+    assert stats_lib.as_dict(stats)["events"] == 0
+    # the reactive pass itself is charged normally
+    pool.scrub_scope("pages", [0, 1], stats_lib.zeros(), trigger="reactive")
+    assert pool.scrubbed_bytes > 0 and pool.scrub_calls == 1
+
+
+def test_duplicate_rule_labels_do_not_shadow():
+    rs = RuleSet((
+        (r"(^|/)a(/|$)", RepairRule(fill="zero", label="x")),
+        (r"(^|/)b(/|$)", RepairRule(fill="zero", label="x")),
+    ))
+    assert rs.labels() == ("x", "x#1", "default")
+    space = ApproxSpace(ApproxConfig(mode="memory", rules=rs))
+    tree = {"a": jnp.array([jnp.nan, 1.0]), "b": jnp.array([jnp.nan, jnp.nan])}
+    space.scrub(tree)
+    rstats = space.rule_stats()
+    assert rstats["x"]["nan_found"] == 1
+    assert rstats["x#1"]["nan_found"] == 2
+
+
+def test_config_replace_keeps_rules():
+    cfg = ApproxConfig(mode="memory", rules=MIXED)
+    forced = cfg.memory_forced()
+    assert forced.ruleset.digest() == MIXED.digest()
+    lifted = ApproxConfig.from_legacy(cfg, ber=1e-5)
+    assert lifted.ruleset.digest() == MIXED.digest()
+
+
+# ------------------------------------------------------------- end to end
+def test_mixed_ruleset_end_to_end(tmp_path):
+    """The acceptance scenario: ONE RuleSet drives (1) the train boundary
+    scrub, (2) the serving engine's page repair, and (3) the
+    checkpoint-restore repair; per-rule counters land in the unified
+    ledger."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core import stats as stats_lib
+    from repro.serving import Engine, ServingConfig
+
+    # (1) train: boundary scrub through wrap_train_step resolves the rules
+    space = ApproxSpace(ApproxConfig(mode="memory", rules=MIXED))
+
+    def raw_step(state, batch):
+        return state, {"ok": jnp.isfinite(state["params"]["w"]).all()}
+
+    step = jax.jit(space.wrap_train_step(raw_step))
+    state = {
+        "params": {"w": jnp.ones((4, 4)).at[0, 0].set(jnp.nan)},
+        "opt": {"mu": jnp.ones((4,)).at[1].set(4e4)},
+        "stats": stats_lib.zeros(),
+    }
+    out, metrics = step(state, {})
+    assert bool(metrics["ok"])
+    assert float(out["opt"]["mu"][1]) < 1e3          # opt rule range guard
+    assert int(out["stats"]["nan_found"]) == 1
+    assert int(out["stats"]["inf_found"]) == 1       # range bucket
+
+    # (2) serving: the same rules flow through the engine via the model cfg
+    model, params = tiny_transformer()
+    model = type(model)(dataclasses.replace(
+        model.cfg, repair=ApproxConfig(mode="off", rules=MIXED),
+    ))
+    eng = Engine(model, params, ServingConfig(
+        page_size=4, n_pages=8, max_batch=2, max_pages_per_request=4,
+        repair="page", ber=1e-3, seed=1,
+    ))
+    assert eng.space.ruleset.digest() == MIXED.digest()
+    rid = eng.add_request([5, 6, 7], max_new=6)
+    results = eng.run()
+    assert len(results[rid]["generated"]) == 6
+    # pool leaves are "layers/k|v" -> the NaN-only reactive kv rule; any
+    # repaired lane must be charged to that rule, none to the others
+    rs = eng.rule_stats()
+    kv_label = eng.space.ruleset.labels()[1]
+    assert rs[kv_label]["inf_found"] == 0            # NaN-only detector
+    for label, counters in rs.items():
+        if label != kv_label:
+            assert counters["events"] == 0
+
+    # (3) checkpoint: restore repair against the same rules
+    mgr = CheckpointManager(
+        str(tmp_path), scrub=True,
+        repair_cfg=ApproxConfig(mode="memory", rules=MIXED),
+    )
+    tree = mixed_state()
+    mgr.save(1, tree, blocking=True)
+    like = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree
+    )
+    restored, _ = mgr.restore(like=like, repair=True)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # post-restore flips healed from the checkpoint under the same rules
+    poisoned = dict(restored)
+    poisoned["opt"] = {"mu": restored["opt"]["mu"].at[0, 0].set(jnp.nan)}
+    healed = mgr.reference_repair(poisoned)
+    np.testing.assert_array_equal(
+        np.asarray(healed["opt"]["mu"]), np.asarray(tree["opt"]["mu"])
+    )
+    opt_label = mgr.space.ruleset.labels()[0]
+    assert mgr.space.rule_stats()[opt_label]["nan_found"] >= 1

@@ -29,7 +29,9 @@ def test_generate_scrub_cadence_fires_due(model_params):
     )
     calls = []
     orig = space.scrub
-    space.scrub = lambda tree, stats=None: (calls.append(1), orig(tree, stats))[1]
+    space.scrub = lambda tree, stats=None, **kw: (
+        calls.append(1), orig(tree, stats, **kw)
+    )[1]
 
     prompt = jnp.ones((1, 4), jnp.int32)
     S0, max_new = 4, 6
