@@ -1,0 +1,29 @@
+"""Shared JSON-record merging for bench sections.
+
+``benchmarks/run.py --out FILE`` hands the same path to every section that
+accepts an ``out`` kwarg; each section merges its own entry under
+``sections`` instead of overwriting the file, so the record accumulates
+(serving engine + repair pipeline today).  ``run.py`` removes the file at
+the start of a run — a record never mixes two runs' sections.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+
+def merge_record(path: str, name: str, section: Dict[str, Any],
+                 **top_level: Any) -> None:
+    """Merge ``section`` under ``sections[name]`` of the JSON record at
+    ``path`` (created if absent), updating any ``top_level`` keys."""
+    record: Dict[str, Any] = {"sections": {}}
+    if os.path.exists(path):
+        with open(path) as f:
+            record = json.load(f)
+        record.setdefault("sections", {})
+    record.update(top_level)
+    record["sections"][name] = section
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# merged section {name!r} into {path}")

@@ -186,9 +186,12 @@ def main(smoke: bool = False, out: Optional[str] = None) -> Dict[str, Any]:
           "configurations")
 
     if out:
-        with open(out, "w") as f:
-            json.dump(record, f, indent=2)
-        print(f"# wrote {out}")
+        # merge alongside the other sections' records (serving engine) —
+        # these keys stay at the top level for check_bench compatibility
+        from ._record import merge_record
+
+        for name, sec in record["sections"].items():
+            merge_record(out, name, sec, smoke=smoke)
     return record
 
 

@@ -12,14 +12,17 @@ broken bench fails CI instead of rotting silently.  Sections whose ``main``
 accepts a ``smoke`` kwarg shrink themselves; the rest are already tiny.
 
 ``--out FILE`` records the bench trajectory: sections whose ``main``
-accepts an ``out`` kwarg (currently ``repair_pipeline``: eager-vs-compiled
-scrub/inject wall-time and scrubbed-bytes/step on 1 and 8 fake devices)
-write their JSON record there — the per-PR perf baseline.
+accepts an ``out`` kwarg (``serving_engine``: tokens/s + bytes/token per
+arm; ``repair_pipeline``: eager-vs-compiled scrub/inject wall-time and
+scrubbed-bytes/step on 1 and 8 fake devices) MERGE their JSON record there
+(benchmarks/_record.py) — the per-PR perf baseline.  The file is removed
+at the start of a run so a record never mixes two runs' sections.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import os
 import sys
 import traceback
 
@@ -56,6 +59,8 @@ def main(argv=None) -> None:
         "(repair_pipeline)",
     )
     args = ap.parse_args(argv)
+    if args.out and os.path.exists(args.out):
+        os.unlink(args.out)            # fresh record: sections merge into it
 
     failures = 0
     for title, fn in SECTIONS:

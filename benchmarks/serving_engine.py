@@ -1,25 +1,39 @@
-"""Serving-engine bench: tokens/s and scrubbed-bytes/token, whole-cache vs
-page-granular reactive repair, across BER points.
+"""Serving-engine bench: tokens/s and scrubbed-bytes/token across repair
+granularities AND decode data paths, across BER points.
 
 The paper's claim at serving granularity: reactive repair should pay
 proportionally to what *faulted*, not to what is *resident*.  The engine
 runs the same mixed prefill/decode workload (more concurrent requests than
 the page pool can hold at once — admission control + preemption active)
-under two repair granularities:
+under three arms:
 
   whole   any fault among the touched pages scrubs the entire pool (the
-          pre-engine ``scrub_cache`` baseline)
-  page    only the faulted pages are scrubbed (reactive, page-granular)
+          pre-engine ``scrub_cache`` baseline); gathered-view decode
+  page    only the faulted pages are scrubbed (reactive, page-granular);
+          gathered-view decode — the PR-2/PR-4 gather path
+  paged   page repair + the fused paged-attention kernel: decode straight
+          off the pool (zero full-view copies), detection fused into the
+          read (README §Serving engine)
 
 CSV: name,us_per_call,derived — us_per_call is us/token (wall-clock);
-derived carries scrubbed-bytes/token and the event counters.  At every
-BER > 0 the page row must come in strictly below the whole row on
-scrubbed-bytes/token (asserted, like table3's count invariants).
+derived carries scrubbed-bytes/token, the event counters, and (paged arm)
+the pool-copy counts.  Asserted every run: at BER > 0 the page arm comes in
+strictly below the whole arm on scrubbed-bytes/token; the paged arm is *no
+worse* than the gather path — identical tokens emitted and no more
+scrubbed bytes/token — and issues zero decode-path full-view copies.
+Wall-clock is reported but not asserted for the paged arm: off-TPU the
+Pallas kernel runs in interpret mode (a Python-level simulator), which
+says nothing about the lowered kernel this arm exists for.
+
+``main(out=...)`` merges a ``serving`` section into the shared bench
+record (``benchmarks/run.py --out BENCH_repair.json``), validated by
+``scripts/check_bench.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Optional
 
 import jax
 
@@ -33,6 +47,8 @@ from repro.serving import Engine, ServingConfig
 # repair events (the zero point pins the no-fault overhead)
 BERS = (0.0, 1e-4, 1e-3)
 SMOKE_BERS = (0.0, 1e-3)
+
+ARMS = ("whole", "page", "paged")
 
 
 def _model():
@@ -59,18 +75,25 @@ def run(smoke: bool = False):
     model, params = _model()
     n_requests, max_new = (8, 6) if smoke else (10, 12)
     rows = []
+    arm_metrics = {}
     for ber in SMOKE_BERS if smoke else BERS:
         per_mode = {}
-        for repair in ("whole", "page"):
+        for arm in ARMS:
             engine = Engine(
                 model,
                 params,
                 ServingConfig(
                     page_size=4, n_pages=10, max_batch=4,
-                    max_pages_per_request=6, repair=repair, ber=ber,
-                    sweep_interval=16, sweep_pages=2, seed=7,
+                    max_pages_per_request=6,
+                    repair="whole" if arm == "whole" else "page",
+                    paged_decode="auto" if arm == "paged" else "off",
+                    ber=ber, sweep_interval=16, sweep_pages=2, seed=7,
                 ),
             )
+            if arm == "paged":
+                assert engine.paged_plan is not None, (
+                    "fused decode must engage on the bench config"
+                )
             _workload(engine, n_requests, max_new)
             t0 = time.perf_counter()
             results = engine.run()
@@ -78,29 +101,62 @@ def run(smoke: bool = False):
             assert len(results) == n_requests
             m = engine.metrics()
             d = engine.stats_dict()
-            per_mode[repair] = m
+            per_mode[arm] = {**m, "tokens": {
+                rid: results[rid]["tokens"] for rid in results
+            }}
+            us_per_token = 1e6 * dt / max(m["tokens_emitted"], 1)
+            name = f"serving_{arm}_ber{ber:g}"
             rows.append((
-                f"serving_{repair}_ber{ber:g}",
-                1e6 * dt / max(m["tokens_emitted"], 1),
+                name,
+                us_per_token,
                 f"scrubbed_bytes_per_token={m['scrubbed_bytes_per_token']:.0f};"
                 f"tokens={m['tokens_emitted']};"
                 f"preempt={m['n_preemptions']};events={d['events']};"
-                f"flips={d['flips']}",
+                f"flips={d['flips']};gathers={m['pool_gathers']};"
+                f"scatters={m['pool_scatters']}",
             ))
+            arm_metrics[name] = {
+                "us_per_token": us_per_token,
+                "scrubbed_bytes_per_token": m["scrubbed_bytes_per_token"],
+                "tokens_emitted": m["tokens_emitted"],
+                "pool_gathers": m["pool_gathers"],
+                "pool_scatters": m["pool_scatters"],
+                "events": d["events"],
+            }
         if ber > 0.0:
             assert (
                 per_mode["page"]["scrubbed_bytes_per_token"]
                 < per_mode["whole"]["scrubbed_bytes_per_token"]
             ), "page-granular repair must scrub strictly fewer bytes/token"
-    return rows
+        # the fused paged arm is NO WORSE than the gather path: identical
+        # token streams (same repair math, fused into the read) and no more
+        # repair traffic — and its decode issues zero full-view copies
+        assert per_mode["paged"]["tokens"] == per_mode["page"]["tokens"], (
+            "paged decode drifted from the gathered path"
+        )
+        assert (
+            per_mode["paged"]["scrubbed_bytes_per_token"]
+            <= per_mode["page"]["scrubbed_bytes_per_token"]
+        ), "paged decode must not scrub more bytes/token than the gather path"
+        assert per_mode["paged"]["pool_gathers"] < per_mode["page"]["pool_gathers"]
+    return rows, arm_metrics
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, out: Optional[str] = None):
     print("# serving_engine: continuous batching over the paged KV pool;")
-    print("# us_per_call is us/token; page must beat whole on bytes/token")
+    print("# us_per_call is us/token; page must beat whole on bytes/token;")
+    print("# paged (fused kernel) must match page tokens with zero decode copies")
     print("name,us_per_call,derived")
-    for name, us, derived in run(smoke=smoke):
+    rows, arm_metrics = run(smoke=smoke)
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if out:
+        from ._record import merge_record
+
+        merge_record(out, "serving", {
+            "rows": arm_metrics,
+            "paged_vs_gather_bytes_ok": True,   # asserted above
+        }, smoke=smoke)
 
 
 if __name__ == "__main__":

@@ -219,11 +219,33 @@ class CheckpointManager:
 
     # -------------------------------------------------------------- saving
     def save(self, step: int, tree: Any, *, blocking: bool = False):
-        """Scrub + device_get synchronously; serialize on a worker thread."""
+        """device_get + scrub synchronously; serialize on a worker thread.
+
+        Donation audit (ROADMAP leftover): for local/replicated states the
+        host copy is taken EAGERLY — before any scrub — so the save scrub
+        runs over the copy's freshly materialized device buffers and can
+        donate them (``donate=True``: in-place repair, no second
+        device-resident copy).  The live train state is never an input to
+        the donated executable, so it survives untouched — including any
+        fatal lanes a later reactive pass will handle; only the serialized
+        bytes are guaranteed clean.
+
+        Multi-device states keep the placement-preserving order (scrub the
+        sharded device tree per-shard under GSPMD, ``donate=False`` so the
+        live state survives, then one device_get): routing them through a
+        host copy would commit the full unsharded state to one device —
+        exactly the OOM the sharded plan exists to avoid."""
         self.wait()
-        if self.scrub:
-            tree = self.space.scrub(tree)
-        host = jax.device_get(tree)
+        sharded = any(
+            getattr(getattr(leaf, "sharding", None), "num_devices", 1) > 1
+            for leaf in jax.tree.leaves(tree)
+        )
+        if self.scrub and sharded:
+            host = jax.device_get(self.space.scrub(tree))
+        else:
+            host = jax.device_get(tree)
+            if self.scrub:
+                host = jax.device_get(self.space.scrub(host, donate=True))
         self._last_state = (step, host)
 
         def work():

@@ -7,6 +7,8 @@ attention over a cached KV.  Both get a fused-reactive-repair kernel:
   scrub.py              one-shot in-place NaN/Inf repair + event counters
   repair_matmul.py      tiled MXU matmul, fused operand-tile repair
   repair_attention.py   flash attention, fused KV-tile repair
+  paged_attention.py    block-table paged decode attention straight off the
+                        serving pool, fused on-read repair + per-page counts
   mlstm_chunk.py        fused chunked-mLSTM, (P,P) state resident in VMEM
   ops.py                jit wrappers adding memory-mode reactive write-back
   ref.py                pure-jnp oracles (bit-exact counter semantics)
@@ -14,5 +16,6 @@ attention over a cached KV.  Both get a fused-reactive-repair kernel:
 All kernels use explicit BlockSpec VMEM tiling and are validated on CPU in
 interpret mode; on TPU they lower natively (default_interpret() switches).
 """
-from . import common, mlstm_chunk, ops, ref  # noqa: F401
+from . import common, mlstm_chunk, ops, paged_attention, ref  # noqa: F401
 from .ops import flash_attention, repair_matmul, scrub, scrub_pages  # noqa: F401
+from .paged_attention import paged_attention as paged_attention_call  # noqa: F401

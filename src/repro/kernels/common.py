@@ -51,6 +51,26 @@ KERNEL_POLICIES = ("zero", "constant", "neighbor_mean", "clamp_finite_max")
 DEFAULT_DETECTOR = rules_lib.Detector()
 
 
+def kernel_fill(fill) -> Optional[Tuple[str, float]]:
+    """Map a ``RepairRule`` fill onto a kernel (policy, constant) pair that
+    is *bit-identical* to the jnp repair path — value-independent fills
+    only.  ``neighbor_mean`` (tile statistics differ between the kernels'
+    VMEM tiles and the policy layer's fit) and the sign-preserving jnp
+    ``clamp_finite_max`` have kernel analogues but not bit-equal ones, so
+    they return ``None``: callers fall back to the jnp lowering rather than
+    silently drift.  This is the ONE eligibility definition shared by the
+    fused paged-decode path and the plan-level kernel placement."""
+    if isinstance(fill, (int, float)) and not isinstance(fill, bool):
+        return ("constant", float(fill))
+    if fill == "zero":
+        return ("zero", 0.0)
+    from ..core import policies as policies_lib
+
+    if isinstance(fill, policies_lib.RepairPolicy) and fill.name == "zero":
+        return ("zero", 0.0)
+    return None
+
+
 def resolve_detector(
     detector: Optional[rules_lib.Detector], include_inf: bool
 ) -> rules_lib.Detector:

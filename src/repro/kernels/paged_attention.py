@@ -1,0 +1,285 @@
+"""Paged decode attention with fused on-read repair — the trap, in the read.
+
+This is the serving engine's decode hot path run *straight off the pool*:
+the kernel consumes the pool's page-major KV leaves plus per-request block
+tables (the layout vLLM's PagedAttention popularized), so the engine never
+gathers pages into a contiguous per-step view and never scatters one back.
+The per-step full-KV copy — the #1 ROADMAP open item after PR 3 — is gone;
+the page-axis sharding of the pool finally pays off end to end, and (per
+EDEN) the approximate data stays in place instead of round-tripping.
+
+Repair semantics are the truest realization of the paper's trap-on-read
+design this repo has: each (page, layer) row is bit-pattern checked and
+repaired in VMEM right after the HBM→VMEM DMA the attention performs
+anyway — detection and repair fused into the read, zero extra HBM traffic —
+and the kernel emits *per-page-slot fatal counts*, so the reactive repair
+manager knows exactly which resident pages hold a fatal lane without any
+separate detection scan over the pages the step touched.
+
+Layout:
+
+  q             (B, H, Dh)          one query token per decode slot
+  k/v pages     (P, L, pg, Kh, Dh)  the pool leaves, page axis LEADING
+                                    (``Model.paged_cache_defs``); ``layer``
+                                    selects the L row via scalar prefetch
+  block_tables  (B, M) int32        per-request page lists, null-padded
+  positions     (B) int32           last valid context position (inclusive)
+
+Grid (B, M): request-major, one physical page per inner step.  The page's
+pool row is selected *by the block table* through the k/v BlockSpec index
+maps — the block table is a scalar-prefetch operand, available before the
+kernel body, which is exactly what PrefetchScalarGridSpec exists for.
+Online-softmax state (acc, m, l) lives in scratch across the page axis.
+Null-padded tail slots are masked by position (a request's real pages cover
+positions ``0..pos``; padding covers positions beyond it), but their DMA
+and detection still run: a NaN parked in the null page would otherwise
+poison the context through ``0 * NaN`` in the value contraction — here it
+is repaired in VMEM and *reported*, like any other page.
+
+Outputs: (out (B, H, Dh), slot_counts (B, M) int32, counts int32[8]).
+``slot_counts[b, j]`` is the fatal-lane count of the page visited by block
+slot (b, j) — scatter-added over the block table this becomes the
+``(n_pages,)`` per-page vector the serving repair manager consumes (pages
+visited by several slots, i.e. the null page, accumulate per visit; the
+manager only needs the >0 predicate).  ``counts`` is the shared AT_* event
+layout of ``repair_attention`` so the unified stats routing is identical.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+NEG_INF = -1e30
+
+# counts layout (int32[8]) — identical to repair_attention's AT_* layout
+NAN_K, INF_K, EV_K, NAN_V, INF_V, EV_V, EV_TOTAL = range(7)
+
+# sentinel default for the detector kwargs: "the legacy NaN(+Inf) pattern
+# via include_inf".  ``None`` is a *meaningful* value (detection disabled
+# for that operand), so the default cannot be None.
+DEFAULT_DETECTOR = "default"
+
+
+def _paged_kernel(
+    consts_ref,      # int32[2, 8]  detector constants: row 0 K, row 1 V
+    bt_ref,          # int32[B, M]  block tables (also drives the index maps)
+    pos_ref,         # int32[B]     last valid position per request
+    layer_ref,       # int32[1]     which L row of the pool leaves
+    q_ref, k_ref, v_ref,
+    o_ref, slot_ref, counts_ref,
+    acc_ref, m_ref, l_ref,
+    *, sm_scale: float, policy: str, constant: float,
+    pg: int, n_kv: int, group: int, nm: int, out_dtype,
+):
+    b, j = pl.program_id(0), pl.program_id(1)
+    step = b * pl.num_programs(1) + j
+
+    @pl.when(step == 0)
+    def _init_counts():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    @pl.when(j == 0)
+    def _init_state():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # ---- fused on-read repair of this page's K/V rows (the trap) ----
+    k_fixed, nan_k, inf_k = common.repair_tile(
+        k_ref[0, 0], policy=policy, constant=constant, consts=consts_ref[0],
+    )
+    v_fixed, nan_v, inf_v = common.repair_tile(
+        v_ref[0, 0], policy=policy, constant=constant, consts=consts_ref[1],
+    )
+    ev_k = ((nan_k + inf_k) > 0).astype(jnp.int32)
+    ev_v = ((nan_v + inf_v) > 0).astype(jnp.int32)
+    counts_ref[NAN_K] += nan_k
+    counts_ref[INF_K] += inf_k
+    counts_ref[EV_K] += ev_k
+    counts_ref[NAN_V] += nan_v
+    counts_ref[INF_V] += inf_v
+    counts_ref[EV_V] += ev_v
+    counts_ref[EV_TOTAL] += ((ev_k + ev_v) > 0).astype(jnp.int32)
+    # the per-page detection the reactive repair manager consumes
+    slot_ref[0, 0] = nan_k + inf_k + nan_v + inf_v
+
+    # ---- online softmax over this page ----
+    H = n_kv * group
+    q = q_ref[0].astype(jnp.float32).reshape(n_kv, group, q_ref.shape[-1])
+    kb = jnp.moveaxis(k_fixed.astype(jnp.float32), 1, 0)     # (Kh, pg, Dh)
+    s = jax.lax.dot_general(
+        q, kb, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ) * sm_scale                                             # (Kh, G, pg)
+    t = j * pg + jax.lax.broadcasted_iota(jnp.int32, (1, 1, pg), 2)
+    s = jnp.where(t <= pos_ref[b], s, NEG_INF)
+    s2 = s.reshape(H, pg)
+
+    m_prev = m_ref[:, 0]                                     # (H,)
+    m_new = jnp.maximum(m_prev, jnp.max(s2, axis=-1))
+    p = jnp.exp(s2 - m_new[:, None])                         # (H, pg)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+    # softmax weights quantize to the cache dtype before the value
+    # contraction — the gathered decode's `w.astype(cv.dtype)` and the
+    # flash kernel's `p.astype(v_blk.dtype)`, kept here so the fused path
+    # matches the gathered one (bit-exact for f32 pools; for bf16 the
+    # online-softmax alpha-rescale happens after quantization, so parity
+    # is approximate at the value level, token-level in practice)
+    vb = jnp.moveaxis(v_fixed, 1, 0)                         # (Kh, pg, Dh)
+    pv = jax.lax.dot_general(
+        p.reshape(n_kv, group, pg).astype(v_fixed.dtype), vb,
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                        # (Kh, G, Dh)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv.reshape(acc_ref.shape)
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(j == nm - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "policy", "constant", "include_inf", "interpret",
+        "detector_k", "detector_v",
+    ),
+)
+def paged_attention_raw(
+    q: jax.Array,              # (B, H, Dh)
+    k_pages: jax.Array,        # (P, L, pg, Kh, Dh)
+    v_pages: jax.Array,        # (P, L, pg, Kh, Dh)
+    block_tables: jax.Array,   # (B, M) int32
+    positions: jax.Array,      # (B,) int32, inclusive
+    layer: jax.Array,          # int32 scalar — L row of the pool leaves
+    *,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    interpret: Optional[bool] = None,
+    detector_k=DEFAULT_DETECTOR,
+    detector_v=DEFAULT_DETECTOR,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One layer of paged decode attention with fused on-read repair.
+
+    ``detector_k`` / ``detector_v`` pick the fatal-pattern set per operand:
+    a ``core.rules.Detector``, the default sentinel (legacy NaN(+Inf) via
+    ``include_inf``), or ``None`` — detection disabled for that operand
+    entirely (a zeroed-flags constants row; the exact-region /
+    non-reactive-rule case), which keeps the read bit-transparent.  Returns
+    ``(out (B, H, Dh), slot_counts (B, M) int32, counts int32[8])``.
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    B, H, Dh = q.shape
+    P, L, pg, Kh, _ = k_pages.shape
+    assert v_pages.shape == k_pages.shape, (k_pages.shape, v_pages.shape)
+    assert H % Kh == 0, (H, Kh)
+    group = H // Kh
+    M = block_tables.shape[1]
+    sm_scale = 1.0 / math.sqrt(Dh)
+
+    def operand_row(det):
+        if det is None:
+            # all detection flags off: the kernel loads, never repairs
+            return jnp.zeros((8,), jnp.int32)
+        if det == DEFAULT_DETECTOR:
+            det = common.resolve_detector(None, include_inf)
+        return common.detector_operand(det, k_pages.dtype)
+
+    consts = jnp.stack([operand_row(detector_k), operand_row(detector_v)])
+
+    from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe import
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,    # detector consts, block tables, positions, layer
+        grid=(B, M),
+        in_specs=[
+            pl.BlockSpec((1, H, Dh), lambda b, j, c, bt, pos, lay: (b, 0, 0)),
+            # the block table IS the index map: page (b, j) of the request's
+            # table selects the pool row — no gather ever materializes
+            pl.BlockSpec(
+                (1, 1, pg, Kh, Dh),
+                lambda b, j, c, bt, pos, lay: (bt[b, j], lay[0], 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, pg, Kh, Dh),
+                lambda b, j, c, bt, pos, lay: (bt[b, j], lay[0], 0, 0, 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, Dh), lambda b, j, c, bt, pos, lay: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, c, bt, pos, lay: (b, j)),
+            pl.BlockSpec((8,), lambda b, j, c, bt, pos, lay: (0,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H, Dh), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+        ],
+    )
+    out, slot_counts, counts = pl.pallas_call(
+        functools.partial(
+            _paged_kernel,
+            sm_scale=sm_scale,
+            policy=policy,
+            constant=constant,
+            pg=pg,
+            n_kv=Kh,
+            group=group,
+            nm=M,
+            out_dtype=q.dtype,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B, M), jnp.int32),
+            jax.ShapeDtypeStruct((8,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        consts,
+        jnp.asarray(block_tables, jnp.int32),
+        jnp.asarray(positions, jnp.int32),
+        jnp.asarray(layer, jnp.int32).reshape(1),
+        q, k_pages, v_pages,
+    )
+    return out, slot_counts, counts
+
+
+def paged_attention(
+    q: jax.Array,              # (B, H, Dh)
+    k_pages: jax.Array,        # (P, pg, Kh, Dh) or (P, L, pg, Kh, Dh)
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, M) int32
+    positions: jax.Array,      # (B,) int32, inclusive
+    *,
+    layer: int = 0,
+    **kw,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Convenience entry: accepts layer-free ``(P, pg, Kh, Dh)`` pools (the
+    single-layer tests/bench shape) and returns ``(out, page_counts,
+    counts)`` with ``page_counts`` already scatter-added to the pool's page
+    axis — the ``(n_pages,)`` per-page fatal vector."""
+    if k_pages.ndim == 4:
+        k_pages = k_pages[:, None]
+        v_pages = v_pages[:, None]
+    out, slot_counts, counts = paged_attention_raw(
+        q, k_pages, v_pages, block_tables, positions,
+        jnp.asarray(layer, jnp.int32), **kw,
+    )
+    page_counts = jnp.zeros((k_pages.shape[0],), jnp.int32).at[
+        jnp.asarray(block_tables, jnp.int32)
+    ].add(slot_counts)
+    return out, page_counts, counts

@@ -125,6 +125,97 @@ def repair_matmul_ref(
     return c, counts
 
 
+def _paged_masks(x, detector, include_inf):
+    """Fatal masks of one operand under the paged kernel's detector grammar:
+    a ``core.rules.Detector``, the "default" sentinel (legacy NaN(+Inf)),
+    or ``None`` — detection disabled."""
+    if detector is None:
+        z = jnp.zeros(x.shape, jnp.bool_)
+        return z, z
+    if isinstance(detector, str):          # the "default" sentinel
+        from ..core import rules as rules_lib
+
+        detector = rules_lib.Detector(nan=True, inf=include_inf)
+    return detector.masks(x)
+
+
+def paged_attention_ref(
+    q,                 # (B, H, Dh)
+    k_pages,           # (P, pg, Kh, Dh) or (P, L, pg, Kh, Dh)
+    v_pages,
+    block_tables,      # (B, M) int32
+    positions,         # (B,) int32, inclusive
+    *,
+    layer: int = 0,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    detector_k="default",
+    detector_v="default",
+):
+    """Oracle of kernels.paged_attention: gather the block-table pages (the
+    very copy the kernel avoids), repair each (page, layer) row as one tile
+    — the kernel's repair unit — then full-softmax decode attention over
+    the masked positions.  Returns ``(out (B,H,Dh), slot_counts (B,M))``
+    with bit-exact count semantics."""
+    if k_pages.ndim == 4:
+        k_pages = k_pages[:, None]
+        v_pages = v_pages[:, None]
+    B, H, Dh = q.shape
+    P, L, pg, Kh, _ = k_pages.shape
+    G = H // Kh
+    bt = jnp.asarray(block_tables, jnp.int32)
+    M = bt.shape[1]
+    pos = jnp.asarray(positions, jnp.int32)
+
+    def repair_rows(rows, detector):
+        # rows: (B, M, pg, Kh, Dh); one (b, m) page row == one kernel tile
+        nan_m, inf_m = _paged_masks(rows, detector, include_inf)
+        mask = nan_m | inf_m
+        if policy == "zero":
+            rep = jnp.zeros_like(rows)
+        elif policy == "constant":
+            rep = jnp.full_like(rows, constant)
+        elif policy == "clamp_finite_max":
+            rep = jnp.full_like(rows, jnp.finfo(rows.dtype).max)
+        elif policy == "neighbor_mean":
+            ok = (~mask).astype(jnp.float32)
+            cnt = jnp.maximum(ok.sum(axis=(2, 3, 4), keepdims=True), 1.0)
+            tot = jnp.where(mask, 0.0, rows.astype(jnp.float32)).sum(
+                axis=(2, 3, 4), keepdims=True
+            )
+            rep = jnp.broadcast_to(tot / cnt, rows.shape).astype(rows.dtype)
+        else:
+            raise ValueError(policy)
+        fixed = jnp.where(mask, rep, rows)
+        n_fatal = (nan_m | inf_m).astype(jnp.int32).sum(axis=(2, 3, 4))
+        return fixed, n_fatal                                  # (B, M)
+
+    k_rows = k_pages[bt, layer]                                # (B, M, pg, Kh, Dh)
+    v_rows = v_pages[bt, layer]
+    fk, cnt_k = repair_rows(k_rows, detector_k)
+    fv, cnt_v = repair_rows(v_rows, detector_v)
+    slot_counts = cnt_k + cnt_v
+
+    T = M * pg
+    fk = fk.reshape(B, T, Kh, Dh)
+    fv = fv.reshape(B, T, Kh, Dh)
+    qg = q.reshape(B, Kh, G, Dh).astype(jnp.float32)
+    s = jnp.einsum(
+        "bkgd,btkd->bkgt", qg, fk.astype(jnp.float32)
+    ) / math.sqrt(Dh)
+    t = jnp.arange(T)
+    s = jnp.where(t[None, None, None, :] <= pos[:, None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    # weights quantize to the cache dtype before the value contraction,
+    # like the gathered decode and the fused kernel
+    out = jnp.einsum(
+        "bkgt,btkd->bkgd", w.astype(fv.dtype), fv,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, H, Dh).astype(q.dtype), slot_counts
+
+
 def flash_attention_ref(
     q, k, v, *, causal=True, policy="zero", constant=0.0, include_inf=True,
     kv_block: Optional[int] = None,

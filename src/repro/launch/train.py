@@ -60,42 +60,68 @@ def make_optimizer(
     )
 
 
-def init_train_state(model: Model, opt: AdamW, key: jax.Array) -> Dict[str, Any]:
+def init_train_state(
+    model: Model, opt: AdamW, key: jax.Array,
+    space: Optional[ApproxSpace] = None,
+) -> Dict[str, Any]:
+    """The canonical train state.  With ``space`` it additionally carries a
+    ``"rule_counts"`` int32[n_rules, 3] block: the per-rule [nan, inf,
+    events] ledger the in-jit boundary scrub accumulates (rule vectors
+    cannot escape a trace — this threads them through the state instead;
+    ``train_loop`` folds them into ``space.rule_stats()``)."""
     params = model.init(key)
-    return {
+    state = {
         "params": params,
         "opt": opt.init(params),
         "stats": stats_lib.zeros(),
     }
+    if space is not None:
+        state["rule_counts"] = jnp.zeros(
+            (space.ruleset.n_rules, 3), jnp.int32
+        )
+    return state
 
 
-def abstract_train_state(model: Model, opt: AdamW) -> Dict[str, Any]:
+def abstract_train_state(
+    model: Model, opt: AdamW, space: Optional[ApproxSpace] = None
+) -> Dict[str, Any]:
     params = model.abstract_params()
-    return {
+    state = {
         "params": params,
         "opt": opt.abstract_state(params),
         "stats": {
             k: jax.ShapeDtypeStruct((), jnp.int32) for k in stats_lib.zeros()
         },
     }
+    if space is not None:
+        state["rule_counts"] = jax.ShapeDtypeStruct(
+            (space.ruleset.n_rules, 3), jnp.int32
+        )
+    return state
 
 
-def train_state_logical_axes(model: Model, opt: AdamW) -> Dict[str, Any]:
+def train_state_logical_axes(
+    model: Model, opt: AdamW, space: Optional[ApproxSpace] = None
+) -> Dict[str, Any]:
     axes = model.logical_axes()
-    return {
+    state = {
         "params": axes,
         "opt": opt.state_logical_axes(axes),
         "stats": {k: None for k in stats_lib.zeros()},
     }
+    if space is not None:
+        state["rule_counts"] = None          # replicated, like the stats
+    return state
 
 
 def train_state_shardings(
-    model: Model, opt: AdamW, mesh: Mesh, rules=None
+    model: Model, opt: AdamW, mesh: Mesh, rules=None,
+    space: Optional[ApproxSpace] = None,
 ) -> Dict[str, Any]:
     rules = rules or sh.rules_for_mesh(mesh)
     return sh.tree_shardings(
-        abstract_train_state(model, opt),
-        train_state_logical_axes(model, opt),
+        abstract_train_state(model, opt, space),
+        train_state_logical_axes(model, opt, space),
         mesh,
         rules,
     )
@@ -161,9 +187,12 @@ def build_train_step(
             loss = loss_sum / n_micro
             metrics = {"loss": loss}
 
-        # update
+        # update (extra state entries — e.g. the per-rule boundary-scrub
+        # ledger "rule_counts" — ride through untouched)
         new_params, new_opt, opt_metrics = opt.update(grads, opt_state, params)
-        new_state = {"params": new_params, "opt": new_opt, "stats": stats}
+        new_state = {
+            **state, "params": new_params, "opt": new_opt, "stats": stats,
+        }
         return new_state, {**metrics, **opt_metrics}
 
     return space.wrap_train_step(train_step)
@@ -267,12 +296,16 @@ def train_loop(
     """
     space = space or ApproxSpace(model.cfg.repair, ber=ber if ber > 0 else None)
     if state is None:
-        state = init_train_state(model, opt, key)
+        # the default state threads the per-rule boundary-scrub ledger
+        # (int32[n_rules, 3]) through the jitted step; folded into
+        # space.rule_stats() below
+        state = init_train_state(model, opt, key, space=space)
+    rc_space = space if "rule_counts" in state else None
     if mesh is not None:
         rules = rules or sh.rules_for_mesh(mesh)
         space.use_mesh(mesh, rules)
         state = jax.device_put(
-            state, train_state_shardings(model, opt, mesh, rules)
+            state, train_state_shardings(model, opt, mesh, rules, space=rc_space)
         )
         step_fn = jax.jit(
             build_train_step(model, opt, n_micro=n_micro, space=space),
@@ -295,7 +328,26 @@ def train_loop(
                  **stats_lib.as_dict(state["stats"])}
             )
         if checkpoint_manager and checkpoint_every and (i + 1) % checkpoint_every == 0:
+            # fold-and-zero BEFORE the save: checkpoints carry a zeroed
+            # block, so restoring one and resuming (same space or fresh)
+            # can never re-fold deltas the ledger already has.  The rule
+            # ledger is process-lifetime observability (like the space's
+            # scrubbed_bytes), not durable state — the cumulative Table-3
+            # stream stays in state["stats"] as before.
+            state = _fold_rule_counts(space, state)
             checkpoint_manager.save(i + 1, state)
     if checkpoint_manager:
         checkpoint_manager.wait()
+    # fold the tail since the last checkpoint (or the whole run) exactly
+    # once; the returned state's block is zeroed for the same reason
+    state = _fold_rule_counts(space, state)
     return state, history
+
+
+def _fold_rule_counts(space: ApproxSpace, state: Dict[str, Any]) -> Dict[str, Any]:
+    """Fold the state's in-jit per-rule boundary-scrub deltas into the
+    space's ledger and zero the block (no-op for states without one)."""
+    if "rule_counts" not in state:
+        return state
+    space.record_rule_counts(state["rule_counts"])
+    return {**state, "rule_counts": jnp.zeros_like(state["rule_counts"])}

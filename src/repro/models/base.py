@@ -78,6 +78,22 @@ class Model:
     # prefill path.  Recurrent decode cells consume strictly one token.
     supports_batched_prefill: bool = False
 
+    # Whether serve_step_paged exists: decode straight off the paged pool
+    # (block tables + fused on-read repair, README §Serving engine).
+    supports_paged_decode: bool = False
+
+    def serve_step_paged(
+        self, params, pool, batch, block_tables, positions, **repair_kw
+    ):
+        """One decode step over the page-major pool tree directly — no
+        gathered view.  ``pool`` has the ``paged_cache_defs`` treedef;
+        returns ``(logits, pool', slot_counts (B, M), counts int32[8])``
+        where ``slot_counts`` are the fused kernel's per-block-slot fatal
+        detections summed over layers (the reactive detector's input)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no paged decode path"
+        )
+
     def prefill(self, params, cache, batch, pos):
         """Single batched prefill: consume all S prompt tokens in one call,
         populating cache positions ``pos .. pos+S-1`` and returning the

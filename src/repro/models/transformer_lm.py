@@ -198,6 +198,64 @@ class TransformerLM(Model):
         h = self.final_norm(params["final_norm"], h)
         return self._readout(params, h), {"layers": new_cache}
 
+    # ---------------------------------------------------------- paged decode
+    supports_paged_decode: bool = True
+
+    def serve_step_paged(
+        self,
+        params,
+        pool,                    # {"layers": {"k","v"}}: (P, L, pg, K, Dh)
+        batch,                   # {"tokens": (B, 1)}
+        block_tables,            # (B, M) int32
+        positions,               # (B,) int32 write/last-context position
+        *,
+        detectors=None,          # {"k": Detector|None, "v": Detector|None}
+        policy: str = "zero",
+        constant: float = 0.0,
+    ):
+        """One decode step straight off the paged pool (no gathered view):
+        each layer writes its new K/V into one page slot per request and
+        attends via the Pallas paged-attention kernel over (pool leaves,
+        block tables, positions) with fused on-read repair.  The layer
+        index rides the scan carry and reaches the kernel as a
+        scalar-prefetch operand, so one compiled kernel serves every layer
+        and the HLO stays flat in depth."""
+        detectors = detectors or {}
+        h = self.embed(params["embed"], batch["tokens"])
+        B = h.shape[0]
+        M = block_tables.shape[1]
+
+        def body(carry, p_l):
+            h, kp, vp, slot_acc, cnt_acc, layer = carry
+            a, kp, vp, slot, cnt = self.attn.paged_decode(
+                p_l["attn"], self.norm1(p_l["norm1"], h), kp, vp,
+                block_tables, positions, layer,
+                detector_k=detectors.get("k"), detector_v=detectors.get("v"),
+                policy=policy, constant=constant,
+            )
+            h = h + a
+            y = self.mlp(p_l["mlp"], self.norm2(p_l["norm2"], h))
+            if isinstance(self.mlp, MoE):
+                y, _ = y
+            return (
+                h + y, kp, vp, slot_acc + slot, cnt_acc + cnt, layer + 1
+            ), None
+
+        carry0 = (
+            h,
+            pool["layers"]["k"],
+            pool["layers"]["v"],
+            jnp.zeros((B, M), jnp.int32),
+            jnp.zeros((8,), jnp.int32),
+            jnp.zeros((), jnp.int32),
+        )
+        (h, kp, vp, slot_counts, counts, _), _ = jax.lax.scan(
+            body, carry0, params["layers"]
+        )
+        h = self.final_norm(params["final_norm"], h)
+        logits = self._readout(params, h)
+        return logits, {"layers": {"k": kp, "v": vp}}, slot_counts, counts
+
     # ----------------------------------------------------------- input specs
     def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
         B, S = cell.global_batch, cell.seq_len

@@ -222,6 +222,64 @@ class Attention:
         out = self._out(p, ctx)
         return out, {"k": ck, "v": cv}
 
+    def paged_decode(
+        self,
+        p,
+        x: jax.Array,            # (B, 1, D) hidden — single decode token
+        k_pages: jax.Array,      # (P, L, pg, K, Dh) pool leaf, page-major
+        v_pages: jax.Array,
+        block_tables: jax.Array, # (B, M) int32, null-padded
+        positions: jax.Array,    # (B,) int32 write position == last valid pos
+        layer: jax.Array,        # int32 scalar — this block's L row
+        *,
+        detector_k=None,
+        detector_v=None,
+        policy: str = "zero",
+        constant: float = 0.0,
+        update_cache: bool = True,
+    ):
+        """Decode straight off the paged pool — no gathered view.
+
+        The new K/V land as ONE position-slot write per request
+        (``.at[page, layer, offset]`` — the surviving remnant of the old
+        full-view scatter), then the Pallas paged-attention kernel consumes
+        the pool leaves + block tables directly, repairing fatal KV lanes
+        in VMEM as it streams them (README §Serving engine).  Detector /
+        fill come from the pool leaves' assigned ``RepairRule`` (the engine
+        resolves them; ``None`` disables detection for that operand).
+
+        Returns ``(out (B,1,D), k_pages', v_pages', slot_counts (B,M),
+        counts int32[8])``.
+        """
+        from ..kernels import paged_attention as paged_kernel
+
+        B, S = x.shape[:2]
+        assert S == 1, "paged_decode consumes exactly one token per request"
+        q, k_new, v_new = self._qkv(p, x)
+        pos = jnp.asarray(positions, jnp.int32).reshape(B)
+        pos_arr = pos[:, None]                                # (B, 1)
+        q, k_new = self._rope(q, k_new, pos_arr, pos_arr)
+
+        if update_cache:
+            pg = k_pages.shape[2]
+            slot = jnp.arange(B)
+            page = jnp.asarray(block_tables, jnp.int32)[slot, pos // pg]
+            off = pos % pg
+            k_pages = k_pages.at[page, layer, off].set(
+                k_new[:, 0].astype(k_pages.dtype)
+            )
+            v_pages = v_pages.at[page, layer, off].set(
+                v_new[:, 0].astype(v_pages.dtype)
+            )
+
+        ctx, slot_counts, counts = paged_kernel.paged_attention_raw(
+            q[:, 0], k_pages, v_pages, block_tables, pos, layer,
+            policy=policy, constant=constant,
+            detector_k=detector_k, detector_v=detector_v,
+        )
+        out = self._out(p, ctx[:, None])                      # (B, 1, D)
+        return out, k_pages, v_pages, slot_counts, counts
+
     def decode_cross(self, p, x, cache, enc_len: Optional[int] = None):
         """Cross-attention decode against a precomputed encoder KV cache."""
         B = x.shape[0]

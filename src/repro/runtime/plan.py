@@ -23,6 +23,20 @@ shard-locally (no gather) with its counters reduced globally.
                 "sharded"    ≥1 leaf carries a multi-device NamedSharding;
                              the executable repairs each shard in place
                              under GSPMD and reduces counters globally
+                "kernel"     tree-scope scrubs lower through the Pallas
+                             kernels (``kernels/scrub.py`` per leaf; the
+                             ``scrub_sharded`` shard_map entry for
+                             multi-device leaves) — the in-place HBM path
+                             on real TPUs.  Selected when the backend is
+                             TPU (or ``REPRO_KERNEL_PLANS=1`` forces it,
+                             interpret-mode on CPU) AND every firing
+                             rule's fill maps bit-identically onto a
+                             kernel fill (``kernels.common.kernel_fill``)
+                             with an encodable detector; anything else
+                             keeps the jnp lowering — never a silent
+                             numeric drift.  Lane counters are
+                             bit-identical to the jnp path (events stay
+                             pass-level, computed from the lane totals).
 
 and owns the compiled executable for the pair.  Plans are cached on the
 space by ``(scope, treedef, avals, shardings)`` — one *trace* per state
@@ -39,6 +53,7 @@ stays logarithmic in the pool size instead of linear in faulted pages.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -49,7 +64,10 @@ from ..core import regions as regions_lib
 from ..core import stats as stats_lib
 from . import space as space_lib
 
-__all__ = ["RepairPlan", "plan_for", "serving_scope", "SCOPES"]
+__all__ = [
+    "RepairPlan", "plan_for", "serving_scope", "kernel_plans_enabled",
+    "SCOPES",
+]
 
 SCOPES = ("none", "tree", "pages", "reference", "inject")
 
@@ -80,6 +98,44 @@ def _placement(shardings: Tuple[Any, ...]) -> str:
     return "local"
 
 
+def kernel_plans_enabled() -> bool:
+    """Should tree-scope scrub plans lower through the Pallas kernels?
+
+    ``REPRO_KERNEL_PLANS=1`` forces it (CPU tests run the kernels in
+    interpret mode), ``=0`` forces it off; otherwise the kernels engage
+    exactly where they are native — a real TPU backend, where the scrub is
+    an in-place HBM pass instead of an XLA-fused copy."""
+    env = os.environ.get("REPRO_KERNEL_PLANS", "").strip().lower()
+    if env in ("1", "true", "yes"):
+        return True
+    if env in ("0", "false", "no"):
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _kernel_eligible(leaves, regions, rule_tree, trigger) -> bool:
+    """Every leaf this pass repairs must map onto the kernel path with
+    bit-identical semantics: a ``kernel_fill``-representable fill and a
+    detector that encodes into the int32[8] scalar operand.  Zero-size
+    leaves pass through (nothing to repair) and do not disqualify."""
+    from ..kernels import common as kernels_common
+
+    for leaf, region, rule in zip(
+        leaves, jax.tree.leaves(regions), jax.tree.leaves(rule_tree)
+    ):
+        if not space_lib._is_approx_float(leaf, region):
+            continue
+        if not rule.fires(trigger) or not getattr(leaf, "size", 0):
+            continue
+        if kernels_common.kernel_fill(rule.fill) is None:
+            return False
+        try:
+            rule.detect.constants(leaf.dtype)
+        except (TypeError, ValueError):
+            return False
+    return True
+
+
 def _bucket(n: int, cap: int) -> int:
     """Next power of two ≥ n, clamped to the page-axis size."""
     b = 1
@@ -106,7 +162,7 @@ class RepairPlan:
 
     space: Any                       # owning ApproxSpace
     scope: str                       # one of SCOPES
-    placement: str                   # "local" | "sharded"
+    placement: str                   # "local" | "sharded" | "kernel"
     treedef: Any
     regions: Any
     rule_tree: Any                   # per-leaf RepairRule assignment
@@ -117,6 +173,7 @@ class RepairPlan:
     page_row_bytes: int              # approx bytes of one page row (pages scope)
     page_capacity: int               # leading page-axis size (pages scope)
     ber: Optional[float] = None      # inject scope only (static per plan)
+    shardings: Tuple[Any, ...] = ()  # per-leaf shardings (kernel placement)
     _execs: Dict[Any, Callable] = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------------- run
@@ -189,7 +246,57 @@ class RepairPlan:
             # once per trace, never per call — asserted in tests.
             space.n_traces += 1
 
-        if kind == "tree":
+        if kind == "tree" and self.placement == "kernel":
+            # the Pallas lowering of the tree scrub: one in-place kernel per
+            # firing leaf (scrub_sharded for multi-device leaves), lane
+            # counts bit-identical to the jnp path, events pass-level
+            region_leaves = jax.tree.leaves(regions)
+            rule_leaves = jax.tree.leaves(rule_tree)
+            index_leaves = jax.tree.leaves(index_tree)
+            shardings = self.shardings
+            from ..kernels import common as kernels_common
+            from ..kernels.scrub import scrub as kernel_scrub
+            from ..kernels.scrub import scrub_sharded as kernel_scrub_sharded
+
+            def fn(leaves):
+                note()
+                nan_tot = jnp.zeros((), jnp.int32)
+                inf_tot = jnp.zeros((), jnp.int32)
+                rc = jnp.zeros((n_rules, 2), jnp.int32)
+                out = []
+                for leaf, region, rule, idx, sh in zip(
+                    leaves, region_leaves, rule_leaves, index_leaves,
+                    shardings,
+                ):
+                    if (
+                        not space_lib._is_approx_float(leaf, region)
+                        or not rule.fires(trigger)
+                        or not leaf.size
+                    ):
+                        out.append(leaf)
+                        continue
+                    policy, constant = kernels_common.kernel_fill(rule.fill)
+                    if sh is not None and getattr(sh, "num_devices", 1) > 1:
+                        fixed, counts = kernel_scrub_sharded(
+                            leaf, sh.mesh, sh.spec,
+                            policy=policy, constant=constant,
+                            detector=rule.detect,
+                        )
+                    else:
+                        fixed, counts = kernel_scrub(
+                            leaf, policy=policy, constant=constant,
+                            detector=rule.detect,
+                        )
+                    nan_tot = nan_tot + counts[0]
+                    inf_tot = inf_tot + counts[1]
+                    rc = rc.at[idx, 0].add(counts[0]).at[idx, 1].add(counts[1])
+                    out.append(fixed)
+                delta = stats_lib.record_repair(
+                    stats_lib.zeros(), nan_tot, inf_tot
+                )
+                return tuple(out), delta, space_lib._finish_rule_counts(rc)
+
+        elif kind == "tree":
 
             def fn(leaves):
                 note()
@@ -287,9 +394,10 @@ def plan_for(
     )
     shardings = tuple(_sharding_of(leaf) for leaf in leaves)
     extra = float(ber) if scope == "inject" else None
+    kernels_on = kernel_plans_enabled()
     key = (
         scope, trigger, treedef, avals, shardings, extra,
-        space._rules_digest,
+        space._rules_digest, kernels_on,
     )
 
     plan = space._plan_cache.get(key)
@@ -298,6 +406,13 @@ def plan_for(
 
     regions = space.regions_for(tree)
     rule_tree, index_tree = space.rules_for(tree)
+    placement = _placement(shardings)
+    if (
+        scope == "tree"
+        and kernels_on
+        and _kernel_eligible(leaves, regions, rule_tree, trigger)
+    ):
+        placement = "kernel"
     region_leaves = jax.tree.leaves(regions)
     rule_leaves = jax.tree.leaves(rule_tree)
     approx_bytes = 0
@@ -320,7 +435,7 @@ def plan_for(
     plan = RepairPlan(
         space=space,
         scope=scope,
-        placement=_placement(shardings),
+        placement=placement,
         treedef=treedef,
         regions=regions,
         rule_tree=rule_tree,
@@ -331,6 +446,7 @@ def plan_for(
         page_row_bytes=page_row_bytes,
         page_capacity=max(page_capacity, 1),
         ber=extra,
+        shardings=shardings,
     )
     space._plan_cache[key] = plan
     return plan

@@ -823,20 +823,43 @@ class ApproxSpace:
         increment per step, even when both a param and a moment lane were
         fatal (the pre-runtime code ran two scrub passes and could count
         two).  ``nan_found``/``inf_found`` lane totals are unchanged.
+
+        Per-rule counters (README §RepairRule): rule vectors cannot escape
+        a trace, so a state carrying a ``"rule_counts"`` entry (int32
+        [n_rules, 3], created by ``launch.train.init_train_state(...,
+        space=...)``) accumulates each boundary scrub's per-rule
+        [nan, inf, events] delta *in the jitted state* — ``train_loop``
+        folds it into ``space.rule_stats()`` host-side, closing the gap
+        where in-jit boundary scrubs fed only the aggregate stream.
         """
 
         def step(state, batch):
             if self.config.mode == "memory" and self.config.scrub.boundary:
                 resident = {"params": state["params"], "opt": state["opt"]}
-                resident, stats = self.scrub(
-                    resident, state["stats"], trigger="boundary"
-                )
-                state = {
-                    **state,
-                    "params": resident["params"],
-                    "opt": resident["opt"],
-                    "stats": stats,
-                }
+                if "rule_counts" in state:
+                    rule_tree, index_tree = self.rules_for(resident)
+                    resident, stats, rc = scrub_tree_rules(
+                        resident, self.config, state["stats"],
+                        self.regions_for(resident), rule_tree, index_tree,
+                        self.ruleset.n_rules, "boundary",
+                    )
+                    state = {
+                        **state,
+                        "params": resident["params"],
+                        "opt": resident["opt"],
+                        "stats": stats,
+                        "rule_counts": state["rule_counts"] + rc,
+                    }
+                else:
+                    resident, stats = self.scrub(
+                        resident, state["stats"], trigger="boundary"
+                    )
+                    state = {
+                        **state,
+                        "params": resident["params"],
+                        "opt": resident["opt"],
+                        "stats": stats,
+                    }
             return fn(state, batch)
 
         return step

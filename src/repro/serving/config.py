@@ -11,6 +11,7 @@ from __future__ import annotations
 import dataclasses
 
 _REPAIR_MODES = ("page", "whole", "off")
+_PAGED_DECODE = ("auto", "off")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +41,14 @@ class ServingConfig:
                              no step touches.  This is the demoted role of
                              the old whole-cache ``ScrubSchedule``.
       sweep_pages            pages repaired per background sweep tick
+      paged_decode           "auto" — decode straight off the pool through
+                                      the fused paged-attention kernel when
+                                      the model + pool rules allow it (zero
+                                      full-view copies; README §Serving
+                                      engine)
+                             "off"  — always use the gathered-view decode
+                                      (the PR-2 baseline; bench comparison
+                                      arm)
 
     Simulation:
       ber                    bit-error rate of one approximate-memory window
@@ -56,6 +65,7 @@ class ServingConfig:
     repair: str = "page"
     sweep_interval: int = 0
     sweep_pages: int = 4
+    paged_decode: str = "auto"
 
     ber: float = 0.0
     seed: int = 0
@@ -63,6 +73,8 @@ class ServingConfig:
     def __post_init__(self):
         if self.repair not in _REPAIR_MODES:
             raise ValueError(f"bad repair granularity {self.repair!r}")
+        if self.paged_decode not in _PAGED_DECODE:
+            raise ValueError(f"bad paged_decode mode {self.paged_decode!r}")
         if self.page_size < 1 or self.n_pages < 1:
             raise ValueError("page_size and n_pages must be >= 1")
         if self.max_pages_per_request > self.n_pages:

@@ -12,11 +12,24 @@ QoS) builds on:
 One engine step is: (1) one approximate-memory window strikes the resident
 pool (simulation boundary, ``ber > 0`` only); (2) admission + batched
 prefill of newly admitted requests (one ``Model.prefill`` call each — the
-whole prompt in one pass); (3) the reactive repair pass over exactly the
-pages this step will touch, then one jitted decode step over the static
-slot batch (per-request positions — requests at different depths share the
-executable); (4) the background sweep tick.  All repair/flip/kernel events
-land in the engine's unified stats stream.
+whole prompt in one pass); (3) one jitted decode step over the static slot
+batch (per-request positions — requests at different depths share the
+executable) plus the reactive repair pass; (4) the background sweep tick.
+All repair/flip/kernel events land in the engine's unified stats stream.
+
+Decode runs *straight off the pool* whenever the model and the pool rules
+allow it (``_paged_decode_plan``): the Pallas paged-attention kernel
+consumes the page-major pool leaves + block tables directly, repairing
+fatal KV lanes in VMEM as it streams them and emitting per-page fatal
+counts — the fused kernel IS the reactive detector, so decode issues zero
+full-view ``gather``/``scatter`` copies (the surviving write is one page
+slot per request for the newly produced K/V) and the reactive scrub runs
+*after* the step from the kernel's counts.  Ineligible configurations
+(register-mode model reads, non-constant fills, ``repair="off"``) keep the
+PR-2 gathered-view path with its probe-based pre-decode repair — token
+outputs are identical where both paths apply (bit-exact for f32 pools;
+bf16 pools quantize softmax weights before the online-softmax rescale, so
+parity there is value-approximate, token-level in practice).
 
 Static shapes: the decode batch is always ``(max_batch, 1)`` tokens over
 ``(max_batch, max_pages_per_request)`` block tables (empty slots run the
@@ -29,15 +42,19 @@ case of this engine.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import stats as stats_lib
-from ..launch.serve import build_serve_step, serve_space
-from ..runtime import ApproxSpace
+from ..core.regions import Region
+from ..kernels import common as kernels_common
+from ..launch.serve import build_serve_step
+from ..runtime import ApproxSpace, ScrubSchedule
+from ..runtime.plan import serving_scope
 from .config import ServingConfig
 from .pool import PagedKVPool
 from .repair import PageRepairManager
@@ -45,10 +62,95 @@ from .scheduler import Request, RequestState, Scheduler
 
 
 def engine_space(model: Any) -> ApproxSpace:
-    """The engine's default runtime: the serving space (memory-forced,
-    NaN/Inf-only, no boundary scrub — the page repair manager owns every
-    scrub), but private to this engine so stats streams stay isolated."""
-    return serve_space(model, scrub_every=0, memoize=False)
+    """The engine's default runtime: memory-forced, NaN/Inf-only, no
+    boundary scrub (the page repair manager owns every scrub), private to
+    this engine so stats streams stay isolated.
+
+    The default fill is ZERO (not the training default ``neighbor_mean``):
+    KV lanes have no cheap neighborhood statistic on the decode hot path,
+    zero is the paper's fix-to-a-predetermined-value choice, and a
+    value-independent fill is what lets the fused paged-attention kernel
+    apply the exact same repair in VMEM that the pool scrub applies in HBM
+    — the fused decode path stays bit-compatible with the gathered one.  A
+    model config carrying an explicit ``RuleSet`` keeps it (per-path rules
+    already say how cache leaves are protected; eligibility then decides
+    fused vs fallback)."""
+    return ApproxSpace(
+        model.cfg.repair,
+        mode="memory",
+        policy="zero",
+        max_magnitude=None,
+        scrub=ScrubSchedule(boundary=False, interval=0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paged-decode eligibility.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _PagedDecodePlan:
+    """Static repair spec the fused decode step is compiled against: one
+    detector per pool-leaf name (``None`` = detection off for that leaf)
+    plus the single kernel fill shared by every firing rule."""
+
+    detectors: Mapping[str, Any]
+    policy: str
+    constant: float
+
+
+def _paged_decode_plan(
+    model: Any, space: ApproxSpace, pool: PagedKVPool, cfg: ServingConfig
+) -> Optional[_PagedDecodePlan]:
+    """The fused-decode spec, or ``None`` when the configuration must keep
+    the gathered-view fallback: no paged decode path on the model,
+    ``repair="off"`` (the fused kernel always repairs what it reads — "no
+    repair" semantics need the plain path), register-mode model reads (the
+    in-kernel repair replaces ``use()``-site repair, not both), a fill the
+    kernel cannot reproduce bit-for-bit, or a detector that does not encode
+    into the scalar-prefetch constants (>32-bit dtypes)."""
+    if not getattr(model, "supports_paged_decode", False):
+        return None
+    if serving_scope(cfg.repair) == "none" or space.config.mode != "memory":
+        return None
+    if getattr(model.cfg.repair, "mode", "off") == "register":
+        return None
+    regions = space.regions_for(pool.tree)
+    rule_tree, _ = space.rules_for(pool.tree)
+    flat = jax.tree_util.tree_flatten_with_path(pool.tree)[0]
+    detectors: Dict[str, Any] = {}
+    fills = set()
+    for (path, leaf), region, rule in zip(
+        flat, jax.tree.leaves(regions), jax.tree.leaves(rule_tree)
+    ):
+        name = str(getattr(path[-1], "key", path[-1]))
+        is_float = hasattr(leaf, "dtype") and jnp.issubdtype(
+            leaf.dtype, jnp.floating
+        )
+        if (
+            not is_float
+            or region is not Region.APPROX
+            or not rule.fires("reactive")
+        ):
+            det = None          # probe-gate parity: this leaf is never probed
+        else:
+            fill = kernels_common.kernel_fill(rule.fill)
+            if fill is None:
+                return None
+            fills.add(fill)
+            try:
+                rule.detect.constants(leaf.dtype)
+            except (TypeError, ValueError):
+                return None
+            det = rule.detect
+        if name in detectors and detectors[name] != det:
+            return None         # one detector per leaf name (kernel operand)
+        detectors[name] = det
+    if len(fills) > 1:
+        return None             # the kernel applies ONE static fill per call
+    policy, constant = fills.pop() if fills else ("zero", 0.0)
+    return _PagedDecodePlan(detectors=detectors, policy=policy, constant=constant)
 
 
 class Engine:
@@ -97,6 +199,17 @@ class Engine:
         self._step_fn = jax.jit(
             self.space.wrap_serve_step(build_serve_step(model))
         )
+        # fused paged decode: compiled once against the pool rules' static
+        # repair spec; None keeps the gathered-view fallback
+        self.paged_plan = (
+            _paged_decode_plan(model, self.space, self.pool, self.cfg)
+            if self.cfg.paged_decode == "auto" else None
+        )
+        self._paged_fn = (
+            self._build_paged_step(self.paged_plan)
+            if self.paged_plan is not None else None
+        )
+        self.kernel_counts = np.zeros(8, np.int64)   # fused AT_* totals
         self._stream = stats_lib.zeros()
         self._requests: Dict[int, Request] = {}
         self.results: Dict[int, Dict[str, Any]] = {}
@@ -161,10 +274,10 @@ class Engine:
             if req.state is RequestState.RUNNING and self._maybe_finish(req):
                 finished.append(req.rid)
 
-        # (3) reactive repair over the touched pages, then one decode step.
-        # Reserving a page for one request may preempt another — both one
-        # that hasn't reserved yet (inner state check) and one that already
-        # did (final filter): victims never reach the decode batch.
+        # (3) one decode step + the reactive repair pass.  Reserving a page
+        # for one request may preempt another — both one that hasn't
+        # reserved yet (inner state check) and one that already did (final
+        # filter): victims never reach the decode batch.
         decodable = []
         for r in list(self.sched.running):
             if r.rid in prefilled or r.state is not RequestState.RUNNING:
@@ -178,8 +291,19 @@ class Engine:
                 | {p for r in decodable for p in r.pages}
             )
             self._last_touched = touched
-            self._stream = self.repair.repair_step(touched, self._stream)
-            self._decode(decodable, emitted)
+            if self._paged_fn is not None:
+                # fused path: the kernel repairs fatal lanes on read and IS
+                # the detector — decode first, then scrub the resident pool
+                # pages its per-page counts flagged (reactive write-back)
+                page_counts = self._decode_paged(decodable, emitted)
+                self._stream = self.repair.repair_counts(
+                    page_counts,
+                    set(touched) | {self.pool.null_page},
+                    self._stream,
+                )
+            else:
+                self._stream = self.repair.repair_step(touched, self._stream)
+                self._decode(decodable, emitted)
             for req in decodable:
                 if self._maybe_finish(req):
                     finished.append(req.rid)
@@ -208,6 +332,26 @@ class Engine:
         return self.results
 
     # -------------------------------------------------------------- internals
+    def _build_paged_step(self, spec: _PagedDecodePlan):
+        """The fused decode executable: model paged step + greedy readout +
+        per-page fatal counts scatter-added over the block tables.  The pool
+        tree is donated — the in-place write-back of the one resident."""
+        model, n_rows = self.model, self.cfg.n_pages + 1
+
+        def paged_step(params, pool_tree, batch, bt, pos, stats):
+            logits, pool_tree, slot_counts, counts = model.serve_step_paged(
+                params, pool_tree, batch, bt, pos,
+                detectors=spec.detectors, policy=spec.policy,
+                constant=spec.constant,
+            )
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            page_counts = jnp.zeros((n_rows,), jnp.int32).at[bt].add(
+                slot_counts
+            )
+            return nxt, pool_tree, page_counts, counts, stats
+
+        return jax.jit(paged_step, donate_argnums=(1,))
+
     def _reserve_next_page(self, req: Request) -> bool:
         """Point ``req.pos`` at this step's write position and make sure its
         block table covers it (growing/preempting under page pressure)."""
@@ -231,9 +375,10 @@ class Engine:
         req.tokens.append(tok)
         emitted.setdefault(req.rid, []).append(tok)
 
-    def _decode(
-        self, reqs: List[Request], emitted: Dict[int, List[int]]
-    ) -> None:
+    def _decode_batch(
+        self, reqs: List[Request]
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The static-shape decode batch: block tables, tokens, positions."""
         B, M = self.cfg.max_batch, self.cfg.max_pages_per_request
         bt = np.full((B, M), self.pool.null_page, np.int32)
         tokens = np.zeros((B, 1), np.int32)
@@ -242,18 +387,45 @@ class Engine:
             bt[req.slot] = self.pool.block_table(req.pages)
             tokens[req.slot, 0] = req.last_token
             pos[req.slot] = req.pos
-        view = self.pool.gather(bt)
-        nxt, _, view, self._stream = self._step_fn(
-            self.params, view, {"tokens": jnp.asarray(tokens)},
-            jnp.asarray(pos), self._stream,
-        )
-        self.pool.scatter(view, bt)
+        return bt, tokens, pos
+
+    def _emit(self, reqs, nxt, emitted) -> None:
         nxt = np.asarray(nxt)
         for req in reqs:
             tok = int(nxt[req.slot])
             req.tokens.append(tok)
             req.pos += 1
             emitted.setdefault(req.rid, []).append(tok)
+
+    def _decode(
+        self, reqs: List[Request], emitted: Dict[int, List[int]]
+    ) -> None:
+        """Gathered-view decode (the PR-2 fallback path)."""
+        bt, tokens, pos = self._decode_batch(reqs)
+        view = self.pool.gather(bt)
+        nxt, _, view, self._stream = self._step_fn(
+            self.params, view, {"tokens": jnp.asarray(tokens)},
+            jnp.asarray(pos), self._stream,
+        )
+        self.pool.scatter(view, bt)
+        self._emit(reqs, nxt, emitted)
+
+    def _decode_paged(
+        self, reqs: List[Request], emitted: Dict[int, List[int]]
+    ) -> np.ndarray:
+        """Fused decode straight off the pool: zero full-view copies.  The
+        donated pool tree is replaced in place; returns the kernel's
+        per-page fatal counts (the reactive detector's input)."""
+        bt, tokens, pos = self._decode_batch(reqs)
+        nxt, self.pool.tree, page_counts, counts, self._stream = (
+            self._paged_fn(
+                self.params, self.pool.tree, {"tokens": jnp.asarray(tokens)},
+                jnp.asarray(bt), jnp.asarray(pos), self._stream,
+            )
+        )
+        self.kernel_counts += np.asarray(counts, np.int64)
+        self._emit(reqs, nxt, emitted)
+        return np.asarray(page_counts)
 
     def _maybe_finish(self, req: Request) -> bool:
         if req.done or req.n_context >= self.cfg.max_seq:
@@ -296,5 +468,9 @@ class Engine:
             "scrubbed_bytes": self.pool.scrubbed_bytes,
             "scrub_calls": self.pool.scrub_calls,
             "scrubbed_bytes_per_token": self.pool.scrubbed_bytes / toks,
+            "paged_decode": self._paged_fn is not None,
+            "pool_gathers": self.pool.n_gathers,
+            "pool_scatters": self.pool.n_scatters,
+            "paged_kernel_events": int(self.kernel_counts[6]),  # AT_EV_TOTAL
             **self.repair.summary(),
         }

@@ -19,10 +19,12 @@ attention scores, but a NaN there would still poison the context through
 ``0 * NaN`` in the value contraction.
 
 Requests never see physical indices: the scheduler hands out block tables
-(request-order lists of page ids) and the engine gathers them into the
-contiguous per-step cache view the model consumes, scattering the view back
-afterwards.  (A paged attention kernel that skips the gather is the natural
-follow-up PR; the repair/scheduling semantics are identical.)
+(request-order lists of page ids).  On the decode hot path the engine feeds
+the pool leaves + block tables straight into the Pallas paged-attention
+kernel (``kernels/paged_attention.py`` — fused on-read repair, no copy);
+gather/scatter survive only for prefill and for non-paged-decode fallbacks,
+and are call-counted (``n_gathers`` / ``n_scatters``) so tests can assert
+the decode path issues zero full-view copies.
 """
 from __future__ import annotations
 
@@ -131,6 +133,10 @@ class PagedKVPool:
         self.page_scrubs = np.zeros(cfg.n_pages + 1, np.int64)
         self.scrubbed_bytes = 0
         self.scrub_calls = 0
+        # full-view copy ledger: the paged-decode acceptance criterion is
+        # that the decode hot path issues ZERO of these (prefill keeps them)
+        self.n_gathers = 0
+        self.n_scatters = 0
 
     # -------------------------------------------------------------- geometry
     @property
@@ -181,9 +187,11 @@ class PagedKVPool:
         return row
 
     def gather(self, block_tables: jax.Array) -> Any:
+        self.n_gathers += 1
         return _gather(self.tree, jnp.asarray(block_tables, jnp.int32))
 
     def scatter(self, view: Any, block_tables: jax.Array) -> None:
+        self.n_scatters += 1
         self.tree = _scatter(
             self.tree, view, jnp.asarray(block_tables, jnp.int32)
         )

@@ -4,12 +4,15 @@ The paper's thesis — repair only what faulted — applied at the pool's page
 granularity:
 
   reactive   every engine step knows exactly which pages it touched (the
-             scheduled requests' block tables + the null padding page).  A
-             cheap detection pass over those pages is the trap analogue;
-             only the pages that actually hold a fatal lane are scrubbed
-             (``repair="page"``).  The pre-engine baseline — scrub the whole
-             cache whenever anything faulted — is kept as ``repair="whole"``
-             for the bench comparison.
+             scheduled requests' block tables + the null padding page).
+             On the paged-decode path the *fused kernel* is the trap: it
+             emits per-page fatal counts as it streams the KV lanes, so
+             ``repair_counts`` scrubs exactly the pages that faulted with
+             no separate detection pass at all.  ``repair_step`` keeps the
+             probe-based detection (``pool.fatal_pages``) for prefill and
+             for the gathered-view fallback.  The pre-engine baseline —
+             scrub the whole cache whenever anything faulted — is kept as
+             ``repair="whole"`` for the bench comparison.
 
   routed     fused-kernel counter vectors (``kernels.ops`` ``MM_*``/``AT_*``
              layout) reported through ``note_kernel`` are folded into the
@@ -85,6 +88,45 @@ class PageRepairManager:
             return stats
         candidates = set(touched) | self._dirty | {self.pool.null_page}
         faulty = self.pool.fatal_pages(candidates)
+        return self._scrub_faulty(scope, faulty, stats)
+
+    def repair_counts(
+        self,
+        page_counts,
+        covered: Sequence[int],
+        stats: stats_lib.Stats,
+    ) -> stats_lib.Stats:
+        """Reactive repair driven by the fused paged-attention kernel's
+        per-page fatal counts — the decode-path replacement for the
+        ``pool.fatal_pages`` probe.  ``page_counts`` is the ``(n_pages+1,)``
+        vector the compiled decode step emitted; ``covered`` is the page set
+        the kernel actually streamed (the step's block tables, null page
+        included).  Dirty pages *outside* the kernel's coverage keep the
+        probe — their faults are invisible to this step's reads but were
+        reported by an earlier kernel, and the old path scrubbed them too.
+
+        One deliberate divergence from the probe: a fault landing exactly
+        in the slot this step's new K/V write overwrites is healed by the
+        write itself before the kernel reads — never consumed, never
+        resident afterwards, never counted.  The probe (which ran before
+        the write) counted it.  Repairing only what a read would consume
+        is the paper's thesis; the probe was strictly more conservative.
+        """
+        scope = serving_scope(self.cfg.repair)
+        if scope == "none":
+            return stats
+        counts = np.asarray(page_counts)
+        faulty = [int(p) for p in np.nonzero(counts > 0)[0]]
+        stale = self._dirty - set(covered)
+        if stale:
+            faulty = sorted(set(faulty) | set(self.pool.fatal_pages(stale)))
+        return self._scrub_faulty(scope, faulty, stats)
+
+    def _scrub_faulty(
+        self, scope: str, faulty: Sequence[int], stats: stats_lib.Stats
+    ) -> stats_lib.Stats:
+        """Shared tail of the probe- and kernel-driven reactive passes:
+        scrub faulty ∪ dirty, clear the dirty set, attribute events."""
         scrub_set = sorted(set(faulty) | self._dirty)
         self._dirty.clear()
         if not scrub_set:

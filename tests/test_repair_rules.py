@@ -402,3 +402,52 @@ def test_mixed_ruleset_end_to_end(tmp_path):
     )
     opt_label = mgr.space.ruleset.labels()[0]
     assert mgr.space.rule_stats()[opt_label]["nan_found"] >= 1
+
+
+def test_rule_counts_thread_through_jitted_boundary_scrub():
+    """ROADMAP leftover from PR 4: rule vectors cannot escape a trace, so
+    the train state carries an int32[n_rules, 3] block the in-jit boundary
+    scrub accumulates; train_loop folds it into space.rule_stats()."""
+    import dataclasses as _dc
+
+    from repro.configs import get_config
+    from repro.launch.train import init_train_state, make_optimizer, train_loop
+    from repro.models import build_model
+
+    cfg = _dc.replace(
+        get_config("qwen2-1.5b").reduced(),
+        n_layers=1, d_model=32, n_heads=2, n_kv=2, head_dim=16, d_ff=64,
+        vocab=31,
+    )
+    model = build_model(cfg)
+    rules = RuleSet(entries=(
+        (r"opt/", RepairRule(fill="zero", label="opt")),
+        (r".*", RepairRule(fill="zero", label="rest")),
+    ))
+    space = ApproxSpace(ApproxConfig(mode="memory", rules=rules))
+    opt = make_optimizer()
+    state = init_train_state(model, opt, jax.random.PRNGKey(0), space=space)
+    assert state["rule_counts"].shape == (3, 3)      # 2 rules + fallback
+
+    # poison one param lane and one optimizer-moment lane
+    state["params"]["embed"]["table"] = (
+        state["params"]["embed"]["table"].at[0, 0].set(jnp.nan)
+    )
+    opt_state = state["opt"]
+    mu = dict(opt_state.mu)
+    mu["embed"] = dict(
+        opt_state.mu["embed"],
+        table=opt_state.mu["embed"]["table"].at[1, 1].set(jnp.inf),
+    )
+    state["opt"] = opt_state._replace(mu=mu)
+
+    state, _ = train_loop(
+        model, opt, lambda i: {"tokens": jnp.ones((2, 8), jnp.int32)},
+        steps=2, key=jax.random.PRNGKey(1), state=state, space=space,
+    )
+    rs = space.rule_stats()
+    assert rs["rest"]["nan_found"] == 1 and rs["rest"]["events"] == 1
+    assert rs["opt"]["inf_found"] == 1 and rs["opt"]["events"] == 1
+    assert rs["opt"]["nan_found"] == 0
+    # folded exactly once: the state's block is zeroed after the fold
+    assert int(np.asarray(state["rule_counts"]).sum()) == 0
