@@ -1,0 +1,234 @@
+"""Prefix-cache bench: tokens/s, prefill-tokens-saved, and scrubbed-bytes/
+token with and without the repair-aware prefix cache, across prefix-share
+ratios.
+
+The cache's two claims (README §Serving engine):
+
+  1. *Sharing is free of error.*  At zero BER a cache-hit serve emits
+     tokens bit-identical to the no-cache baseline — suffix prefill over
+     shared pages reproduces the full-prefill stream exactly.
+  2. *Dwell-charged scrub-on-reuse pays only for risk.*  Under injected
+     BER the dwell gate (``ServingConfig.dwell_threshold``) scrubs a hit
+     page only when its expected-fault estimate since the last scrub
+     crosses the threshold, so scrubbed-bytes/token with the gate is no
+     more than the always-scrub-on-hit arm (``dwell_threshold=0``).
+
+Workload: ``N`` requests served as sequential waves (each wave completes
+before the next is queued, so later waves hit the residue the earlier
+ones left in the cache).  Every prompt shares its first
+``ratio * prompt_len`` tokens with the others; the rest is per-request
+random.  Ratios {0, 0.5, 0.9} span no-share → near-total-share.
+
+CSV: name,us_per_call,derived — us_per_call is us/token (wall-clock);
+derived carries prefill-tokens-saved, scrubbed-bytes/token, and the cache
+counters (hits / reuse_scrubs / reuse_skips / cow_forks).  Asserted every
+run: zero-BER cache arms match the no-cache token streams bit for bit at
+every ratio, and at BER > 0 the gated arm both exercises the gate in each
+direction (some skips, some scrubs) and comes in at or below the
+always-scrub arm on scrubbed-bytes/token.
+
+``main(out=...)`` merges a ``prefix_cache`` section into the shared bench
+record (``benchmarks/run.py --out BENCH_repair.json``), validated by
+``scripts/check_bench.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime import ApproxConfig
+from repro.serving import Engine, ServingConfig
+
+RATIOS = (0.0, 0.5, 0.9)
+SMOKE_RATIOS = (0.0, 0.9)
+
+# f32 lanes per KV page of the bench model: n_layers × (k + v) × page_size
+# × n_kv × head_dim — fixed here so the dwell threshold below can be
+# stated in expected faults without building a pool first
+_N_LAYERS, _N_KV, _HEAD_DIM, _PAGE_SIZE = 2, 2, 16, 4
+_PAGE_BYTES = _N_LAYERS * 2 * _PAGE_SIZE * _N_KV * _HEAD_DIM * 4
+
+# high enough that every page faults essentially every window (the probe
+# and decode scrub traffic is then identical across arms, so the bytes
+# comparison isolates the reuse-scrub policy itself)
+BER = 2e-4
+
+# gate at ~7 dwell steps (expected faults per page per step is
+# page_bits × BER).  In-use pages scrub reactively every step at this
+# BER, so dwell at reuse is set by the idle gap between waves: the BER
+# section alternates short and long gaps around the threshold so the
+# gate demonstrably skips cheap reuses AND scrubs long-dwelled ones
+DWELL_THRESHOLD = 6.5 * _PAGE_BYTES * 8 * BER
+IDLE_GAPS = (2, 9)
+
+
+def _model():
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(),
+        n_layers=_N_LAYERS, d_model=64, n_heads=4, n_kv=_N_KV,
+        head_dim=_HEAD_DIM, d_ff=128, vocab=97,
+        repair=ApproxConfig(mode="off"),   # the engine space owns repair
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompts(n: int, prompt_len: int, ratio: float) -> List[List[int]]:
+    shared_len = int(round(ratio * prompt_len))
+    shared = jax.random.randint(
+        jax.random.PRNGKey(1), (shared_len,), 1, 96
+    ).tolist()
+    out = []
+    for i in range(n):
+        suffix = jax.random.randint(
+            jax.random.PRNGKey(200 + i), (prompt_len - shared_len,), 1, 96
+        ).tolist()
+        out.append(shared + suffix)
+    return out
+
+
+def _serve(
+    model, params, cfg: ServingConfig, prompts: List[List[int]],
+    max_new: int, idle_gaps: Tuple[int, ...] = (),
+) -> Tuple[Dict[str, float], Dict[int, List[int]]]:
+    """Serve ``prompts`` as sequential waves; returns (row metrics, the
+    per-request token streams).  ``idle_gaps`` cycles per wave: idle
+    engine steps run after the wave, growing the cached pages' dwell (and
+    accumulating injected faults) before the next wave reuses them."""
+    engine = Engine(model, params, cfg)
+    tokens: Dict[int, List[int]] = {}
+    t0 = time.perf_counter()
+    for i, prompt in enumerate(prompts):
+        engine.add_request(prompt, max_new=max_new)
+        for rid, res in engine.run().items():
+            tokens[rid] = res["tokens"]
+        if idle_gaps:
+            for _ in range(idle_gaps[i % len(idle_gaps)]):
+                engine.step()
+    dt = time.perf_counter() - t0
+    assert len(tokens) == len(prompts)
+    m = engine.metrics()
+    c = engine.cache_stats()
+    row = {
+        "us_per_token": 1e6 * dt / max(m["tokens_emitted"], 1),
+        "tokens_emitted": m["tokens_emitted"],
+        "prefill_tokens_saved": m["prefill_tokens_saved"],
+        "scrubbed_bytes_per_token": m["scrubbed_bytes_per_token"],
+        "hits": c.get("hits", 0),
+        "hit_tokens": c.get("hit_tokens", 0),
+        "cow_forks": c.get("cow_forks", 0),
+        "reuse_scrubs": c.get("reuse_scrubs", 0),
+        "reuse_ref_repairs": c.get("reuse_ref_repairs", 0),
+        "reuse_skips": c.get("reuse_skips", 0),
+        "evictions": c.get("evictions", 0),
+    }
+    return row, tokens
+
+
+def run(smoke: bool = False):
+    model, params = _model()
+    n_requests, prompt_len, max_new = (4, 8, 3) if smoke else (8, 12, 4)
+    base = ServingConfig(
+        page_size=_PAGE_SIZE, n_pages=32, max_batch=4,
+        max_pages_per_request=5, repair="page", paged_decode="off",
+        sweep_interval=0, seed=7,
+    )
+    rows = []
+    row_metrics = {}
+
+    def record(name: str, row: Dict[str, float]) -> None:
+        row_metrics[name] = row
+        rows.append((
+            name,
+            row["us_per_token"],
+            f"saved={row['prefill_tokens_saved']};"
+            f"scrubbed_bytes_per_token={row['scrubbed_bytes_per_token']:.0f};"
+            f"hits={row['hits']};hit_tokens={row['hit_tokens']};"
+            f"cow={row['cow_forks']};reuse_scrubs={row['reuse_scrubs']};"
+            f"ref_repairs={row['reuse_ref_repairs']};"
+            f"skips={row['reuse_skips']}",
+        ))
+
+    # --- zero BER: the cache must be invisible in the token streams -------
+    for ratio in SMOKE_RATIOS if smoke else RATIOS:
+        prompts = _prompts(n_requests, prompt_len, ratio)
+        baseline, base_tokens = _serve(
+            model, params, base, prompts, max_new
+        )
+        record(f"share{ratio:g}_nocache", baseline)
+        cached, cache_tokens = _serve(
+            model, params,
+            dataclasses.replace(
+                base, prefix_cache=True, dwell_threshold=DWELL_THRESHOLD
+            ),
+            prompts, max_new,
+        )
+        record(f"share{ratio:g}_cached", cached)
+        assert cache_tokens == base_tokens, (
+            f"cache-hit serving drifted from the no-cache stream at "
+            f"ratio {ratio}"
+        )
+        if ratio >= 0.5:
+            assert cached["prefill_tokens_saved"] > 0, (
+                f"shared prefixes at ratio {ratio} produced no cache reuse"
+            )
+
+    # --- injected BER: the dwell gate must not out-scrub always-on --------
+    prompts = _prompts(n_requests, prompt_len, 0.9)
+    faulty = dataclasses.replace(base, ber=BER, prefix_cache=True)
+    always, _ = _serve(
+        model, params,
+        dataclasses.replace(faulty, dwell_threshold=0.0),
+        prompts, max_new, idle_gaps=IDLE_GAPS,
+    )
+    record("ber_always_scrub", always)
+    gated, _ = _serve(
+        model, params,
+        dataclasses.replace(faulty, dwell_threshold=DWELL_THRESHOLD),
+        prompts, max_new, idle_gaps=IDLE_GAPS,
+    )
+    record("ber_gated_scrub", gated)
+    n_always = always["reuse_scrubs"] + always["reuse_ref_repairs"]
+    n_gated = gated["reuse_scrubs"] + gated["reuse_ref_repairs"]
+    assert always["reuse_skips"] == 0 and n_always > 0, (
+        "dwell_threshold=0 must scrub every hit"
+    )
+    assert gated["reuse_skips"] > 0 and n_gated > 0, (
+        "the dwell gate should skip some reuses and scrub others on this "
+        "workload"
+    )
+    assert (
+        gated["scrubbed_bytes_per_token"]
+        <= always["scrubbed_bytes_per_token"]
+    ), "dwell-gated scrub-on-reuse must not scrub more bytes/token than " \
+       "always-scrub-on-hit"
+    return rows, row_metrics
+
+
+def main(smoke: bool = False, out: Optional[str] = None):
+    print("# prefix_cache: refcounted CoW prefix sharing over the KV pool;")
+    print("# us_per_call is us/token; zero-BER cache arms must match the")
+    print("# no-cache token streams; gated reuse-scrub must not exceed")
+    print("# always-scrub-on-hit on scrubbed-bytes/token")
+    print("name,us_per_call,derived")
+    rows, row_metrics = run(smoke=smoke)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if out:
+        from ._record import merge_record
+
+        merge_record(out, "prefix_cache", {
+            "rows": row_metrics,
+            "zero_ber_parity_ok": True,        # asserted above
+            "gated_vs_always_bytes_ok": True,  # asserted above
+        }, smoke=smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,8 @@ accepts a ``smoke`` kwarg shrink themselves; the rest are already tiny.
 
 ``--out FILE`` records the bench trajectory: sections whose ``main``
 accepts an ``out`` kwarg (``serving_engine``: tokens/s + bytes/token per
-arm; ``repair_pipeline``: eager-vs-compiled scrub/inject wall-time and
+arm; ``prefix_cache``: prefill-tokens-saved + gated-vs-always reuse-scrub
+bytes; ``repair_pipeline``: eager-vs-compiled scrub/inject wall-time and
 scrubbed-bytes/step on 1 and 8 fake devices) MERGE their JSON record there
 (benchmarks/_record.py) — the per-PR perf baseline.  The file is removed
 at the start of a run so a record never mixes two runs' sections.
@@ -30,6 +31,7 @@ from . import (
     energy_model,
     fig6_provenance,
     fig7_overhead,
+    prefix_cache,
     repair_pipeline,
     roofline,
     serving_engine,
@@ -43,6 +45,7 @@ SECTIONS = (
     ("energy_model (paper §2.1)", energy_model.main),
     ("roofline (assignment §Roofline)", roofline.main),
     ("serving_engine (README §Serving engine)", serving_engine.main),
+    ("prefix_cache (README §Serving engine)", prefix_cache.main),
     ("repair_pipeline (README §Distributed repair)", repair_pipeline.main),
 )
 

@@ -4,7 +4,8 @@ README §Distributed repair cites the repair-pipeline bench record (eager vs
 compiled scrub/inject wall-time and scrubbed-bytes/step on 1 and 8 fake
 devices, plus the trace count) and README §Serving engine cites the serving
 section (tokens/s + scrubbed-bytes/token per arm, the paged-kernel arm's
-zero-decode-copy counters).  If a refactor renames or drops any of those
+zero-decode-copy counters) and the prefix-cache section (prefill-tokens-
+saved per share ratio, gated vs always-scrub reuse bytes).  If a refactor renames or drops any of those
 keys the bench silently stops backing the README's claims — this check
 makes the bench step fail loudly instead.
 
@@ -34,6 +35,17 @@ SERVING_ROW_KEYS = (
     "pool_gathers",
     "pool_scatters",
     "events",
+)
+PREFIX_KEYS = ("rows", "zero_ber_parity_ok", "gated_vs_always_bytes_ok")
+PREFIX_ROW_KEYS = (
+    "us_per_token",
+    "tokens_emitted",
+    "prefill_tokens_saved",
+    "scrubbed_bytes_per_token",
+    "hits",
+    "reuse_scrubs",
+    "reuse_ref_repairs",
+    "reuse_skips",
 )
 
 
@@ -72,6 +84,24 @@ def check(path: str) -> int:
                 checked += 1
                 if key not in row:
                     missing.append(f"sections.serving.rows.{name}.{key}")
+    prefix = sections.get("prefix_cache")
+    if not isinstance(prefix, dict):
+        missing.append("sections.prefix_cache")
+    else:
+        for key in PREFIX_KEYS:
+            checked += 1
+            if key not in prefix:
+                missing.append(f"sections.prefix_cache.{key}")
+        rows = prefix.get("rows") or {}
+        checked += 1
+        # the gated-vs-always comparison arms must both be on record
+        if not ("ber_gated_scrub" in rows and "ber_always_scrub" in rows):
+            missing.append("sections.prefix_cache.rows.ber_{gated,always}_scrub")
+        for name, row in rows.items():
+            for key in PREFIX_ROW_KEYS:
+                checked += 1
+                if key not in row:
+                    missing.append(f"sections.prefix_cache.rows.{name}.{key}")
     if missing:
         print(f"{path}: missing keys the README quotes:", file=sys.stderr)
         for m in missing:

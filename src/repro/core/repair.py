@@ -136,6 +136,7 @@ def use(
     x: jax.Array,
     cfg: RepairConfig,
     stats: Optional[stats_lib.Stats] = None,
+    path: str = "",
 ):
     """Register-mode read: repair at the consumption site.
 
@@ -144,7 +145,9 @@ def use(
     scrubbed buffer, so per-use work would be pure overhead — exactly the
     paper's argument for the memory-repairing mechanism) — except for a
     bound *on-read* rule, whose leaves repair here and only here
-    (README §RepairRule).
+    (README §RepairRule).  ``path`` names the parameter being read: the
+    ruleset binds its exact per-path rule instead of the pathless read
+    rule, so an on-read rule scoped to one parameter fires only there.
 
     Returns ``repaired`` (stats is None) or ``(repaired, stats')``.
 
@@ -153,9 +156,9 @@ def use(
     from ..runtime import ApproxSpace  # deferred: runtime builds on us
 
     if stats is None:
-        fixed, _ = ApproxSpace(cfg).use(x, stats_lib.zeros())
+        fixed, _ = ApproxSpace(cfg).use(x, stats_lib.zeros(), path=path)
         return fixed
-    return ApproxSpace(cfg).use(x, stats)
+    return ApproxSpace(cfg).use(x, stats, path=path)
 
 
 # ---------------------------------------------------------------------------

@@ -42,7 +42,11 @@ KERNEL_POLICIES = ("zero", "constant", "neighbor_mean", "clamp_finite_max")
 # layout documented on ``core.rules.Detector.constants``):
 #
 #   0 exp_mask   1 man_mask   2 flags   3 range exp-field threshold (shifted)
-#   4 bitpattern mask   5 bitpattern value   6-7 pad
+#   4 bitpattern mask   5 bitpattern value
+#   6 count-valid row bound: when > 0, the scrub kernel masks folded-2D rows
+#     ≥ this bound out of its lane COUNTS (the rows are still repaired) —
+#     the page-scrub bucketing's padding-duplicate mask (``RepairPlan``)
+#   7 pad
 #
 # so swapping the detector (NaN-only vs +Inf vs range-guarded vs a custom
 # bit pattern) changes an operand, not the compiled kernel.
@@ -82,15 +86,20 @@ def resolve_detector(
 
 
 def detector_operand(
-    detector: rules_lib.Detector, dtype
+    detector: rules_lib.Detector, dtype, n_valid_rows=None
 ) -> jax.Array:
     """The int32[8] scalar-prefetch operand encoding ``detector`` for
-    ``dtype`` (see ``Detector.constants``)."""
+    ``dtype`` (see ``Detector.constants``).  ``n_valid_rows`` (traced or
+    int) rides in slot 6 — the count-valid row bound; ``None``/0 disables
+    the mask.  A traced bound stays a data change: same executable."""
     import numpy as np
 
     consts = detector.constants(dtype)
     # masks are bit patterns: fold into int32 range via two's complement
-    return jnp.asarray(np.asarray(consts, np.uint32).astype(np.int32))
+    base = jnp.asarray(np.asarray(consts, np.uint32).astype(np.int32))
+    if n_valid_rows is None:
+        return base
+    return base.at[6].set(jnp.asarray(n_valid_rows, jnp.int32))
 
 
 def masks_from_consts(
@@ -158,13 +167,17 @@ def repair_tile(
     constant: float = 0.0,
     include_inf: bool = True,
     consts: Optional[jax.Array] = None,
+    count_mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Repair a VMEM tile.  Returns (repaired, nan_count, inf_count) where the
     counts are int32 scalars for the event counters (Table 3 analogue).
 
     With ``consts`` (the detector-constants scalar operand) detection is
     data-driven — NaN/Inf/range/bit-pattern enables read from SMEM; the bare
-    ``include_inf`` form keeps the legacy static NaN(+Inf) pattern."""
+    ``include_inf`` form keeps the legacy static NaN(+Inf) pattern.
+    ``count_mask`` (bool, tile-shaped) restricts the COUNTS to its True
+    lanes — repair always covers the whole tile (padding-duplicate rows
+    must scatter identical repaired values to stay deterministic)."""
     bits = jax.lax.bitcast_convert_type(
         tile, detect.layout_of(tile.dtype).int_dtype
     )
@@ -174,6 +187,9 @@ def repair_tile(
         fixed = jnp.where(
             mask, repair_value(tile, mask, policy, constant), tile
         )
+        if count_mask is not None:
+            nan_m = nan_m & count_mask
+            inf_m = inf_m & count_mask
         return (
             fixed,
             jnp.sum(nan_m.astype(jnp.int32)),

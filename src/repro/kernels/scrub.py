@@ -47,8 +47,17 @@ def _scrub_kernel(
         counts_ref[...] = jnp.zeros_like(counts_ref)
 
     tile = x_ref[...]
+    # consts[6] > 0: count-valid row bound — rows ≥ bound (the page scrub's
+    # padding duplicates) are repaired like any other but masked out of the
+    # lane counts, so padded and unpadded calls report identical stats
+    n_valid = consts_ref[6]
+    row_ids = pl.program_id(0) * tile.shape[0] + jax.lax.broadcasted_iota(
+        jnp.int32, tile.shape, 0
+    )
+    count_mask = (n_valid == 0) | (row_ids < n_valid)
     fixed, n_nan, n_inf = common.repair_tile(
-        tile, policy=policy, constant=constant, consts=consts_ref[...]
+        tile, policy=policy, constant=constant, consts=consts_ref[...],
+        count_mask=count_mask,
     )
     out_ref[...] = fixed
     event = ((n_nan + n_inf) > 0).astype(jnp.int32)
@@ -79,6 +88,7 @@ def scrub(
     interpret: Optional[bool] = None,
     block: Optional[Tuple[int, int]] = None,
     detector=None,
+    n_valid_rows=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Repair all fatal lanes of ``x`` in place.  Returns (scrubbed, counts).
 
@@ -89,6 +99,12 @@ def scrub(
     are fatal; its constants enter the kernel as a scalar-prefetch operand
     (README §RepairRule).  Default: the legacy NaN(+Inf) pattern via
     ``include_inf``.
+
+    ``n_valid_rows`` (traced int32 or None) bounds the lane COUNTS to the
+    first that many folded-2D rows — every row is still repaired.  This is
+    how bucketed page scrubs (``scrub_pages``) keep padding duplicates out
+    of their stats; it rides the scalar-prefetch operand (slot 6), so a
+    changing bound never retraces.
     """
     if interpret is None:
         interpret = common.default_interpret()
@@ -126,7 +142,7 @@ def scrub(
         # scrubbed output: in-place in HBM, like the paper
         input_output_aliases={1: 0},
         interpret=interpret,
-    )(common.detector_operand(det, x2.dtype), x2)
+    )(common.detector_operand(det, x2.dtype, n_valid_rows), x2)
     return out.reshape(orig_shape), counts
 
 
@@ -202,6 +218,7 @@ def scrub_pages(
     interpret: Optional[bool] = None,
     block: Optional[Tuple[int, int]] = None,
     detector=None,
+    n_valid=None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Page-view scrub: repair only rows ``page_ids`` of ``x``'s leading
     (page) axis.  Gather the pages into one contiguous view, run the scrub
@@ -209,20 +226,30 @@ def scrub_pages(
     proportional to the *scrubbed* pages, not the whole buffer.
 
     This is the kernel-level counterpart of the serving engine's
-    page-granular repair.  The engine's pytree path
-    (``ApproxSpace.scrub_pages``) currently uses the jnp ``repair_tensor``
-    for policy parity with ``scrub_tree``; routing it through this kernel
-    (in-place HBM page writes on TPU) is the natural follow-up once the
-    engine runs fused kernels.
+    page-granular repair — ``RepairPlan`` lowers pages-scope scrubs through
+    it wherever the kernels are native (README §RepairPlan), with the same
+    bucketed id vector the jnp path uses: ``n_valid`` (traced int32 or
+    None) marks entries ``page_ids[n_valid:]`` as padding duplicates whose
+    lanes are repaired but masked out of the counts (they gather to the
+    trailing folded rows, so the bound lowers to ``scrub``'s
+    ``n_valid_rows`` rider — slot 6 of the scalar operand, never a
+    retrace).  1-D ``x`` cannot express a row bound (one page = part of one
+    folded row); callers needing masked counts there keep the jnp path.
 
     Returns ``(x', counts)`` with the same int32[3] counts as ``scrub``.
-    Duplicate page ids are idempotent (the repaired rows coincide), but
-    inflate the lane counts — pass unique ids when counts matter.
+    Without ``n_valid``, duplicate page ids are idempotent (the repaired
+    rows coincide) but inflate the lane counts — pass unique ids when
+    counts matter.
     """
     page_ids = jnp.asarray(page_ids, jnp.int32)
     rows = x[page_ids]
+    n_valid_rows = None
+    if n_valid is not None and rows.ndim >= 2:
+        rows_per_page = rows[0].size // rows.shape[-1]
+        n_valid_rows = jnp.asarray(n_valid, jnp.int32) * rows_per_page
     fixed, counts = scrub(
         rows, policy=policy, constant=constant, include_inf=include_inf,
         interpret=interpret, block=block, detector=detector,
+        n_valid_rows=n_valid_rows,
     )
     return x.at[page_ids].set(fixed), counts

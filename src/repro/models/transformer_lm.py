@@ -35,9 +35,18 @@ class TransformerLM(Model):
         super().__init__(cfg)
         rcfg = cfg.repair
         Norm = RMSNorm if cfg.norm == "rms" else LayerNorm
-        self.norm1 = Norm(cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
-        self.norm2 = Norm(cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
-        self.final_norm = Norm(cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+        # each block carries its rendered state-tree path prefix, so a
+        # use()-site read binds the same RuleSet rule the scheduled scrubs
+        # assign to that parameter (README §RepairRule, per-path on-read)
+        self.norm1 = Norm(
+            cfg.d_model, dtype=cfg.dtype, rcfg=rcfg, path="layers/norm1"
+        )
+        self.norm2 = Norm(
+            cfg.d_model, dtype=cfg.dtype, rcfg=rcfg, path="layers/norm2"
+        )
+        self.final_norm = Norm(
+            cfg.d_model, dtype=cfg.dtype, rcfg=rcfg, path="final_norm"
+        )
         self.attn = Attention(
             d_model=cfg.d_model,
             n_heads=cfg.n_heads,
@@ -50,6 +59,7 @@ class TransformerLM(Model):
             rcfg=rcfg,
             q_block=cfg.attn_q_block,
             kv_block=cfg.attn_kv_block,
+            path="layers/attn",
         )
         if cfg.n_experts:
             self.mlp: Any = MoE(
@@ -62,14 +72,22 @@ class TransformerLM(Model):
                 rcfg=rcfg,
             )
         elif cfg.mlp == "gelu":
-            self.mlp = GeluMLP(cfg.d_model, cfg.d_ff, dtype=cfg.dtype, rcfg=rcfg)
+            self.mlp = GeluMLP(
+                cfg.d_model, cfg.d_ff, dtype=cfg.dtype, rcfg=rcfg,
+                path="layers/mlp",
+            )
         else:
-            self.mlp = SwiGLU(cfg.d_model, cfg.d_ff, dtype=cfg.dtype, rcfg=rcfg)
-        self.embed = Embedding(cfg.vocab, cfg.d_model, dtype=cfg.dtype, rcfg=rcfg)
+            self.mlp = SwiGLU(
+                cfg.d_model, cfg.d_ff, dtype=cfg.dtype, rcfg=rcfg,
+                path="layers/mlp",
+            )
+        self.embed = Embedding(
+            cfg.vocab, cfg.d_model, dtype=cfg.dtype, rcfg=rcfg, path="embed"
+        )
         if not cfg.tie_embeddings:
             self.lm_head = Linear(
                 cfg.d_model, cfg.vocab, ("embed", "vocab"), dtype=cfg.dtype,
-                rcfg=rcfg,
+                rcfg=rcfg, path="lm_head",
             )
 
     # ------------------------------------------------------------------ defs

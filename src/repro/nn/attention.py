@@ -46,6 +46,9 @@ class Attention:
     causal: bool = True
     dtype: jnp.dtype = jnp.bfloat16
     rcfg: RepairConfig = RepairConfig(mode="off")
+    # parameter-path prefix for per-path on-read rules (README §RepairRule);
+    # "" keeps the pathless read-rule binding
+    path: str = ""
     q_block: int = 512
     kv_block: int = 1024
     # Repeat KV heads to full H inside full-sequence attention: standard TP
@@ -54,6 +57,9 @@ class Attention:
     # math; costs a G× widening of the K/V *activations* only (never the
     # cache).  Decode keeps the GQA form + seq-sharded cache instead.
     repeat_kv_for_tp: bool = True
+
+    def _path(self, name: str) -> str:
+        return f"{self.path}/{name}" if self.path else ""
 
     @property
     def groups(self) -> int:
@@ -82,16 +88,16 @@ class Attention:
         kv_x = x if kv_x is None else kv_x
         B, S, _ = x.shape
         T = kv_x.shape[1]
-        wq = use(p["wq"], self.rcfg)
-        wk = use(p["wk"], self.rcfg)
-        wv = use(p["wv"], self.rcfg)
+        wq = use(p["wq"], self.rcfg, path=self._path("wq"))
+        wk = use(p["wk"], self.rcfg, path=self._path("wk"))
+        wv = use(p["wv"], self.rcfg, path=self._path("wv"))
         q = jnp.einsum("bsd,dh->bsh", x, wq, preferred_element_type=jnp.float32)
         k = jnp.einsum("btd,dh->bth", kv_x, wk, preferred_element_type=jnp.float32)
         v = jnp.einsum("btd,dh->bth", kv_x, wv, preferred_element_type=jnp.float32)
         if self.qkv_bias:
-            q = q + use(p["bq"], self.rcfg).astype(q.dtype)
-            k = k + use(p["bk"], self.rcfg).astype(k.dtype)
-            v = v + use(p["bv"], self.rcfg).astype(v.dtype)
+            q = q + use(p["bq"], self.rcfg, path=self._path("bq")).astype(q.dtype)
+            k = k + use(p["bk"], self.rcfg, path=self._path("bk")).astype(k.dtype)
+            v = v + use(p["bv"], self.rcfg, path=self._path("bv")).astype(v.dtype)
         q = q.astype(self.dtype).reshape(B, S, self.n_heads, self.head_dim)
         k = k.astype(self.dtype).reshape(B, T, self.n_kv, self.head_dim)
         v = v.astype(self.dtype).reshape(B, T, self.n_kv, self.head_dim)
@@ -109,7 +115,7 @@ class Attention:
 
     def _out(self, p, ctx):
         B, S = ctx.shape[:2]
-        wo = use(p["wo"], self.rcfg)
+        wo = use(p["wo"], self.rcfg, path=self._path("wo"))
         ctx = ctx.reshape(B, S, self.n_heads * self.head_dim)
         return jnp.einsum(
             "bsh,hd->bsd", ctx, wo, preferred_element_type=jnp.float32
@@ -283,10 +289,10 @@ class Attention:
     def decode_cross(self, p, x, cache, enc_len: Optional[int] = None):
         """Cross-attention decode against a precomputed encoder KV cache."""
         B = x.shape[0]
-        wq = use(p["wq"], self.rcfg)
+        wq = use(p["wq"], self.rcfg, path=self._path("wq"))
         q = jnp.einsum("bsd,dh->bsh", x, wq, preferred_element_type=jnp.float32)
         if self.qkv_bias:
-            q = q + use(p["bq"], self.rcfg).astype(q.dtype)
+            q = q + use(p["bq"], self.rcfg, path=self._path("bq")).astype(q.dtype)
         q = q.astype(self.dtype).reshape(B, 1, self.n_heads, self.head_dim)
         ck = use(cache["k"], self.rcfg)
         cv = use(cache["v"], self.rcfg)

@@ -30,6 +30,10 @@ class Linear:
     dtype: jnp.dtype = jnp.bfloat16
     init: object = None
     rcfg: RepairConfig = RepairConfig(mode="off")
+    path: str = ""
+
+    def _path(self, name: str) -> str:
+        return f"{self.path}/{name}" if self.path else ""
 
     def defs(self):
         init = self.init or ini.fan_in()
@@ -41,12 +45,12 @@ class Linear:
         return d
 
     def __call__(self, p, x):
-        w = use(p["w"], self.rcfg)
+        w = use(p["w"], self.rcfg, path=self._path("w"))
         y = jnp.einsum(
             "...i,io->...o", x, w, preferred_element_type=jnp.float32
         ).astype(x.dtype)
         if self.bias:
-            y = y + use(p["b"], self.rcfg).astype(y.dtype)
+            y = y + use(p["b"], self.rcfg, path=self._path("b")).astype(y.dtype)
         return y
 
 
@@ -58,6 +62,10 @@ class Embedding:
     d_model: int
     dtype: jnp.dtype = jnp.bfloat16
     rcfg: RepairConfig = RepairConfig(mode="off")
+    path: str = ""
+
+    def _path(self, name: str) -> str:
+        return f"{self.path}/{name}" if self.path else ""
 
     def defs(self):
         return {
@@ -70,12 +78,12 @@ class Embedding:
         }
 
     def __call__(self, p, tokens):
-        table = use(p["table"], self.rcfg)
+        table = use(p["table"], self.rcfg, path=self._path("table"))
         return jnp.take(table, tokens, axis=0)
 
     def attend(self, p, x):
         """Tied readout: logits = x @ table.T  (f32 accumulation)."""
-        table = use(p["table"], self.rcfg)
+        table = use(p["table"], self.rcfg, path=self._path("table"))
         return jnp.einsum(
             "...d,vd->...v", x, table, preferred_element_type=jnp.float32
         )
@@ -87,12 +95,16 @@ class RMSNorm:
     eps: float = 1e-6
     dtype: jnp.dtype = jnp.bfloat16
     rcfg: RepairConfig = RepairConfig(mode="off")
+    path: str = ""
+
+    def _path(self, name: str) -> str:
+        return f"{self.path}/{name}" if self.path else ""
 
     def defs(self):
         return {"scale": ParamDef((self.d,), self.dtype, ini.ones, ("embed",))}
 
     def __call__(self, p, x):
-        scale = use(p["scale"], self.rcfg)
+        scale = use(p["scale"], self.rcfg, path=self._path("scale"))
         xf = x.astype(jnp.float32)
         var = jnp.mean(xf * xf, axis=-1, keepdims=True)
         y = xf * jax.lax.rsqrt(var + self.eps)
@@ -105,6 +117,10 @@ class LayerNorm:
     eps: float = 1e-5
     dtype: jnp.dtype = jnp.bfloat16
     rcfg: RepairConfig = RepairConfig(mode="off")
+    path: str = ""
+
+    def _path(self, name: str) -> str:
+        return f"{self.path}/{name}" if self.path else ""
 
     def defs(self):
         return {
@@ -113,8 +129,8 @@ class LayerNorm:
         }
 
     def __call__(self, p, x):
-        scale = use(p["scale"], self.rcfg)
-        bias = use(p["bias"], self.rcfg)
+        scale = use(p["scale"], self.rcfg, path=self._path("scale"))
+        bias = use(p["bias"], self.rcfg, path=self._path("bias"))
         xf = x.astype(jnp.float32)
         mu = jnp.mean(xf, axis=-1, keepdims=True)
         var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)

@@ -25,6 +25,12 @@ class SwiGLU:
     d_ff: int
     dtype: jnp.dtype = jnp.bfloat16
     rcfg: RepairConfig = RepairConfig(mode="off")
+    # parameter-path prefix for per-path on-read rules (README §RepairRule);
+    # "" keeps the pathless read-rule binding
+    path: str = ""
+
+    def _path(self, name: str) -> str:
+        return f"{self.path}/{name}" if self.path else ""
 
     def defs(self):
         lin = ini.fan_in()
@@ -37,16 +43,16 @@ class SwiGLU:
 
     def __call__(self, p, x):
         g = jnp.einsum(
-            "bsd,df->bsf", x, use(p["w_gate"], self.rcfg),
+            "bsd,df->bsf", x, use(p["w_gate"], self.rcfg, path=self._path("w_gate")),
             preferred_element_type=jnp.float32,
         )
         u = jnp.einsum(
-            "bsd,df->bsf", x, use(p["w_up"], self.rcfg),
+            "bsd,df->bsf", x, use(p["w_up"], self.rcfg, path=self._path("w_up")),
             preferred_element_type=jnp.float32,
         )
         h = constrain((jax.nn.silu(g) * u).astype(self.dtype), _HID)
         return jnp.einsum(
-            "bsf,fd->bsd", h, use(p["w_down"], self.rcfg),
+            "bsf,fd->bsd", h, use(p["w_down"], self.rcfg, path=self._path("w_down")),
             preferred_element_type=jnp.float32,
         ).astype(self.dtype)
 
@@ -58,6 +64,10 @@ class GeluMLP:
     bias: bool = True
     dtype: jnp.dtype = jnp.bfloat16
     rcfg: RepairConfig = RepairConfig(mode="off")
+    path: str = ""
+
+    def _path(self, name: str) -> str:
+        return f"{self.path}/{name}" if self.path else ""
 
     def defs(self):
         lin = ini.fan_in()
@@ -73,16 +83,16 @@ class GeluMLP:
 
     def __call__(self, p, x):
         h = jnp.einsum(
-            "bsd,df->bsf", x, use(p["w_up"], self.rcfg),
+            "bsd,df->bsf", x, use(p["w_up"], self.rcfg, path=self._path("w_up")),
             preferred_element_type=jnp.float32,
         )
         if self.bias:
-            h = h + use(p["b_up"], self.rcfg).astype(h.dtype)
+            h = h + use(p["b_up"], self.rcfg, path=self._path("b_up")).astype(h.dtype)
         h = constrain(jax.nn.gelu(h).astype(self.dtype), _HID)
         y = jnp.einsum(
-            "bsf,fd->bsd", h, use(p["w_down"], self.rcfg),
+            "bsf,fd->bsd", h, use(p["w_down"], self.rcfg, path=self._path("w_down")),
             preferred_element_type=jnp.float32,
         )
         if self.bias:
-            y = y + use(p["b_down"], self.rcfg).astype(y.dtype)
+            y = y + use(p["b_down"], self.rcfg, path=self._path("b_down")).astype(y.dtype)
         return y.astype(self.dtype)

@@ -129,6 +129,25 @@ class ApproxConfig:
     def resolved_ber(self) -> float:
         return self.ber if self.ber is not None else self.memory_model.ber
 
+    def expected_faults(
+        self, n_bytes: int, windows: float, ber: Optional[float] = None
+    ) -> float:
+        """Expected fatal-bit count accumulated by ``n_bytes`` of approximate
+        memory after dwelling ``windows`` refresh windows (the EDEN
+        refresh→BER relationship, charged over time).
+
+        The per-window BER is memoryless — each relaxed-refresh window flips
+        a bit with probability ``ber`` independently — so the expectation is
+        linear in dwell time: ``bits × ber × windows``.  This is what the
+        serving prefix cache charges against a page's *dwell clock* (steps
+        since its last scrub) to decide whether a cache hit must scrub
+        before the page is re-shared (README §Serving engine).  ``ber``
+        defaults to the config's refresh-model BER; pass the serving
+        engine's simulation BER to charge what the pool actually sees.
+        """
+        b = self.resolved_ber if ber is None else ber
+        return float(n_bytes) * 8.0 * float(b) * max(float(windows), 0.0)
+
     # ------------------------------------------------------------ conversion
     @staticmethod
     def from_legacy(cfg: Any, **overrides) -> "ApproxConfig":

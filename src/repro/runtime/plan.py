@@ -23,16 +23,20 @@ shard-locally (no gather) with its counters reduced globally.
                 "sharded"    ≥1 leaf carries a multi-device NamedSharding;
                              the executable repairs each shard in place
                              under GSPMD and reduces counters globally
-                "kernel"     tree-scope scrubs lower through the Pallas
-                             kernels (``kernels/scrub.py`` per leaf; the
-                             ``scrub_sharded`` shard_map entry for
-                             multi-device leaves) — the in-place HBM path
-                             on real TPUs.  Selected when the backend is
-                             TPU (or ``REPRO_KERNEL_PLANS=1`` forces it,
+                "kernel"     tree- and pages-scope scrubs lower through the
+                             Pallas kernels (``kernels/scrub.py`` per leaf;
+                             ``scrub_sharded`` for multi-device tree
+                             leaves; pages scope is local-placement only —
+                             the page gather has no shard_map entry) — the
+                             in-place HBM path on real TPUs.  Selected
+                             when the backend is TPU (or
+                             ``REPRO_KERNEL_PLANS=1`` forces it,
                              interpret-mode on CPU) AND every firing
                              rule's fill maps bit-identically onto a
                              kernel fill (``kernels.common.kernel_fill``)
-                             with an encodable detector; anything else
+                             with an encodable detector (pages scope also
+                             needs ndim ≥ 2 per repaired leaf for the
+                             padding-duplicate count mask); anything else
                              keeps the jnp lowering — never a silent
                              numeric drift.  Lane counters are
                              bit-identical to the jnp path (events stay
@@ -113,11 +117,14 @@ def kernel_plans_enabled() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _kernel_eligible(leaves, regions, rule_tree, trigger) -> bool:
+def _kernel_eligible(leaves, regions, rule_tree, trigger, scope="tree") -> bool:
     """Every leaf this pass repairs must map onto the kernel path with
     bit-identical semantics: a ``kernel_fill``-representable fill and a
     detector that encodes into the int32[8] scalar operand.  Zero-size
-    leaves pass through (nothing to repair) and do not disqualify."""
+    leaves pass through (nothing to repair) and do not disqualify.
+    Pages-scope passes additionally need ndim ≥ 2 on every repaired leaf:
+    the kernel's padding-duplicate count mask is a folded-2D *row* bound
+    (``scrub_pages`` ``n_valid``), which a 1-D page axis cannot express."""
     from ..kernels import common as kernels_common
 
     for leaf, region, rule in zip(
@@ -128,6 +135,8 @@ def _kernel_eligible(leaves, regions, rule_tree, trigger) -> bool:
         if not rule.fires(trigger) or not getattr(leaf, "size", 0):
             continue
         if kernels_common.kernel_fill(rule.fill) is None:
+            return False
+        if scope == "pages" and getattr(leaf, "ndim", 0) < 2:
             return False
         try:
             rule.detect.constants(leaf.dtype)
@@ -307,6 +316,48 @@ class RepairPlan:
                 )
                 return tuple(jax.tree_util.tree_flatten(out)[0]), delta, rc
 
+        elif kind == "pages" and self.placement == "kernel":
+            # the Pallas lowering of the page scrub: gather→kernel→scatter
+            # per firing leaf (kernels/scrub.scrub_pages), the bucketed id
+            # vector's padding duplicates masked out of the lane counts by
+            # the kernel's n_valid row bound — counts bit-identical to the
+            # jnp path, events pass-level
+            region_leaves = jax.tree.leaves(regions)
+            rule_leaves = jax.tree.leaves(rule_tree)
+            index_leaves = jax.tree.leaves(index_tree)
+            from ..kernels import common as kernels_common
+            from ..kernels.scrub import scrub_pages as kernel_scrub_pages
+
+            def fn(leaves, page_ids, n_valid):
+                note()
+                nan_tot = jnp.zeros((), jnp.int32)
+                inf_tot = jnp.zeros((), jnp.int32)
+                rc = jnp.zeros((n_rules, 2), jnp.int32)
+                out = []
+                for leaf, region, rule, idx in zip(
+                    leaves, region_leaves, rule_leaves, index_leaves
+                ):
+                    if (
+                        not space_lib._is_approx_float(leaf, region)
+                        or not rule.fires(trigger)
+                        or not leaf.size
+                    ):
+                        out.append(leaf)
+                        continue
+                    policy, constant = kernels_common.kernel_fill(rule.fill)
+                    fixed, counts = kernel_scrub_pages(
+                        leaf, page_ids, policy=policy, constant=constant,
+                        detector=rule.detect, n_valid=n_valid,
+                    )
+                    nan_tot = nan_tot + counts[0]
+                    inf_tot = inf_tot + counts[1]
+                    rc = rc.at[idx, 0].add(counts[0]).at[idx, 1].add(counts[1])
+                    out.append(fixed)
+                delta = stats_lib.record_repair(
+                    stats_lib.zeros(), nan_tot, inf_tot
+                )
+                return tuple(out), delta, space_lib._finish_rule_counts(rc)
+
         elif kind == "pages":
 
             def fn(leaves, page_ids, n_valid):
@@ -411,6 +462,13 @@ def plan_for(
         scope == "tree"
         and kernels_on
         and _kernel_eligible(leaves, regions, rule_tree, trigger)
+    ):
+        placement = "kernel"
+    elif (
+        scope == "pages"
+        and kernels_on
+        and placement == "local"   # no shard_map entry for the page gather
+        and _kernel_eligible(leaves, regions, rule_tree, trigger, scope)
     ):
         placement = "kernel"
     region_leaves = jax.tree.leaves(regions)

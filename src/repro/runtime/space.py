@@ -309,6 +309,7 @@ def use_tensor(
     x: jax.Array,
     cfg: Any,                       # ApproxConfig or legacy RepairConfig
     stats: stats_lib.Stats,
+    path: str = "",
 ) -> Tuple[jax.Array, stats_lib.Stats]:
     """Register-mode read (§3.3): repair at the consumption site.
 
@@ -319,13 +320,21 @@ def use_tensor(
     in memory mode too (its leaves are skipped by every scheduled scrub;
     use() is their only repair point).  Pure; safe under jit.
 
-    Use sites see single tensors with no tree path, so the ruleset's
-    *read rule* applies (the first on-read rule, else the first non-exact
-    rule — the one-rule legacy lift reproduces the scalar knobs exactly).
+    ``path`` names the parameter being read (nn layers annotate their
+    reads, e.g. ``"layers/attn/wq"``): the ruleset binds the EXACT rule
+    for that path (same first-match-wins patterns the scheduled scrubs
+    assign by), so an on-read rule scoped to one parameter fires only
+    there.  A pathless read keeps the ruleset's *read rule* (the first
+    on-read rule, else the first non-exact rule — the one-rule legacy
+    lift reproduces the scalar knobs exactly).  An exact-island match is
+    the identity: its leaves are never repaired, use-site included.
     """
     if cfg.mode == "off":
         return x, stats
-    rule = rules_lib.ruleset_of(cfg).read_rule()
+    ruleset = rules_lib.ruleset_of(cfg)
+    rule = ruleset.rule_for(path)[1] if path else ruleset.read_rule()
+    if rule.exact:
+        return x, stats
     if cfg.mode != "register" and rule.trigger != "on-read":
         return x, stats
     fixed, n, i = rule.apply(x)
@@ -601,17 +610,25 @@ class ApproxSpace:
         return regions_lib.count_bytes(tree, self.regions_for(tree))
 
     # ------------------------------------------------------------ mechanisms
-    def use(self, x: jax.Array, stats: Optional[stats_lib.Stats] = None):
+    def use(
+        self,
+        x: jax.Array,
+        stats: Optional[stats_lib.Stats] = None,
+        *,
+        path: str = "",
+    ):
         """Register-mode read (§3.3): repair at the consumption site.
 
         Identity outside register mode, unless an *on-read* rule is bound
-        (README §RepairRule — its leaves repair here and only here).  Pure
-        form with ``stats``; the convenience form records into
-        ``self.stats`` (host-side only).
+        (README §RepairRule — its leaves repair here and only here).
+        ``path`` binds the ruleset's exact per-path rule instead of the
+        pathless read rule (see ``use_tensor``).  Pure form with
+        ``stats``; the convenience form records into ``self.stats``
+        (host-side only).
         """
         if stats is not None:
-            return use_tensor(x, self.config, stats)
-        fixed, self.stats = use_tensor(x, self.config, self.stats)
+            return use_tensor(x, self.config, stats, path)
+        fixed, self.stats = use_tensor(x, self.config, self.stats, path)
         return fixed
 
     def scrub(

@@ -9,6 +9,8 @@ pool with page-granular reactive repair (README §Serving engine).
                     preemption under page pressure
   PageRepairManager reactive page-granular scrub + kernel-counter routing +
                     the demoted background sweep
+  PrefixCache       refcounted copy-on-write prefix sharing with dwell-time-
+                    charged scrub-on-reuse (README §Serving engine)
   Engine            the facade: add_request / step / run, unified stats
 
 The engine is the subsystem later scaling PRs (sharded pools, async decode,
@@ -18,13 +20,16 @@ its single-request degenerate case.
 from .config import ServingConfig  # noqa: F401
 from .engine import Engine, engine_space  # noqa: F401
 from .pool import PagedKVPool  # noqa: F401
+from .prefix_cache import CacheHit, PrefixCache  # noqa: F401
 from .repair import PageRepairManager  # noqa: F401
 from .scheduler import Request, RequestState, Scheduler  # noqa: F401
 
 __all__ = [
+    "CacheHit",
     "Engine",
     "PagedKVPool",
     "PageRepairManager",
+    "PrefixCache",
     "Request",
     "RequestState",
     "Scheduler",

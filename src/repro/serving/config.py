@@ -50,6 +50,23 @@ class ServingConfig:
                                       (the PR-2 baseline; bench comparison
                                       arm)
 
+    Prefix cache (README §Serving engine):
+      prefix_cache           share KV pages between requests with a common
+                             token prefix: admit matches the longest cached
+                             prefix, prefills only the suffix, and finished
+                             prefixes stay resident (refcounted, copy-on-
+                             write forks at page-interior divergence)
+      max_cached_pages       cap on pages the cache may keep referenced
+                             (0 = no cap beyond the pool itself); LRU
+                             eviction reclaims cache-only pages when the
+                             cap — or an allocation — demands it
+      dwell_threshold        expected-fault gate for scrub-on-reuse: a hit
+                             page is scrubbed before re-sharing only when
+                             ``ApproxConfig.expected_faults(page_bytes,
+                             dwell_steps, ber)`` reaches this value.  ≤ 0
+                             means scrub on EVERY hit (the always-scrub
+                             comparison arm in benchmarks/prefix_cache.py)
+
     Simulation:
       ber                    bit-error rate of one approximate-memory window
                              (applied to the pool between engine steps;
@@ -67,6 +84,10 @@ class ServingConfig:
     sweep_pages: int = 4
     paged_decode: str = "auto"
 
+    prefix_cache: bool = False
+    max_cached_pages: int = 0
+    dwell_threshold: float = 1.0
+
     ber: float = 0.0
     seed: int = 0
 
@@ -83,6 +104,11 @@ class ServingConfig:
             raise ValueError(
                 "max_pages_per_request must not exceed n_pages "
                 f"({self.max_pages_per_request} > {self.n_pages})"
+            )
+        if self.max_cached_pages < 0 or self.max_cached_pages > self.n_pages:
+            raise ValueError(
+                "max_cached_pages must lie in [0, n_pages] "
+                f"({self.max_cached_pages} vs {self.n_pages})"
             )
 
     @property

@@ -57,6 +57,7 @@ from ..runtime import ApproxSpace, ScrubSchedule
 from ..runtime.plan import serving_scope
 from .config import ServingConfig
 from .pool import PagedKVPool
+from .prefix_cache import PrefixCache
 from .repair import PageRepairManager
 from .scheduler import Request, RequestState, Scheduler
 
@@ -192,7 +193,11 @@ class Engine:
             params = jax.device_put(params, self.params_shardings)
         self.params = params
         self.pool = PagedKVPool(model, self.space, self.cfg)
-        self.sched = Scheduler(self.pool, self.cfg)
+        self.cache = (
+            PrefixCache(self.pool, self.space, self.cfg)
+            if self.cfg.prefix_cache else None
+        )
+        self.sched = Scheduler(self.pool, self.cfg, cache=self.cache)
         self.repair = PageRepairManager(self.pool, self.space, self.cfg)
         # the one greedy step builder (shared with launch.serve.generate, so
         # the engine-vs-generate token-parity contract cannot drift)
@@ -218,6 +223,7 @@ class Engine:
         self._inject_key = jax.random.PRNGKey(self.cfg.seed + 1)
         self._last_touched: List[int] = []
         self.tokens_emitted = 0
+        self.prefill_tokens_saved = 0
 
     # ------------------------------------------------------------------ admit
     def add_request(self, prompt: Sequence[int], max_new: int) -> int:
@@ -242,6 +248,7 @@ class Engine:
     def step(self) -> Dict[str, Any]:
         """One engine step; returns the tokens emitted and requests finished."""
         t = self._t
+        self.pool.now = t        # dwell clock: one step = one fault window
         emitted: Dict[int, List[int]] = {}
         finished: List[int] = []
         # kernel-counter routing targets the pages THIS step touches; stale
@@ -261,15 +268,36 @@ class Engine:
 
         # (2) admission + batched prefill (admitted pages are freshly zeroed,
         # but the null padding page rides along — one repair pass covers
-        # every admission before any prefill consumes its pages)
+        # every admission before any prefill consumes its pages).  Cache-hit
+        # shared pages are excluded from that probe: their admission policy
+        # IS scrub-on-reuse (the dwell gate only saves anything if a trusted
+        # page skips the read entirely; residual faults are the reactive
+        # pass's job, same as any other resident page)
         prefilled = set()
         admitted = self.sched.admit()
         if admitted:
             pages = sorted({p for r in admitted for p in r.pages})
-            self._stream = self.repair.repair_step(pages, self._stream)
+            shared = {
+                e.page
+                for r in admitted if r.cache_hit is not None
+                for e in r.cache_hit.full
+            } | {
+                r.cache_hit.partial.page
+                for r in admitted
+                if r.cache_hit is not None and r.cache_hit.partial is not None
+            }
+            fresh = sorted(set(pages) - shared)
+            if fresh:
+                self._stream = self.repair.repair_step(fresh, self._stream)
             self._last_touched = pages
         for req in admitted:
+            if self.cache is not None:
+                self._stream = self.cache.prepare_hit(req, self._stream)
             self._prefill(req, emitted)
+            if self.cache is not None:
+                # insert BEFORE finish: the cache's own references keep the
+                # prefix resident even when the request finishes right away
+                self.cache.insert(req)
             prefilled.add(req.rid)
             if req.state is RequestState.RUNNING and self._maybe_finish(req):
                 finished.append(req.rid)
@@ -359,18 +387,23 @@ class Engine:
         return self.sched.ensure_capacity(req)
 
     def _prefill(self, req: Request, emitted: Dict[int, List[int]]) -> None:
-        """One batched prefill: the whole (re-)prefill context in one
-        ``Model.prefill`` call over the request's gathered pages."""
+        """One batched prefill: the (re-)prefill context in one
+        ``Model.prefill`` call over the request's gathered pages.  A cache
+        hit prefills only the *suffix* — the matched prefix's KV is already
+        resident in the shared (and CoW-forked) pages, so the pass starts
+        at cache position ``req.cached_tokens``."""
         toks = req.prefill_tokens()
+        n_cached = req.cached_tokens
         bt = self.pool.block_table(req.pages)[None, :]
         view = self.pool.gather(bt)
-        tokens = jnp.asarray([toks], jnp.int32)
+        tokens = jnp.asarray([toks[n_cached:]], jnp.int32)
         nxt, _, view, self._stream = self._step_fn(
             self.params, view, {"tokens": tokens},
-            jnp.zeros((), jnp.int32), self._stream,
+            jnp.asarray(n_cached, jnp.int32), self._stream,
         )
         self.pool.scatter(view, bt)
         req.pos = len(toks)
+        self.prefill_tokens_saved += n_cached
         tok = int(np.asarray(nxt)[0])
         req.tokens.append(tok)
         emitted.setdefault(req.rid, []).append(tok)
@@ -460,10 +493,22 @@ class Engine:
         repair pass this engine ran."""
         return self.space.rule_stats()
 
+    def cache_stats(self) -> Dict[str, Any]:
+        """Prefix-cache observation counters (``{"enabled": False}`` when
+        the cache is off)."""
+        out: Dict[str, Any] = {
+            "enabled": self.cache is not None,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
+        }
+        if self.cache is not None:
+            out.update(self.cache.stats())
+        return out
+
     def metrics(self) -> Dict[str, Any]:
         toks = max(self.tokens_emitted, 1)
         return {
             "tokens_emitted": self.tokens_emitted,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
             "n_preemptions": self.sched.n_preemptions,
             "scrubbed_bytes": self.pool.scrubbed_bytes,
             "scrub_calls": self.pool.scrub_calls,

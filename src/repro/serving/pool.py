@@ -58,6 +58,40 @@ def _reset_pages(tree: Any, ids: jax.Array) -> Any:
 
 
 @jax.jit
+def _copy_page(tree: Any, src: jax.Array, dst: jax.Array) -> Any:
+    """Clone one physical page row into another (the copy-on-write fork of
+    the prefix cache — src stays shared, dst becomes the writer's private
+    copy).  src/dst are traced scalars: one executable per pool layout."""
+    return jax.tree.map(
+        lambda leaf: (
+            leaf.at[dst].set(leaf[src]) if _is_float(leaf) else leaf
+        ),
+        tree,
+    )
+
+
+@jax.jit
+def _page_view(tree: Any, page: jax.Array) -> Any:
+    """One page's rows as a leading-axis-1 tree (same key paths as the pool
+    tree, so region/rule classification carries over)."""
+    return jax.tree.map(
+        lambda leaf: leaf[page][None] if _is_float(leaf) else leaf, tree
+    )
+
+
+@jax.jit
+def _write_page(tree: Any, view: Any, page: jax.Array) -> Any:
+    """Write a leading-axis-1 page view back into its pool row."""
+    return jax.tree.map(
+        lambda leaf, v: (
+            leaf.at[page].set(v[0].astype(leaf.dtype))
+            if _is_float(leaf) else leaf
+        ),
+        tree, view,
+    )
+
+
+@jax.jit
 def _gather(tree: Any, block_tables: jax.Array) -> Any:
     """Pool pages -> contiguous per-request cache views.
 
@@ -127,6 +161,20 @@ class PagedKVPool:
             self.tree = jax.device_put(self.tree, self.shardings)
 
         self._free: collections.deque = collections.deque(range(cfg.n_pages))
+        # per-page reference counts: a page leaves the free list with one
+        # reference (its allocating request); ``share`` adds holders (other
+        # requests, the prefix cache); ``free`` releases one reference and
+        # the page returns to the free list only at zero — so preemption can
+        # never reclaim a page the cache (or another request) still shares.
+        # The null padding page is permanently resident (count pinned to 1).
+        self._refcount = np.zeros(cfg.n_pages + 1, np.int64)
+        self._refcount[self.null_page] = 1
+        # dwell clock (README §Serving engine): ``now`` is the engine's step
+        # counter (one step == one injection window); ``page_clean_step``
+        # timestamps each page's last scrub/zeroing.  now - clean_step is the
+        # dwell the prefix cache charges through ApproxConfig.expected_faults.
+        self.now = 0
+        self.page_clean_step = np.zeros(cfg.n_pages + 1, np.int64)
         # per-page attribution: repair events routed back from steps that
         # touched the page, and how often each page has been scrubbed
         self.page_events = np.zeros(cfg.n_pages + 1, np.int64)
@@ -167,15 +215,64 @@ class PagedKVPool:
             # physical pages are recycled memory: reset so a new request
             # never reads a previous tenant's (possibly flipped) lanes
             self.tree = _reset_pages(self.tree, jnp.asarray(pages, jnp.int32))
+            assert all(self._refcount[p] == 0 for p in pages), pages
+            self._refcount[pages] = 1
+            self.page_clean_step[pages] = self.now    # zeroed == scrubbed
         return pages
 
-    def free(self, pages: Sequence[int]) -> None:
+    def share(self, pages: Sequence[int]) -> None:
+        """Add one reference to each page (a new holder: another request
+        admitted onto a cached prefix, or the prefix cache itself)."""
         for p in pages:
-            assert 0 <= p < self.null_page, f"bad page id {p}"
-            self._free.append(p)
+            if not 0 <= p < self.null_page:
+                raise ValueError(f"bad page id {p}")
+            if self._refcount[p] <= 0:
+                raise RuntimeError(f"sharing free page {p}")
+            self._refcount[p] += 1
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Release one reference per page; a page returns to the free list
+        only when its last holder lets go.  Releasing a page with no live
+        reference is a hard error — before refcounts a double free silently
+        duplicated the free-list entry, handing the same physical page to
+        two requests."""
+        for p in pages:
+            if not 0 <= p < self.null_page:
+                raise ValueError(f"bad page id {p}")
+            if self._refcount[p] <= 0:
+                raise RuntimeError(
+                    f"double free of page {p} (no live reference)"
+                )
+            self._refcount[p] -= 1
+            if self._refcount[p] == 0:
+                self._free.append(p)
+
+    def refcount(self, page: int) -> int:
+        return int(self._refcount[page])
 
     def is_free(self, page: int) -> bool:
-        return page in self._free
+        return self._refcount[page] == 0
+
+    # ------------------------------------------------------------ dwell clock
+    def dwell(self, page: int) -> int:
+        """Injection windows (engine steps) since ``page`` was last known
+        clean — what the prefix cache charges to an expected-fault estimate
+        before re-sharing the page."""
+        return int(self.now - self.page_clean_step[page])
+
+    def mark_clean(self, pages: Sequence[int]) -> None:
+        self.page_clean_step[sorted(set(pages))] = self.now
+
+    def copy_page(self, src: int, dst: int) -> None:
+        """Device-copy page ``src``'s rows into ``dst`` (the prefix cache's
+        copy-on-write fork).  The clone inherits the source's dwell stamp —
+        its bits are exactly as old as the source's last scrub."""
+        self.tree = _copy_page(
+            self.tree,
+            jnp.asarray(src, jnp.int32),
+            jnp.asarray(dst, jnp.int32),
+        )
+        self.page_clean_step[dst] = self.page_clean_step[src]
 
     # --------------------------------------------------------- gather/scatter
     def block_table(self, pages: Sequence[int]) -> np.ndarray:
@@ -262,6 +359,7 @@ class PagedKVPool:
         self.page_scrubs[ids] += 1
         self.scrubbed_bytes += len(ids) * plan.page_row_bytes
         self.scrub_calls += 1
+        self.mark_clean(ids)
         return stats
 
     def scrub_all(
@@ -279,6 +377,7 @@ class PagedKVPool:
         self.page_scrubs += 1
         self.scrubbed_bytes += plan.bytes_per_run
         self.scrub_calls += 1
+        self.mark_clean(range(self.cfg.n_pages + 1))
         return stats
 
     def scrub_scope(
@@ -299,6 +398,36 @@ class PagedKVPool:
         if scope == "tree":
             return self.scrub_all(stats, trigger=trigger)
         assert scope == "none", f"bad plan scope {scope!r}"
+        return stats
+
+    def snapshot_page(self, page: int) -> Any:
+        """Host (numpy) copy of one page's rows — the prefix cache's
+        checkpointed-prefix reference for scrub-on-reuse."""
+        return jax.device_get(
+            _page_view(self.tree, jnp.asarray(page, jnp.int32))
+        )
+
+    def reference_repair_page(
+        self, page: int, snapshot: Any, stats: stats_lib.Stats
+    ) -> stats_lib.Stats:
+        """Repair one page against its host snapshot (``last_checkpoint``
+        at page granularity): fatal lanes are restored to the exact bits the
+        prefix held when it was cached, not a fill value — the strongest
+        repair available, and only a cached prefix has the reference to pay
+        for it.  Byte accounting matches ``scrub_pages`` (the reference
+        plan's per-run bytes are exactly one page row's rule-gated bytes)."""
+        idx = jnp.asarray(page, jnp.int32)
+        view = _page_view(self.tree, idx)
+        plan = self.space.plan_for(view, scope="reference")
+        if plan.bytes_per_run == 0:
+            return stats
+        ref = jax.tree.map(jnp.asarray, snapshot)
+        view, stats = self.space.scrub_with_reference(view, ref, stats)
+        self.tree = _write_page(self.tree, view, idx)
+        self.page_scrubs[page] += 1
+        self.scrubbed_bytes += plan.bytes_per_run
+        self.scrub_calls += 1
+        self.mark_clean([page])
         return stats
 
     def attribute(self, page_ids: Sequence[int], n_events: int) -> None:

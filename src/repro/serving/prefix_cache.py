@@ -1,0 +1,341 @@
+"""Repair-aware prefix cache: refcounted copy-on-write KV pages with
+dwell-time-charged scrub-on-reuse.
+
+Serving workloads share long prompt prefixes (system prompts, few-shot
+preambles), and the pool is already page-granular — so finished prefixes
+stay *resident*: a hash-of-token-prefix → page index lets a new request
+admit onto the longest cached prefix and prefill only its suffix
+(vLLM/SGLang-style sharing, flattened: one dict entry per page instead of a
+radix tree — exact token tuples are the hash keys, so there are no
+collisions to resolve).
+
+The approximate-memory twist is the cache's admission policy.  A cached
+page *dwells* under relaxed refresh: every engine step is one injection
+window, so its accumulated fault expectation grows linearly with age
+(EDEN's refresh→BER relationship, ``ApproxConfig.expected_faults``).  The
+pool timestamps each page's last scrub (``PagedKVPool.dwell``); on a cache
+hit, scrub-on-reuse runs **only** for pages whose dwell-charged estimate
+crosses ``ServingConfig.dwell_threshold`` — the paper's reactive thesis
+(repair what is about to be read, when the risk warrants it) turned into a
+reuse gate.  The repair itself is the strongest available:
+
+  * full-page entries carry a host **snapshot** of the prefix KV taken at
+    insert time (the checkpointed prefix) — scrub-on-reuse restores fatal
+    lanes to their exact original bits (``reference_repair_page``);
+  * partial tail pages keep changing after insert (their owner still
+    appends rows), so they have no stable snapshot — detector-scrub
+    (``scrub_pages``) repairs them with the rule's fill instead.
+
+Sharing discipline (all host-side bookkeeping; device work is the engine's):
+
+  refcounts   every cached page holds one pool reference from the cache
+              itself, plus one per running request sharing it.  Preemption
+              and finish release the request's reference only — a shared
+              page can never be reclaimed out from under the cache
+              (``PagedKVPool.free`` returns pages to the free list at
+              refcount zero, and double-release is a hard error).
+  CoW forks   a request diverging *inside* a cached partial page never
+              writes the shared copy: ``prepare_hit`` clones the source
+              page into the request's first private page and the suffix
+              prefill overwrites the clone from the divergence point on.
+              Full-page entries need no clone — a sharer's writes always
+              land at positions past its cached prefix, i.e. in its own
+              private pages.
+  LRU         eviction (allocation pressure or ``max_cached_pages``)
+              reclaims only *leaf* entries no request references
+              (``n_children == 0`` and pool refcount 1): interior chain
+              pages stay until their extensions go first, so a cached
+              prefix is always a contiguous page run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..core import stats as stats_lib
+from ..runtime import ApproxSpace
+from .config import ServingConfig
+from .pool import PagedKVPool
+
+__all__ = ["PrefixCache", "CacheHit"]
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One cached page: the KV of one page-worth (or tail-fraction) of a
+    token prefix.  ``key`` is the exact token tuple whose KV the page's
+    valid rows hold; ``parent`` is the one-page-shorter chain predecessor."""
+
+    key: Tuple[int, ...]
+    page: int
+    n_tokens: int
+    partial: bool
+    snapshot: Any                      # host page copy (full entries only)
+    parent: Optional[Tuple[int, ...]]
+    n_children: int = 0
+    last_used: int = 0
+    hits: int = 0
+
+
+@dataclasses.dataclass
+class CacheHit:
+    """A lookup match: ``full`` is the chain of whole-page entries, then
+    optionally one ``partial`` tail entry extending it inside a page.
+    ``n_tokens`` counts every matched token (full pages + partial rows)."""
+
+    n_tokens: int
+    full: Tuple[_Entry, ...]
+    partial: Optional[_Entry]
+
+
+class PrefixCache:
+    """Hash-of-token-prefix → page-run index over one ``PagedKVPool``."""
+
+    def __init__(
+        self, pool: PagedKVPool, space: ApproxSpace, cfg: ServingConfig
+    ):
+        self.pool = pool
+        self.space = space
+        self.cfg = cfg
+        self._entries: Dict[Tuple[int, ...], _Entry] = {}
+        self._clock = 0
+        # observation counters (Engine.cache_stats)
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.inserts = 0
+        self.evictions = 0
+        self.cow_forks = 0
+        self.reuse_scrubs = 0          # detector scrub-on-reuse passes
+        self.reuse_ref_repairs = 0     # snapshot reference repairs
+        self.reuse_skips = 0           # hits below the dwell threshold
+
+    # ------------------------------------------------------------------ state
+    @property
+    def cached_pages(self) -> int:
+        return len(self._entries)
+
+    def _touch(self, e: _Entry) -> None:
+        self._clock += 1
+        e.last_used = self._clock
+
+    # ----------------------------------------------------------------- lookup
+    def lookup(self, tokens: List[int]) -> Optional[CacheHit]:
+        """The longest cached prefix of ``tokens``, capped at
+        ``len(tokens) - 1`` — at least one token must remain for the suffix
+        prefill to consume (its logits produce the next token)."""
+        toks = tuple(int(t) for t in tokens)
+        cap = len(toks) - 1
+        pg = self.cfg.page_size
+        full: List[_Entry] = []
+        k = 1
+        while k * pg <= cap:
+            e = self._entries.get(toks[: k * pg])
+            if e is None or e.partial:
+                break
+            full.append(e)
+            k += 1
+        # bounded tail probe: the longest partial entry extending the chain
+        # inside the next page (≤ page_size - 1 dict probes)
+        partial = None
+        lo = len(full) * pg
+        for n in range(min(cap, lo + pg - 1), lo, -1):
+            e = self._entries.get(toks[:n])
+            if e is not None and e.partial:
+                partial = e
+                break
+        if not full and partial is None:
+            return None
+        for e in full:
+            self._touch(e)
+            e.hits += 1
+        if partial is not None:
+            self._touch(partial)
+            partial.hits += 1
+        n_tokens = partial.n_tokens if partial is not None else lo
+        return CacheHit(n_tokens=n_tokens, full=tuple(full), partial=partial)
+
+    def note_admit(self, hit: Optional[CacheHit]) -> None:
+        """Count one successful admission against the hit/miss ledger (the
+        scheduler calls this only when the request actually got its pages,
+        so a full pool cannot inflate the miss rate)."""
+        if hit is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+            self.hit_tokens += hit.n_tokens
+
+    # ------------------------------------------------------- scrub-on-reuse
+    def _reuse_scrub(
+        self, e: _Entry, stats: stats_lib.Stats
+    ) -> stats_lib.Stats:
+        """Dwell-gated scrub-on-reuse of one hit page: charge the page's
+        dwell (steps since last scrub) to an expected-fault estimate; only
+        a crossing estimate pays for repair before the page is re-read.
+        ``dwell_threshold <= 0`` scrubs every hit (the always-scrub
+        comparison arm)."""
+        dwell = self.pool.dwell(e.page)
+        est = self.space.config.expected_faults(
+            self.pool.page_bytes, dwell, ber=self.cfg.ber
+        )
+        if self.cfg.dwell_threshold > 0 and est < self.cfg.dwell_threshold:
+            self.reuse_skips += 1
+            return stats
+        if e.snapshot is not None:
+            self.reuse_ref_repairs += 1
+            return self.pool.reference_repair_page(e.page, e.snapshot, stats)
+        self.reuse_scrubs += 1
+        return self.pool.scrub_pages([e.page], stats, trigger="reactive")
+
+    def prepare_hit(self, req: Any, stats: stats_lib.Stats) -> stats_lib.Stats:
+        """Device work for one admitted cache hit, before its suffix
+        prefill: scrub-on-reuse over the matched pages, then the
+        copy-on-write fork of a partial tail (scrub the *source* first so
+        the clone inherits clean bits and a fresh dwell stamp; the clone's
+        rows past the match are overwritten by the suffix prefill).  Must
+        run in the same engine phase as admission — the admit-time
+        reference on the partial source is released here."""
+        hit = req.cache_hit
+        req.cache_hit = None
+        if hit is None:
+            return stats
+        for e in hit.full:
+            stats = self._reuse_scrub(e, stats)
+        if hit.partial is not None:
+            stats = self._reuse_scrub(hit.partial, stats)
+            dst = req.pages[len(hit.full)]
+            self.pool.copy_page(hit.partial.page, dst)
+            self.cow_forks += 1
+            self.pool.free([hit.partial.page])   # admit-time clone guard
+        return stats
+
+    # ----------------------------------------------------------------- insert
+    def insert(self, req: Any) -> None:
+        """Cache the request's just-prefilled prefix: one entry per fully
+        written page (with a host snapshot — the checkpointed prefix for
+        reference repair) plus one partial entry for a tail fraction.
+        Existing entries are touched, not replaced (two same-prefix
+        requests admitted in one batch race to insert; first wins).  The
+        cache takes one pool reference per new entry.
+
+        Only RESIDENT positions are cacheable: the prefill emitted one new
+        token whose KV is written at the next decode step, so the key base
+        stops at ``req.pos`` (the prefill context) — an entry must never
+        promise a row the pool does not hold yet."""
+        toks = tuple(int(t) for t in req.prefill_tokens())[: req.pos]
+        if not toks:
+            return
+        pg = self.cfg.page_size
+        n_full = len(toks) // pg
+        protect = {toks[: k * pg] for k in range(1, n_full + 1)} | {toks}
+        parent: Optional[_Entry] = None
+        for k in range(1, n_full + 1):
+            key = toks[: k * pg]
+            e = self._entries.get(key)
+            if e is None:
+                e = self._insert_one(
+                    key, req.pages[k - 1], k * pg, False, parent, protect
+                )
+                if e is None:
+                    return
+            else:
+                self._touch(e)
+            parent = e
+        rem = len(toks) - n_full * pg
+        if rem:
+            e = self._entries.get(toks)
+            if e is not None:
+                self._touch(e)
+            else:
+                self._insert_one(
+                    toks, req.pages[n_full], len(toks), True, parent, protect
+                )
+
+    def _insert_one(
+        self,
+        key: Tuple[int, ...],
+        page: int,
+        n_tokens: int,
+        partial: bool,
+        parent: Optional[_Entry],
+        protect: set,
+    ) -> Optional[_Entry]:
+        if not self._make_room(protect):
+            return None
+        self.pool.share([page])
+        e = _Entry(
+            key=key,
+            page=page,
+            n_tokens=n_tokens,
+            partial=partial,
+            # a partial page's owner keeps appending rows, so it has no
+            # stable reference — detector scrub handles it on reuse
+            snapshot=None if partial else self.pool.snapshot_page(page),
+            parent=parent.key if parent is not None else None,
+        )
+        if parent is not None:
+            parent.n_children += 1
+        self._entries[key] = e
+        self._touch(e)
+        self.inserts += 1
+        return e
+
+    def _make_room(self, protect: set) -> bool:
+        """Enforce ``max_cached_pages`` (0 = uncapped) before an insert."""
+        cap = self.cfg.max_cached_pages
+        if cap <= 0:
+            return True
+        while len(self._entries) >= cap:
+            if self._evict_one(protect) is None:
+                return False
+        return True
+
+    # --------------------------------------------------------------- eviction
+    def _evict_one(self, protect: set = frozenset()) -> Optional[int]:
+        """Drop the least-recently-used evictable entry — a chain *leaf*
+        (no cached extension) whose page only the cache still references —
+        and release its pool reference.  Returns the page id (now on the
+        free list) or None when nothing is evictable."""
+        victim = None
+        for e in self._entries.values():
+            if e.key in protect or e.n_children > 0:
+                continue
+            if self.pool.refcount(e.page) != 1:
+                continue            # a running request still shares it
+            if victim is None or e.last_used < victim.last_used:
+                victim = e
+        if victim is None:
+            return None
+        del self._entries[victim.key]
+        if victim.parent is not None:
+            self._entries[victim.parent].n_children -= 1
+        self.pool.free([victim.page])
+        self.evictions += 1
+        return victim.page
+
+    def evict(self, n_pages: int) -> int:
+        """Reclaim up to ``n_pages`` pages for the allocator (admission /
+        capacity pressure runs the cache dry before preempting a running
+        request).  Returns how many pages actually reached the free list."""
+        freed = 0
+        while freed < max(n_pages, 1):
+            if self._evict_one() is None:
+                break
+            freed += 1
+        return freed
+
+    # ------------------------------------------------------------ observation
+    def stats(self) -> Dict[str, int]:
+        return {
+            "entries": len(self._entries),
+            "cached_pages": self.cached_pages,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_tokens": self.hit_tokens,
+            "inserts": self.inserts,
+            "evictions": self.evictions,
+            "cow_forks": self.cow_forks,
+            "reuse_scrubs": self.reuse_scrubs,
+            "reuse_ref_repairs": self.reuse_ref_repairs,
+            "reuse_skips": self.reuse_skips,
+        }

@@ -19,7 +19,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import Any, List, Optional
 
 from .config import ServingConfig
 from .pool import PagedKVPool
@@ -45,6 +45,8 @@ class Request:
     slot: Optional[int] = None   # decode batch slot while RUNNING
     n_preempted: int = 0
     truncated: bool = False      # hit the block-table context cap
+    cached_tokens: int = 0       # prefix tokens served from the cache
+    cache_hit: Optional[Any] = None  # pending CacheHit (consumed by prepare)
 
     @property
     def n_context(self) -> int:
@@ -68,9 +70,15 @@ class Request:
 class Scheduler:
     """Admission control + preemption over one ``PagedKVPool``."""
 
-    def __init__(self, pool: PagedKVPool, cfg: ServingConfig):
+    def __init__(
+        self,
+        pool: PagedKVPool,
+        cfg: ServingConfig,
+        cache: Optional[Any] = None,
+    ):
         self.pool = pool
         self.cfg = cfg
+        self.cache = cache                        # optional PrefixCache
         self.waiting: collections.deque = collections.deque()
         self.running: List[Request] = []          # admission order
         self._free_slots = list(range(cfg.max_batch - 1, -1, -1))
@@ -89,22 +97,57 @@ class Scheduler:
     def admit(self) -> List[Request]:
         """Admit waiting requests while a decode slot AND the pages for their
         full (re-)prefill context are free.  FIFO — no head-of-line bypass,
-        so a preempted request cannot starve behind newer arrivals."""
+        so a preempted request cannot starve behind newer arrivals.
+
+        With a prefix cache, admission matches the longest cached prefix
+        first: the matched full pages are *shared* (one pool reference per
+        page — host bookkeeping only), and allocation covers just the
+        suffix (plus the copy-on-write target when the match ends inside a
+        page).  Cache eviction runs before admission gives up — cached-only
+        pages are the cheapest capacity there is."""
         admitted = []
         while self.waiting and self._free_slots:
             req = self.waiting[0]
-            need = self.cfg.pages_for(max(req.n_context, 1))
-            pages = self.pool.alloc(need)
+            hit = (
+                self.cache.lookup(req.prefill_tokens())
+                if self.cache is not None else None
+            )
+            shared = [e.page for e in hit.full] if hit is not None else []
+            # take the references BEFORE allocating: the allocation may run
+            # cache eviction, which must not reclaim the pages just matched
+            self.pool.share(shared)
+            if hit is not None and hit.partial is not None:
+                # guard the clone source too — released by prepare_hit
+                self.pool.share([hit.partial.page])
+            need = self.cfg.pages_for(max(req.n_context, 1)) - len(shared)
+            pages = self._alloc(need)
             if pages is None:
+                self.pool.free(shared)
+                if hit is not None and hit.partial is not None:
+                    self.pool.free([hit.partial.page])
                 break
             self.waiting.popleft()
-            req.pages = pages
+            req.pages = shared + pages
+            req.cached_tokens = hit.n_tokens if hit is not None else 0
+            req.cache_hit = hit
             req.pos = 0
             req.slot = self._free_slots.pop()
             req.state = RequestState.RUNNING
             self.running.append(req)
             admitted.append(req)
+            if self.cache is not None:
+                self.cache.note_admit(hit)
         return admitted
+
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        """Pool allocation with cache-eviction backpressure: a full pool
+        first reclaims LRU cache-only pages, then fails (admission waits /
+        capacity growth preempts)."""
+        pages = self.pool.alloc(n)
+        if pages is None and self.cache is not None:
+            if self.cache.evict(n - self.pool.n_free) > 0:
+                pages = self.pool.alloc(n)
+        return pages
 
     def finish(self, req: Request) -> None:
         self.pool.free(req.pages)
@@ -123,7 +166,7 @@ class Scheduler:
         True when its pages cover position ``req.pos``."""
         assert req.state is RequestState.RUNNING, req
         while self.cfg.pages_for(req.pos + 1) > len(req.pages):
-            got = self.pool.alloc(1)
+            got = self._alloc(1)
             if got is not None:
                 req.pages.extend(got)
                 continue
@@ -146,10 +189,15 @@ class Scheduler:
 
     def preempt(self, req: Request) -> None:
         """Recompute-style eviction: drop the pages, keep the tokens, rejoin
-        the head of the waiting queue."""
+        the head of the waiting queue.  "Drop" releases this request's
+        references only — pages the prefix cache (or another request) still
+        shares survive with their KV intact, so the re-prefill usually
+        re-admits straight onto them."""
+        assert req.cache_hit is None, "preempting an unprepared cache hit"
         self.pool.free(req.pages)
         req.pages = []
         req.pos = 0
+        req.cached_tokens = 0
         self._free_slots.append(req.slot)
         req.slot = None
         req.state = RequestState.WAITING

@@ -1,0 +1,286 @@
+"""Prefix cache: refcount discipline (double-free is an error, shared pages
+survive preemption), dwell-charged scrub-on-reuse, copy-on-write forks,
+LRU eviction under pressure, and zero-BER bit parity against the no-cache
+engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_transformer
+from repro.runtime import ApproxConfig, ApproxSpace
+from repro.serving import Engine, PagedKVPool, PrefixCache, ServingConfig
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    return tiny_transformer()
+
+
+def _cfg(**kw):
+    base = dict(page_size=4, n_pages=16, max_batch=4,
+                max_pages_per_request=5, seed=3)
+    base.update(kw)
+    return ServingConfig(**base)
+
+
+def _pool(model, **kw):
+    return PagedKVPool(model, ApproxSpace(mode="memory"), _cfg(**kw))
+
+
+# ---------------------------------------------------------------- refcounts
+def test_pool_double_free_is_an_error(model_params):
+    model, _ = model_params
+    pool = _pool(model)
+    pages = pool.alloc(2)
+    pool.free(pages)
+    with pytest.raises(RuntimeError, match="double free"):
+        pool.free(pages)
+
+
+def test_pool_share_keeps_page_resident(model_params):
+    model, _ = model_params
+    pool = _pool(model)
+    (page,) = pool.alloc(1)
+    pool.share([page])                      # rc 2
+    pool.free([page])                       # rc 1 — still resident
+    assert not pool.is_free(page)
+    pool.free([page])                       # rc 0 — back on the free list
+    assert pool.is_free(page)
+    with pytest.raises(RuntimeError, match="sharing free page"):
+        pool.share([page])
+
+
+def test_pool_dwell_clock_and_copy_page(model_params):
+    model, _ = model_params
+    pool = _pool(model)
+    src, dst = pool.alloc(2)
+    pool.now = 5
+    assert pool.dwell(src) == 5
+    pool.copy_page(src, dst)                # clone inherits the dwell stamp
+    assert pool.dwell(dst) == 5
+    pool.mark_clean([src])
+    assert pool.dwell(src) == 0 and pool.dwell(dst) == 5
+    for a in jax.tree.leaves(pool.tree):
+        np.testing.assert_array_equal(np.asarray(a[src]), np.asarray(a[dst]))
+
+
+def test_expected_faults_is_linear_in_dwell():
+    cfg = ApproxConfig(mode="memory", ber=1e-6)
+    one = cfg.expected_faults(1024, 1.0)
+    assert one == pytest.approx(1024 * 8 * 1e-6)
+    assert cfg.expected_faults(1024, 3.0) == pytest.approx(3 * one)
+    assert cfg.expected_faults(1024, 0.0) == 0.0
+    assert cfg.expected_faults(1024, 2.0, ber=0.0) == 0.0
+
+
+def test_serving_config_validates_cache_cap():
+    with pytest.raises(ValueError, match="max_cached_pages"):
+        ServingConfig(n_pages=8, max_cached_pages=9)
+    with pytest.raises(ValueError, match="max_cached_pages"):
+        ServingConfig(max_cached_pages=-1)
+
+
+# ------------------------------------------------------------- cache basics
+def _run_engine(model, params, cfg, prompts, *, stagger=True, max_new=4):
+    eng = Engine(model, params, cfg)
+    rids = []
+    for p in prompts:
+        rids.append(eng.add_request(p, max_new=max_new))
+        if stagger:
+            eng.run()
+    eng.run()
+    return eng, [eng.results[r]["generated"] for r in rids]
+
+
+def test_cache_hits_skip_prefix_prefill(model_params):
+    model, params = model_params
+    shared = [1, 2, 3, 4, 5, 6, 7, 8]
+    prompts = [shared + [9], shared + [10], shared + [9, 11, 12]]
+    eng, _ = _run_engine(model, params, _cfg(prefix_cache=True), prompts)
+    s = eng.cache_stats()
+    assert s["enabled"] and s["hits"] == 2 and s["misses"] == 1
+    # prompt 2 rides the two full cached pages (8 tokens); prompt 3 also
+    # matches the first prompt's 9-token partial entry (8 + 9 = 17)
+    assert s["hit_tokens"] == 17 and eng.prefill_tokens_saved == 17
+    assert eng.metrics()["prefill_tokens_saved"] == 17
+
+
+def test_cache_disabled_reports_disabled(model_params):
+    model, params = model_params
+    eng, _ = _run_engine(model, params, _cfg(), [[1, 2, 3]])
+    assert eng.cache_stats() == {
+        "enabled": False, "prefill_tokens_saved": 0,
+    }
+
+
+def test_zero_ber_cache_tokens_bit_identical(model_params):
+    model, params = model_params
+    shared = [1, 2, 3, 4, 5, 6, 7, 8]
+    prompts = [shared + [9], shared + [10], shared + [9, 11, 12],
+               shared + [9]]
+    base, out0 = _run_engine(model, params, _cfg(), prompts)
+    cached, out1 = _run_engine(
+        model, params, _cfg(prefix_cache=True), prompts
+    )
+    assert out0 == out1
+    assert cached.cache_stats()["hits"] == 3
+    # the dwell gate trusted every hit at zero BER — no reuse scrubs ran
+    assert cached.cache_stats()["reuse_scrubs"] == 0
+    assert cached.cache_stats()["reuse_ref_repairs"] == 0
+
+
+def test_cow_fork_inside_partial_page(model_params):
+    model, params = model_params
+    cfg = _cfg(prefix_cache=True)
+    eng = Engine(model, params, cfg)
+    rid = eng.add_request([1, 2, 3, 4, 5, 6, 7, 8, 9], max_new=4)
+    eng.run()
+    cont = eng.results[rid]["tokens"]        # 13 tokens: 3 full pages + 1 row
+    rB = eng.add_request(cont + [17], max_new=4)
+    rC = eng.add_request(cont[:10] + [23], max_new=4)
+    eng.run()
+    s = eng.cache_stats()
+    assert s["cow_forks"] == 2               # both diverge inside a page
+
+    # no-cache arm must emit the same bits
+    eng0 = Engine(model, params, _cfg())
+    r0 = eng0.add_request([1, 2, 3, 4, 5, 6, 7, 8, 9], max_new=4)
+    eng0.run()
+    rB0 = eng0.add_request(cont + [17], max_new=4)
+    rC0 = eng0.add_request(cont[:10] + [23], max_new=4)
+    eng0.run()
+    assert eng.results[rB]["generated"] == eng0.results[rB0]["generated"]
+    assert eng.results[rC]["generated"] == eng0.results[rC0]["generated"]
+    assert eng.results[rid]["generated"] == eng0.results[r0]["generated"]
+
+
+# --------------------------------------------------- refcount balance / LRU
+def test_refcounts_balance_to_zero_after_drain(model_params):
+    model, params = model_params
+    shared = [1, 2, 3, 4, 5, 6, 7, 8]
+    prompts = [shared + [9 + i] for i in range(5)] + [shared + [9, 30, 31]]
+    eng, _ = _run_engine(model, params, _cfg(prefix_cache=True), prompts)
+    assert eng.pool.n_free == eng.cfg.n_pages - eng.cache.cached_pages
+    # drain the cache: every page returns to the free list, refcounts zero
+    freed = eng.cache.evict(eng.cfg.n_pages)
+    assert freed == eng.cache.stats()["evictions"] > 0
+    assert eng.cache.cached_pages == 0
+    assert eng.pool.n_free == eng.cfg.n_pages
+    rc = eng.pool._refcount[: eng.cfg.n_pages]
+    assert int(np.sum(rc)) == 0 and int(np.min(rc)) == 0
+
+
+def test_lru_eviction_under_allocation_pressure(model_params):
+    model, params = model_params
+    # 8-page pool: cached prefixes must be reclaimed to admit new requests
+    cfg = _cfg(n_pages=8, prefix_cache=True)
+    prompts = [[i, i + 1, i + 2, i + 3, i + 4] for i in range(1, 60, 10)]
+    eng, outs = _run_engine(model, params, cfg, prompts)
+    assert all(len(o) == 4 for o in outs)    # everyone finished
+    assert eng.cache_stats()["evictions"] > 0
+    assert eng.pool.n_free == eng.cfg.n_pages - eng.cache.cached_pages
+
+
+def test_max_cached_pages_cap_is_enforced(model_params):
+    model, params = model_params
+    cfg = _cfg(prefix_cache=True, max_cached_pages=3)
+    prompts = [[i, i + 1, i + 2, i + 3, i + 4, i + 5] for i in range(1, 80, 10)]
+    eng, _ = _run_engine(model, params, cfg, prompts)
+    assert eng.cache.cached_pages <= 3
+    assert eng.cache_stats()["evictions"] > 0
+
+
+def test_shared_pages_survive_preemption_storm(model_params):
+    model, params = model_params
+    # worst-case demand ~3x capacity over a shared prefix: preemptions fire,
+    # shared pages must never be reclaimed out from under the cache
+    cfg = _cfg(n_pages=10, prefix_cache=True)
+    shared = [1, 2, 3, 4, 5, 6, 7, 8]
+    eng = Engine(model, params, cfg)
+    rids = [eng.add_request(shared + [9 + i], max_new=6) for i in range(8)]
+    eng.run()
+    assert all(len(eng.results[r]["generated"]) == 6 for r in rids)
+    assert eng.pool.n_free == eng.cfg.n_pages - eng.cache.cached_pages
+    # cached entries still hold exactly one (their own) pool reference
+    for e in eng.cache._entries.values():
+        assert eng.pool.refcount(e.page) == 1
+    eng.cache.evict(eng.cfg.n_pages)
+    assert eng.pool.n_free == eng.cfg.n_pages
+
+    # same storm without the cache emits the same bits
+    eng0 = Engine(model, params, _cfg(n_pages=10))
+    rids0 = [eng0.add_request(shared + [9 + i], max_new=6) for i in range(8)]
+    eng0.run()
+    assert [eng0.results[r]["generated"] for r in rids0] == [
+        eng.results[r]["generated"] for r in rids
+    ]
+
+
+# -------------------------------------------------------- scrub-on-reuse
+def _reuse_engine(model, params, *, dwell_threshold, ber=2e-4, idle=5):
+    cfg = _cfg(prefix_cache=True, ber=ber, dwell_threshold=dwell_threshold)
+    eng = Engine(model, params, cfg)
+    rid = eng.add_request([1, 2, 3, 4, 5, 6, 7, 8, 9], max_new=4)
+    eng.run()
+    for _ in range(idle):                    # cached pages dwell + take flips
+        eng.step()
+    cont = eng.results[rid]["tokens"]
+    eng.add_request(cont + [17], max_new=4)
+    eng.run()
+    return eng
+
+
+def test_reuse_scrub_fires_after_dwell(model_params):
+    model, params = model_params
+    eng = _reuse_engine(model, params, dwell_threshold=1.0)
+    s = eng.cache_stats()
+    assert s["hits"] == 1
+    # full-page entries restore from their insert-time snapshot; the partial
+    # tail (no stable snapshot) detector-scrubs
+    assert s["reuse_ref_repairs"] > 0
+    assert s["reuse_scrubs"] > 0
+
+
+def test_reuse_skips_below_threshold(model_params):
+    model, params = model_params
+    eng = _reuse_engine(model, params, dwell_threshold=1e9)
+    s = eng.cache_stats()
+    assert s["hits"] == 1 and s["reuse_skips"] > 0
+    assert s["reuse_ref_repairs"] == 0 and s["reuse_scrubs"] == 0
+
+
+def test_always_scrub_arm_never_skips(model_params):
+    model, params = model_params
+    eng = _reuse_engine(model, params, dwell_threshold=0.0, ber=0.0)
+    s = eng.cache_stats()
+    assert s["hits"] == 1 and s["reuse_skips"] == 0
+    assert s["reuse_ref_repairs"] + s["reuse_scrubs"] > 0
+
+
+def test_reference_repair_restores_snapshot_bits(model_params):
+    model, _ = model_params
+    pool = _pool(model)
+    (page,) = pool.alloc(1)
+    leaves = jax.tree.leaves(pool.tree)
+    stamped = jax.tree.map(
+        lambda a: a.at[page].set(
+            jax.random.normal(jax.random.PRNGKey(7), a.shape[1:], a.dtype)
+        ),
+        pool.tree,
+    )
+    pool.tree = stamped
+    snap = pool.snapshot_page(page)
+    # poison one lane, then reference-repair against the snapshot
+    poisoned = jax.tree.map(
+        lambda a: a.at[(page,) + (0,) * (a.ndim - 1)].set(jnp.nan), pool.tree
+    )
+    pool.tree = poisoned
+    from repro.core import stats as stats_lib
+
+    pool.now = 9
+    stats = pool.reference_repair_page(page, snap, stats_lib.zeros())
+    assert int(stats["nan_found"]) == len(leaves)
+    assert pool.dwell(page) == 0             # repair stamps the page clean
+    for a, b in zip(jax.tree.leaves(pool.tree), jax.tree.leaves(stamped)):
+        np.testing.assert_array_equal(np.asarray(a[page]), np.asarray(b[page]))
