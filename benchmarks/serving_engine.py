@@ -25,9 +25,17 @@ Wall-clock is reported but not asserted for the paged arm: off-TPU the
 Pallas kernel runs in interpret mode (a Python-level simulator), which
 says nothing about the lowered kernel this arm exists for.
 
-``main(out=...)`` merges a ``serving`` section into the shared bench
-record (``benchmarks/run.py --out BENCH_repair.json``), validated by
-``scripts/check_bench.py``.
+A fourth comparison runs the tiered-KV arms (README §Serving engine —
+"Tiered KV"): the same storm workload with preemption resolved by
+recompute (``host_pages=0``) vs swap through the host exact tier
+(``swap_policy="swap"``).  Asserted every run: identical token streams at
+BER=0 and the swap arm re-prefills *strictly fewer* tokens than the
+recompute arm — the cost the tier exists to avoid.  A BER>0 swap row
+records the boundary-scrub bytes/token the crossings ledger.
+
+``main(out=...)`` merges ``serving`` and ``tiered_kv`` sections into the
+shared bench record (``benchmarks/run.py --out BENCH_repair.json``),
+validated by ``scripts/check_bench.py``.
 """
 from __future__ import annotations
 
@@ -142,6 +150,79 @@ def run(smoke: bool = False):
     return rows, arm_metrics
 
 
+def _tiered_engine(ber: float, host_pages: int):
+    return ServingConfig(
+        page_size=4, n_pages=10, max_batch=4, max_pages_per_request=6,
+        repair="page", ber=ber, sweep_interval=16, sweep_pages=2, seed=7,
+        host_pages=host_pages,
+    )
+
+
+def run_tiered(smoke: bool = False):
+    """Swap-vs-recompute under page pressure.  The BER=0 pair carries the
+    acceptance assert (identical tokens, strictly fewer re-prefilled
+    tokens); the BER>0 swap row records what the boundary scrubs cost."""
+    model, params = _model()
+    n_requests, max_new = (8, 6) if smoke else (10, 12)
+    rows = []
+    arm_metrics = {}
+    tokens = {}
+
+    def one(name: str, ber: float, host_pages: int):
+        engine = Engine(model, params, _tiered_engine(ber, host_pages))
+        _workload(engine, n_requests, max_new)
+        t0 = time.perf_counter()
+        results = engine.run()
+        dt = time.perf_counter() - t0
+        assert len(results) == n_requests
+        m = engine.metrics()
+        ts = engine.tier_stats()
+        toks = max(m["tokens_emitted"], 1)
+        row = {
+            "us_per_token": 1e6 * dt / toks,
+            "tokens_emitted": m["tokens_emitted"],
+            "prefill_tokens_recomputed": m["prefill_tokens_recomputed"],
+            "boundary_scrub_bytes_per_token":
+                ts.get("boundary_scrub_bytes", 0) / toks,
+            "swap_outs": ts.get("swap_outs", 0),
+            "swap_ins": ts.get("swap_ins", 0),
+            "recompute_fallbacks": ts.get("recompute_fallbacks", 0),
+            "n_preemptions": m["n_preemptions"],
+        }
+        tokens[name] = {rid: results[rid]["tokens"] for rid in results}
+        rows.append((
+            f"tiered_{name}_ber{ber:g}",
+            row["us_per_token"],
+            f"recomputed={row['prefill_tokens_recomputed']};"
+            f"tokens={row['tokens_emitted']};"
+            f"boundary_bytes_per_token="
+            f"{row['boundary_scrub_bytes_per_token']:.0f};"
+            f"swaps={row['swap_outs']}/{row['swap_ins']};"
+            f"fallbacks={row['recompute_fallbacks']};"
+            f"preempt={row['n_preemptions']}",
+        ))
+        arm_metrics[name] = row
+        return row
+
+    rec = one("tiered_recompute", 0.0, 0)
+    swp = one("tiered_swap", 0.0, 12)
+    # the storm must actually preempt, or the comparison measures nothing
+    assert rec["n_preemptions"] > 0 and swp["n_preemptions"] > 0
+    assert tokens["tiered_swap"] == tokens["tiered_recompute"], (
+        "swap-in drifted from recompute at BER=0"
+    )
+    assert (
+        swp["prefill_tokens_recomputed"] < rec["prefill_tokens_recomputed"]
+    ), "the swap arm must re-prefill strictly fewer tokens than recompute"
+    assert swp["swap_outs"] == swp["swap_ins"] > 0
+    # under faults the crossings pay (and ledger) the boundary scrub
+    faulted = one("tiered_swap_ber", 1e-3, 12)
+    assert faulted["boundary_scrub_bytes_per_token"] > 0 or (
+        faulted["swap_outs"] == 0
+    )
+    return rows, arm_metrics
+
+
 def main(smoke: bool = False, out: Optional[str] = None):
     print("# serving_engine: continuous batching over the paged KV pool;")
     print("# us_per_call is us/token; page must beat whole on bytes/token;")
@@ -150,12 +231,21 @@ def main(smoke: bool = False, out: Optional[str] = None):
     rows, arm_metrics = run(smoke=smoke)
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    print("# tiered_kv: preemption swap vs recompute (README §Tiered KV);")
+    print("# swap must re-prefill strictly fewer tokens at identical output")
+    tiered_rows, tiered_metrics = run_tiered(smoke=smoke)
+    for name, us, derived in tiered_rows:
+        print(f"{name},{us:.1f},{derived}")
     if out:
         from ._record import merge_record
 
         merge_record(out, "serving", {
             "rows": arm_metrics,
             "paged_vs_gather_bytes_ok": True,   # asserted above
+        }, smoke=smoke)
+        merge_record(out, "tiered_kv", {
+            "rows": tiered_metrics,
+            "swap_beats_recompute_ok": True,    # asserted in run_tiered
         }, smoke=smoke)
 
 

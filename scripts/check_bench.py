@@ -4,8 +4,10 @@ README §Distributed repair cites the repair-pipeline bench record (eager vs
 compiled scrub/inject wall-time and scrubbed-bytes/step on 1 and 8 fake
 devices, plus the trace count) and README §Serving engine cites the serving
 section (tokens/s + scrubbed-bytes/token per arm, the paged-kernel arm's
-zero-decode-copy counters) and the prefix-cache section (prefill-tokens-
-saved per share ratio, gated vs always-scrub reuse bytes).  If a refactor renames or drops any of those
+zero-decode-copy counters), the tiered-KV section (swap-vs-recompute
+re-prefilled tokens, boundary-scrub bytes/token), and the prefix-cache
+section (prefill-tokens-saved per share ratio, gated vs always-scrub
+reuse bytes).  If a refactor renames or drops any of those
 keys the bench silently stops backing the README's claims — this check
 makes the bench step fail loudly instead.
 
@@ -35,6 +37,17 @@ SERVING_ROW_KEYS = (
     "pool_gathers",
     "pool_scatters",
     "events",
+)
+TIERED_KEYS = ("rows", "swap_beats_recompute_ok")
+TIERED_ROW_KEYS = (
+    "us_per_token",
+    "tokens_emitted",
+    "prefill_tokens_recomputed",
+    "boundary_scrub_bytes_per_token",
+    "swap_outs",
+    "swap_ins",
+    "recompute_fallbacks",
+    "n_preemptions",
 )
 PREFIX_KEYS = ("rows", "zero_ber_parity_ok", "gated_vs_always_bytes_ok")
 PREFIX_ROW_KEYS = (
@@ -84,6 +97,24 @@ def check(path: str) -> int:
                 checked += 1
                 if key not in row:
                     missing.append(f"sections.serving.rows.{name}.{key}")
+    tiered = sections.get("tiered_kv")
+    if not isinstance(tiered, dict):
+        missing.append("sections.tiered_kv")
+    else:
+        for key in TIERED_KEYS:
+            checked += 1
+            if key not in tiered:
+                missing.append(f"sections.tiered_kv.{key}")
+        rows = tiered.get("rows") or {}
+        checked += 1
+        # both comparison arms must be on record for the README's claim
+        if not ("tiered_recompute" in rows and "tiered_swap" in rows):
+            missing.append("sections.tiered_kv.rows.tiered_{recompute,swap}")
+        for name, row in rows.items():
+            for key in TIERED_ROW_KEYS:
+                checked += 1
+                if key not in row:
+                    missing.append(f"sections.tiered_kv.rows.{name}.{key}")
     prefix = sections.get("prefix_cache")
     if not isinstance(prefix, dict):
         missing.append("sections.prefix_cache")

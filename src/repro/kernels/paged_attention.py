@@ -75,7 +75,8 @@ def _paged_kernel(
     q_ref, k_ref, v_ref,
     o_ref, slot_ref, counts_ref,
     acc_ref, m_ref, l_ref,
-    *, sm_scale: float, policy: str, constant: float,
+    *, sm_scale: float,
+    policy_k: str, constant_k: float, policy_v: str, constant_v: float,
     pg: int, n_kv: int, group: int, nm: int, out_dtype,
 ):
     b, j = pl.program_id(0), pl.program_id(1)
@@ -92,11 +93,16 @@ def _paged_kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
 
     # ---- fused on-read repair of this page's K/V rows (the trap) ----
+    # per-operand fill selection: each tile repairs with ITS operand's
+    # rule fill (row 0 = K, row 1 = V), so a mixed-fill RuleSet compiles
+    # into one kernel instead of forcing the gathered-decode fallback
     k_fixed, nan_k, inf_k = common.repair_tile(
-        k_ref[0, 0], policy=policy, constant=constant, consts=consts_ref[0],
+        k_ref[0, 0], policy=policy_k, constant=constant_k,
+        consts=consts_ref[0],
     )
     v_fixed, nan_v, inf_v = common.repair_tile(
-        v_ref[0, 0], policy=policy, constant=constant, consts=consts_ref[1],
+        v_ref[0, 0], policy=policy_v, constant=constant_v,
+        consts=consts_ref[1],
     )
     ev_k = ((nan_k + inf_k) > 0).astype(jnp.int32)
     ev_v = ((nan_v + inf_v) > 0).astype(jnp.int32)
@@ -154,6 +160,7 @@ def _paged_kernel(
     static_argnames=(
         "policy", "constant", "include_inf", "interpret",
         "detector_k", "detector_v",
+        "policy_k", "constant_k", "policy_v", "constant_v",
     ),
 )
 def paged_attention_raw(
@@ -170,6 +177,10 @@ def paged_attention_raw(
     interpret: Optional[bool] = None,
     detector_k=DEFAULT_DETECTOR,
     detector_v=DEFAULT_DETECTOR,
+    policy_k: Optional[str] = None,
+    constant_k: Optional[float] = None,
+    policy_v: Optional[str] = None,
+    constant_v: Optional[float] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One layer of paged decode attention with fused on-read repair.
 
@@ -177,11 +188,19 @@ def paged_attention_raw(
     a ``core.rules.Detector``, the default sentinel (legacy NaN(+Inf) via
     ``include_inf``), or ``None`` — detection disabled for that operand
     entirely (a zeroed-flags constants row; the exact-region /
-    non-reactive-rule case), which keeps the read bit-transparent.  Returns
+    non-reactive-rule case), which keeps the read bit-transparent.
+    ``policy_k``/``constant_k`` and ``policy_v``/``constant_v`` pick the
+    fill per operand the same way (``None`` inherits the shared
+    ``policy``/``constant``) — a mixed-fill RuleSet compiles into ONE
+    kernel, each tile repairing with its operand's own fill.  Returns
     ``(out (B, H, Dh), slot_counts (B, M) int32, counts int32[8])``.
     """
     if interpret is None:
         interpret = common.default_interpret()
+    policy_k = policy if policy_k is None else policy_k
+    constant_k = constant if constant_k is None else constant_k
+    policy_v = policy if policy_v is None else policy_v
+    constant_v = constant if constant_v is None else constant_v
     B, H, Dh = q.shape
     P, L, pg, Kh, _ = k_pages.shape
     assert v_pages.shape == k_pages.shape, (k_pages.shape, v_pages.shape)
@@ -233,8 +252,10 @@ def paged_attention_raw(
         functools.partial(
             _paged_kernel,
             sm_scale=sm_scale,
-            policy=policy,
-            constant=constant,
+            policy_k=policy_k,
+            constant_k=constant_k,
+            policy_v=policy_v,
+            constant_v=constant_v,
             pg=pg,
             n_kv=Kh,
             group=group,

@@ -152,15 +152,25 @@ def paged_attention_ref(
     include_inf: bool = True,
     detector_k="default",
     detector_v="default",
+    policy_k=None,
+    constant_k=None,
+    policy_v=None,
+    constant_v=None,
 ):
     """Oracle of kernels.paged_attention: gather the block-table pages (the
     very copy the kernel avoids), repair each (page, layer) row as one tile
     — the kernel's repair unit — then full-softmax decode attention over
-    the masked positions.  Returns ``(out (B,H,Dh), slot_counts (B,M))``
-    with bit-exact count semantics."""
+    the masked positions.  ``policy_k``/``policy_v`` (+ constants) override
+    the shared fill per operand, mirroring the kernel's per-tile
+    operand-indexed fill selection.  Returns ``(out (B,H,Dh), slot_counts
+    (B,M))`` with bit-exact count semantics."""
     if k_pages.ndim == 4:
         k_pages = k_pages[:, None]
         v_pages = v_pages[:, None]
+    policy_k = policy if policy_k is None else policy_k
+    constant_k = constant if constant_k is None else constant_k
+    policy_v = policy if policy_v is None else policy_v
+    constant_v = constant if constant_v is None else constant_v
     B, H, Dh = q.shape
     P, L, pg, Kh, _ = k_pages.shape
     G = H // Kh
@@ -168,7 +178,7 @@ def paged_attention_ref(
     M = bt.shape[1]
     pos = jnp.asarray(positions, jnp.int32)
 
-    def repair_rows(rows, detector):
+    def repair_rows(rows, detector, policy, constant):
         # rows: (B, M, pg, Kh, Dh); one (b, m) page row == one kernel tile
         nan_m, inf_m = _paged_masks(rows, detector, include_inf)
         mask = nan_m | inf_m
@@ -193,8 +203,8 @@ def paged_attention_ref(
 
     k_rows = k_pages[bt, layer]                                # (B, M, pg, Kh, Dh)
     v_rows = v_pages[bt, layer]
-    fk, cnt_k = repair_rows(k_rows, detector_k)
-    fv, cnt_v = repair_rows(v_rows, detector_v)
+    fk, cnt_k = repair_rows(k_rows, detector_k, policy_k, constant_k)
+    fv, cnt_v = repair_rows(v_rows, detector_v, policy_v, constant_v)
     slot_counts = cnt_k + cnt_v
 
     T = M * pg

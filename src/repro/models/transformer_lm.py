@@ -230,6 +230,7 @@ class TransformerLM(Model):
         detectors=None,          # {"k": Detector|None, "v": Detector|None}
         policy: str = "zero",
         constant: float = 0.0,
+        fills=None,              # {"k": (policy, constant), "v": (...)}
     ):
         """One decode step straight off the paged pool (no gathered view):
         each layer writes its new K/V into one page slot per request and
@@ -237,8 +238,14 @@ class TransformerLM(Model):
         block tables, positions) with fused on-read repair.  The layer
         index rides the scan carry and reaches the kernel as a
         scalar-prefetch operand, so one compiled kernel serves every layer
-        and the HLO stays flat in depth."""
+        and the HLO stays flat in depth.  ``fills`` overrides the shared
+        ``policy``/``constant`` per pool leaf name — each operand's rule
+        fill reaches its kernel tile, so mixed-fill RuleSets keep the
+        fused path."""
         detectors = detectors or {}
+        fills = fills or {}
+        fill_k = fills.get("k", (policy, constant))
+        fill_v = fills.get("v", (policy, constant))
         h = self.embed(params["embed"], batch["tokens"])
         B = h.shape[0]
         M = block_tables.shape[1]
@@ -249,7 +256,8 @@ class TransformerLM(Model):
                 p_l["attn"], self.norm1(p_l["norm1"], h), kp, vp,
                 block_tables, positions, layer,
                 detector_k=detectors.get("k"), detector_v=detectors.get("v"),
-                policy=policy, constant=constant,
+                policy_k=fill_k[0], constant_k=fill_k[1],
+                policy_v=fill_v[0], constant_v=fill_v[1],
             )
             h = h + a
             y = self.mlp(p_l["mlp"], self.norm2(p_l["norm2"], h))

@@ -242,6 +242,10 @@ class Attention:
         detector_v=None,
         policy: str = "zero",
         constant: float = 0.0,
+        policy_k=None,
+        constant_k=None,
+        policy_v=None,
+        constant_v=None,
         update_cache: bool = True,
     ):
         """Decode straight off the paged pool — no gathered view.
@@ -253,6 +257,8 @@ class Attention:
         in VMEM as it streams them (README §Serving engine).  Detector /
         fill come from the pool leaves' assigned ``RepairRule`` (the engine
         resolves them; ``None`` disables detection for that operand).
+        ``policy_k``/``policy_v`` (+ constants) override the shared fill
+        per operand — mixed-fill RuleSets stay on the fused path.
 
         Returns ``(out (B,1,D), k_pages', v_pages', slot_counts (B,M),
         counts int32[8])``.
@@ -282,6 +288,8 @@ class Attention:
             q[:, 0], k_pages, v_pages, block_tables, pos, layer,
             policy=policy, constant=constant,
             detector_k=detector_k, detector_v=detector_v,
+            policy_k=policy_k, constant_k=constant_k,
+            policy_v=policy_v, constant_v=constant_v,
         )
         out = self._out(p, ctx[:, None])                      # (B, 1, D)
         return out, k_pages, v_pages, slot_counts, counts

@@ -11,6 +11,10 @@ pool with page-granular reactive repair (README §Serving engine).
                     the demoted background sweep
   PrefixCache       refcounted copy-on-write prefix sharing with dwell-time-
                     charged scrub-on-reuse (README §Serving engine)
+  HostPageStore     host-memory exact page tier (no dwell clock; free-list +
+                    double-free guards mirroring the pool's)
+  TierManager       swap orchestration across the device/host tiers with a
+                    detector scrub at every device→host boundary crossing
   Engine            the facade: add_request / step / run, unified stats
 
 The engine is the subsystem later scaling PRs (sharded pools, async decode,
@@ -23,10 +27,12 @@ from .pool import PagedKVPool  # noqa: F401
 from .prefix_cache import CacheHit, PrefixCache  # noqa: F401
 from .repair import PageRepairManager  # noqa: F401
 from .scheduler import Request, RequestState, Scheduler  # noqa: F401
+from .tiers import HostPageStore, SwapHandle, TierManager  # noqa: F401
 
 __all__ = [
     "CacheHit",
     "Engine",
+    "HostPageStore",
     "PagedKVPool",
     "PageRepairManager",
     "PrefixCache",
@@ -34,5 +40,7 @@ __all__ = [
     "RequestState",
     "Scheduler",
     "ServingConfig",
+    "SwapHandle",
+    "TierManager",
     "engine_space",
 ]

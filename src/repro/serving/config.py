@@ -12,6 +12,7 @@ import dataclasses
 
 _REPAIR_MODES = ("page", "whole", "off")
 _PAGED_DECODE = ("auto", "off")
+_SWAP_POLICIES = ("swap", "recompute")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +68,22 @@ class ServingConfig:
                              means scrub on EVERY hit (the always-scrub
                              comparison arm in benchmarks/prefix_cache.py)
 
+    Tiered KV (README §Serving engine — "Tiered KV"):
+      host_pages             capacity of the host-memory exact tier in pages
+                             (0 disables tiering entirely).  May exceed
+                             ``n_pages`` — host DRAM is the cheap tier.
+      swap_policy            "swap"      — preemption parks the victim's
+                                           pages in the host tier (boundary
+                                           scrub on the way out) and swap-in
+                                           restores them on re-admission;
+                                           recompute survives only as the
+                                           host-store-full fallback
+                             "recompute" — preemption always drops pages and
+                                           re-prefills (the pre-tier
+                                           behavior; comparison arm).  The
+                                           prefix cache still demotes cold
+                                           entries when ``host_pages > 0``.
+
     Simulation:
       ber                    bit-error rate of one approximate-memory window
                              (applied to the pool between engine steps;
@@ -88,6 +105,9 @@ class ServingConfig:
     max_cached_pages: int = 0
     dwell_threshold: float = 1.0
 
+    host_pages: int = 0
+    swap_policy: str = "swap"
+
     ber: float = 0.0
     seed: int = 0
 
@@ -105,6 +125,10 @@ class ServingConfig:
                 "max_pages_per_request must not exceed n_pages "
                 f"({self.max_pages_per_request} > {self.n_pages})"
             )
+        if self.swap_policy not in _SWAP_POLICIES:
+            raise ValueError(f"bad swap_policy {self.swap_policy!r}")
+        if self.host_pages < 0:
+            raise ValueError(f"host_pages must be >= 0 ({self.host_pages})")
         if self.max_cached_pages < 0 or self.max_cached_pages > self.n_pages:
             raise ValueError(
                 "max_cached_pages must lie in [0, n_pages] "

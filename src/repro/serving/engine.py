@@ -12,10 +12,12 @@ QoS) builds on:
 One engine step is: (1) one approximate-memory window strikes the resident
 pool (simulation boundary, ``ber > 0`` only); (2) admission + batched
 prefill of newly admitted requests (one ``Model.prefill`` call each — the
-whole prompt in one pass); (3) one jitted decode step over the static slot
-batch (per-request positions — requests at different depths share the
-executable) plus the reactive repair pass; (4) the background sweep tick.
-All repair/flip/kernel events land in the engine's unified stats stream.
+whole prompt in one pass; a swapped-out request skips prefill entirely and
+has its parked KV written back from the host tier instead); (3) one jitted
+decode step over the static slot batch (per-request positions — requests at
+different depths share the executable) plus the reactive repair pass;
+(4) the background sweep tick.  All repair/flip/kernel events land in the
+engine's unified stats stream.
 
 Decode runs *straight off the pool* whenever the model and the pool rules
 allow it (``_paged_decode_plan``): the Pallas paged-attention kernel
@@ -60,6 +62,7 @@ from .pool import PagedKVPool
 from .prefix_cache import PrefixCache
 from .repair import PageRepairManager
 from .scheduler import Request, RequestState, Scheduler
+from .tiers import TierManager
 
 
 def engine_space(model: Any) -> ApproxSpace:
@@ -94,11 +97,12 @@ def engine_space(model: Any) -> ApproxSpace:
 class _PagedDecodePlan:
     """Static repair spec the fused decode step is compiled against: one
     detector per pool-leaf name (``None`` = detection off for that leaf)
-    plus the single kernel fill shared by every firing rule."""
+    plus one ``(policy, constant)`` kernel fill per leaf name — each
+    operand's tile repairs with its own rule's fill, so a mixed-fill
+    RuleSet no longer forces the gathered-decode fallback."""
 
     detectors: Mapping[str, Any]
-    policy: str
-    constant: float
+    fills: Mapping[str, Tuple[str, float]]
 
 
 def _paged_decode_plan(
@@ -121,7 +125,7 @@ def _paged_decode_plan(
     rule_tree, _ = space.rules_for(pool.tree)
     flat = jax.tree_util.tree_flatten_with_path(pool.tree)[0]
     detectors: Dict[str, Any] = {}
-    fills = set()
+    fills: Dict[str, Tuple[str, float]] = {}
     for (path, leaf), region, rule in zip(
         flat, jax.tree.leaves(regions), jax.tree.leaves(rule_tree)
     ):
@@ -135,11 +139,11 @@ def _paged_decode_plan(
             or not rule.fires("reactive")
         ):
             det = None          # probe-gate parity: this leaf is never probed
+            fill = ("zero", 0.0)     # irrelevant: nothing is ever detected
         else:
             fill = kernels_common.kernel_fill(rule.fill)
             if fill is None:
                 return None
-            fills.add(fill)
             try:
                 rule.detect.constants(leaf.dtype)
             except (TypeError, ValueError):
@@ -147,11 +151,12 @@ def _paged_decode_plan(
             det = rule.detect
         if name in detectors and detectors[name] != det:
             return None         # one detector per leaf name (kernel operand)
+        if det is not None and fills.get(name, fill) != fill:
+            return None         # one fill per leaf name (kernel operand)
         detectors[name] = det
-    if len(fills) > 1:
-        return None             # the kernel applies ONE static fill per call
-    policy, constant = fills.pop() if fills else ("zero", 0.0)
-    return _PagedDecodePlan(detectors=detectors, policy=policy, constant=constant)
+        if det is not None or name not in fills:
+            fills[name] = fill
+    return _PagedDecodePlan(detectors=detectors, fills=fills)
 
 
 class Engine:
@@ -193,11 +198,20 @@ class Engine:
             params = jax.device_put(params, self.params_shardings)
         self.params = params
         self.pool = PagedKVPool(model, self.space, self.cfg)
+        # tiered KV (README §Serving engine — "Tiered KV"): a host-memory
+        # exact tier preemption swaps to (boundary scrub on the way out)
+        # and prefix-cache eviction demotes into
+        self.tiers = (
+            TierManager(self.pool, self.space, self.cfg)
+            if self.cfg.host_pages > 0 else None
+        )
         self.cache = (
-            PrefixCache(self.pool, self.space, self.cfg)
+            PrefixCache(self.pool, self.space, self.cfg, tiers=self.tiers)
             if self.cfg.prefix_cache else None
         )
-        self.sched = Scheduler(self.pool, self.cfg, cache=self.cache)
+        self.sched = Scheduler(
+            self.pool, self.cfg, cache=self.cache, tiers=self.tiers
+        )
         self.repair = PageRepairManager(self.pool, self.space, self.cfg)
         # the one greedy step builder (shared with launch.serve.generate, so
         # the engine-vs-generate token-parity contract cannot drift)
@@ -224,6 +238,9 @@ class Engine:
         self._last_touched: List[int] = []
         self.tokens_emitted = 0
         self.prefill_tokens_saved = 0
+        # tokens a re-prefill had to re-process after a recompute-style
+        # preemption (the cost swap-out exists to avoid)
+        self.prefill_tokens_recomputed = 0
 
     # ------------------------------------------------------------------ admit
     def add_request(self, prompt: Sequence[int], max_new: int) -> int:
@@ -286,11 +303,22 @@ class Engine:
                 for r in admitted
                 if r.cache_hit is not None and r.cache_hit.partial is not None
             }
-            fresh = sorted(set(pages) - shared)
+            # swapped-in pages are excluded too: they are about to be
+            # overwritten by exact host-tier bits (probing the just-zeroed
+            # allocation would be charging for nothing)
+            swapped = {p for r in admitted if r.swap is not None for p in r.pages}
+            fresh = sorted(set(pages) - shared - swapped)
             if fresh:
                 self._stream = self.repair.repair_step(fresh, self._stream)
             self._last_touched = pages
         for req in admitted:
+            if req.swap is not None:
+                # tier swap-in instead of re-prefill: the parked context is
+                # written back whole and the request decodes this very step
+                # (it is NOT in ``prefilled`` — no token was emitted yet)
+                handle, req.swap = req.swap, None
+                self.tiers.swap_in(handle, req.pages)
+                continue
             if self.cache is not None:
                 self._stream = self.cache.prepare_hit(req, self._stream)
             self._prefill(req, emitted)
@@ -369,8 +397,7 @@ class Engine:
         def paged_step(params, pool_tree, batch, bt, pos, stats):
             logits, pool_tree, slot_counts, counts = model.serve_step_paged(
                 params, pool_tree, batch, bt, pos,
-                detectors=spec.detectors, policy=spec.policy,
-                constant=spec.constant,
+                detectors=spec.detectors, fills=spec.fills,
             )
             nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
             page_counts = jnp.zeros((n_rows,), jnp.int32).at[bt].add(
@@ -404,6 +431,11 @@ class Engine:
         self.pool.scatter(view, bt)
         req.pos = len(toks)
         self.prefill_tokens_saved += n_cached
+        if req.n_preempted:
+            # every non-cached token of a post-preemption re-prefill is
+            # work the engine already did once — the recompute bill the
+            # tier swap exists to avoid
+            self.prefill_tokens_recomputed += len(toks) - n_cached
         tok = int(np.asarray(nxt)[0])
         req.tokens.append(tok)
         emitted.setdefault(req.rid, []).append(tok)
@@ -504,12 +536,29 @@ class Engine:
             out.update(self.cache.stats())
         return out
 
+    def tier_stats(self) -> Dict[str, Any]:
+        """Tiered-KV observation counters (``{"enabled": False}`` when
+        ``host_pages == 0``): swap traffic, the per-tier boundary-scrub
+        byte ledger, and how often a full host store forced the recompute
+        fallback."""
+        out: Dict[str, Any] = {
+            "enabled": self.tiers is not None,
+            "swap_policy": self.cfg.swap_policy,
+            "n_swap_preemptions": self.sched.n_swap_preemptions,
+            "prefill_tokens_recomputed": self.prefill_tokens_recomputed,
+        }
+        if self.tiers is not None:
+            out.update(self.tiers.stats())
+        return out
+
     def metrics(self) -> Dict[str, Any]:
         toks = max(self.tokens_emitted, 1)
         return {
             "tokens_emitted": self.tokens_emitted,
             "prefill_tokens_saved": self.prefill_tokens_saved,
+            "prefill_tokens_recomputed": self.prefill_tokens_recomputed,
             "n_preemptions": self.sched.n_preemptions,
+            "n_swap_preemptions": self.sched.n_swap_preemptions,
             "scrubbed_bytes": self.pool.scrubbed_bytes,
             "scrub_calls": self.pool.scrub_calls,
             "scrubbed_bytes_per_token": self.pool.scrubbed_bytes / toks,

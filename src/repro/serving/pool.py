@@ -92,6 +92,28 @@ def _write_page(tree: Any, view: Any, page: jax.Array) -> Any:
 
 
 @jax.jit
+def _pages_view(tree: Any, ids: jax.Array) -> Any:
+    """Several pages' rows as a leading-axis-n tree — the batched
+    ``_page_view`` (tier swap-out snapshots whole block tables at once)."""
+    return jax.tree.map(
+        lambda leaf: leaf[ids] if _is_float(leaf) else leaf, tree
+    )
+
+
+@jax.jit
+def _write_pages(tree: Any, views: Any, ids: jax.Array) -> Any:
+    """Write leading-axis-n page views back into their pool rows — the
+    batched ``_write_page`` (tier swap-in restores whole block tables)."""
+    return jax.tree.map(
+        lambda leaf, v: (
+            leaf.at[ids].set(v.astype(leaf.dtype))
+            if _is_float(leaf) else leaf
+        ),
+        tree, views,
+    )
+
+
+@jax.jit
 def _gather(tree: Any, block_tables: jax.Array) -> Any:
     """Pool pages -> contiguous per-request cache views.
 
@@ -399,6 +421,33 @@ class PagedKVPool:
             return self.scrub_all(stats, trigger=trigger)
         assert scope == "none", f"bad plan scope {scope!r}"
         return stats
+
+    def pages_view(self, pages: Sequence[int]) -> Any:
+        """Host (numpy) copies of several pages' rows, leading axis in
+        ``pages`` order — what the host tier stores on swap-out.  A copy,
+        not a view: freeing or recycling the device pages afterwards
+        cannot invalidate it."""
+        return jax.device_get(
+            _pages_view(self.tree, jnp.asarray(list(pages), jnp.int32))
+        )
+
+    def write_pages(self, pages: Sequence[int], views: Any) -> None:
+        """Write page-row views (leading axis in ``pages`` order) into live
+        pool pages — the tier swap-in.  Writing into a free page is a hard
+        error: swapped-in contents must land in pages the normal
+        allocation path just handed out, never in recycled rows another
+        holder could claim."""
+        pages = list(pages)
+        for p in pages:
+            if not 0 <= p < self.null_page:
+                raise ValueError(f"bad page id {p}")
+            if self._refcount[p] <= 0:
+                raise RuntimeError(f"writing into free page {p}")
+        self.tree = _write_pages(
+            self.tree,
+            jax.tree.map(jnp.asarray, views),
+            jnp.asarray(pages, jnp.int32),
+        )
 
     def snapshot_page(self, page: int) -> Any:
         """Host (numpy) copy of one page's rows — the prefix cache's

@@ -46,6 +46,16 @@ Sharing discipline (all host-side bookkeeping; device work is the engine's):
               (``n_children == 0`` and pool refcount 1): interior chain
               pages stay until their extensions go first, so a cached
               prefix is always a contiguous page run.
+  demotion    with a ``TierManager`` (``ServingConfig.host_pages > 0``),
+              eviction parks the victim in the host-memory *exact* tier
+              before dropping it: full entries stash their insert-time
+              snapshot (already exact — no scrub needed), partial tails
+              cross the boundary scrub like any device→host move.  A later
+              lookup *promotes* parked entries back through the normal
+              allocation path (chain order, parents first) — the hit still
+              skips the suffix prefill, it just pays one page write instead
+              of keeping the page resident.  A full host store degrades to
+              the plain drop, a full pool leaves the entry parked.
 """
 from __future__ import annotations
 
@@ -78,6 +88,18 @@ class _Entry:
 
 
 @dataclasses.dataclass
+class _HostEntry:
+    """One cache entry parked in the host tier: the slot holding its page
+    row, plus enough metadata to rebuild the resident ``_Entry`` on
+    promotion (the chain walk supplies the parent)."""
+
+    key: Tuple[int, ...]
+    slot: int
+    n_tokens: int
+    partial: bool
+
+
+@dataclasses.dataclass
 class CacheHit:
     """A lookup match: ``full`` is the chain of whole-page entries, then
     optionally one ``partial`` tail entry extending it inside a page.
@@ -92,12 +114,18 @@ class PrefixCache:
     """Hash-of-token-prefix → page-run index over one ``PagedKVPool``."""
 
     def __init__(
-        self, pool: PagedKVPool, space: ApproxSpace, cfg: ServingConfig
+        self,
+        pool: PagedKVPool,
+        space: ApproxSpace,
+        cfg: ServingConfig,
+        tiers: Optional[Any] = None,
     ):
         self.pool = pool
         self.space = space
         self.cfg = cfg
+        self.tiers = tiers                        # optional TierManager
         self._entries: Dict[Tuple[int, ...], _Entry] = {}
+        self._host_entries: Dict[Tuple[int, ...], _HostEntry] = {}
         self._clock = 0
         # observation counters (Engine.cache_stats)
         self.hits = 0
@@ -109,6 +137,8 @@ class PrefixCache:
         self.reuse_scrubs = 0          # detector scrub-on-reuse passes
         self.reuse_ref_repairs = 0     # snapshot reference repairs
         self.reuse_skips = 0           # hits below the dwell threshold
+        self.demotions = 0             # evictions parked in the host tier
+        self.promotions = 0            # host entries re-materialized on hit
 
     # ------------------------------------------------------------------ state
     @property
@@ -123,14 +153,20 @@ class PrefixCache:
     def lookup(self, tokens: List[int]) -> Optional[CacheHit]:
         """The longest cached prefix of ``tokens``, capped at
         ``len(tokens) - 1`` — at least one token must remain for the suffix
-        prefill to consume (its logits produce the next token)."""
+        prefill to consume (its logits produce the next token).  With a
+        tier manager, a miss in the resident index falls through to the
+        host tier: parked entries are *promoted* back (chain order, so a
+        parent is always resident before its child) and count as hits."""
         toks = tuple(int(t) for t in tokens)
         cap = len(toks) - 1
         pg = self.cfg.page_size
         full: List[_Entry] = []
         k = 1
         while k * pg <= cap:
-            e = self._entries.get(toks[: k * pg])
+            key = toks[: k * pg]
+            e = self._entries.get(key)
+            if e is None:
+                e = self._promote(key, k * pg, False, full)
             if e is None or e.partial:
                 break
             full.append(e)
@@ -141,6 +177,8 @@ class PrefixCache:
         lo = len(full) * pg
         for n in range(min(cap, lo + pg - 1), lo, -1):
             e = self._entries.get(toks[:n])
+            if e is None:
+                e = self._promote(toks[:n], n, True, full)
             if e is not None and e.partial:
                 partial = e
                 break
@@ -154,6 +192,48 @@ class PrefixCache:
             partial.hits += 1
         n_tokens = partial.n_tokens if partial is not None else lo
         return CacheHit(n_tokens=n_tokens, full=tuple(full), partial=partial)
+
+    def _promote(
+        self,
+        key: Tuple[int, ...],
+        n_tokens: int,
+        want_partial: bool,
+        chain: List[_Entry],
+    ) -> Optional[_Entry]:
+        """Re-materialize one parked host entry as a resident entry linked
+        onto ``chain`` (the already-matched full-page run).  Returns None on
+        a genuine miss, a full pool, or cache-capacity pressure — the host
+        entry stays parked in the latter two cases."""
+        if self.tiers is None:
+            return None
+        he = self._host_entries.get(key)
+        if he is None or he.partial != want_partial:
+            return None
+        assert he.n_tokens == n_tokens, (he, n_tokens)
+        if not self._make_room({e.key for e in chain} | {key}):
+            return None
+        # a full entry's parked bits ARE its insert-time snapshot — promote
+        # them back as the reference for future scrub-on-reuse
+        snapshot = None if he.partial else self.tiers.slot_views(he.slot)
+        page = self.tiers.promote_page(he.slot)
+        if page is None:
+            return None
+        del self._host_entries[key]
+        parent = chain[-1] if chain else None
+        e = _Entry(
+            key=key,
+            page=page,
+            n_tokens=he.n_tokens,
+            partial=he.partial,
+            snapshot=snapshot,
+            parent=parent.key if parent is not None else None,
+        )
+        if parent is not None:
+            parent.n_children += 1
+        self._entries[key] = e
+        self._touch(e)
+        self.promotions += 1
+        return e
 
     def note_admit(self, hit: Optional[CacheHit]) -> None:
         """Count one successful admission against the hit/miss ledger (the
@@ -262,6 +342,11 @@ class PrefixCache:
     ) -> Optional[_Entry]:
         if not self._make_room(protect):
             return None
+        # a fresh resident insert supersedes any parked copy of the same
+        # prefix — release its host slot instead of leaking it
+        stale = self._host_entries.pop(key, None)
+        if stale is not None:
+            self.tiers.drop_slot(stale.slot)
         self.pool.share([page])
         e = _Entry(
             key=key,
@@ -309,9 +394,37 @@ class PrefixCache:
         del self._entries[victim.key]
         if victim.parent is not None:
             self._entries[victim.parent].n_children -= 1
+        self._demote(victim)
         self.pool.free([victim.page])
         self.evictions += 1
         return victim.page
+
+    def _demote(self, victim: _Entry) -> None:
+        """Park the evicted entry in the host tier before its page goes
+        back to the free list.  Full entries stash their insert-time
+        snapshot — those bits are already exact, so no boundary scrub is
+        owed; partial tails snapshot the live page through the boundary
+        scrub.  A full host store just drops the entry (pre-tier
+        behavior)."""
+        if self.tiers is None:
+            return
+        stale = self._host_entries.pop(victim.key, None)
+        if stale is not None:
+            self.tiers.drop_slot(stale.slot)
+        slot = (
+            self.tiers.stash_views(victim.snapshot)
+            if victim.snapshot is not None
+            else self.tiers.demote_page(victim.page)
+        )
+        if slot is None:
+            return
+        self._host_entries[victim.key] = _HostEntry(
+            key=victim.key,
+            slot=slot,
+            n_tokens=victim.n_tokens,
+            partial=victim.partial,
+        )
+        self.demotions += 1
 
     def evict(self, n_pages: int) -> int:
         """Reclaim up to ``n_pages`` pages for the allocator (admission /
@@ -338,4 +451,7 @@ class PrefixCache:
             "reuse_scrubs": self.reuse_scrubs,
             "reuse_ref_repairs": self.reuse_ref_repairs,
             "reuse_skips": self.reuse_skips,
+            "host_entries": len(self._host_entries),
+            "demotions": self.demotions,
+            "promotions": self.promotions,
         }

@@ -2,10 +2,15 @@
 
 The request lifecycle mirrors the production serving cores in the related
 file sets (vLLM/Bullet): a FIFO waiting queue, admission control against
-free pages, per-step page growth for running requests, and recompute-style
-preemption under page pressure — the evicted request frees its pages and
-rejoins the waiting queue with its generated-so-far tokens folded into the
-prefill prompt, so no output is lost.
+free pages, per-step page growth for running requests, and preemption under
+page pressure.  With a ``TierManager`` (``host_pages > 0`` and
+``swap_policy="swap"``) the victim's pages are *swapped out* to the
+host-memory exact tier — boundary-scrubbed on the way, re-materialized
+through the normal allocation path on re-admission, no re-prefill needed.
+Without one (or when the host store is full) preemption stays
+recompute-style: the evicted request frees its pages and rejoins the
+waiting queue with its generated-so-far tokens folded into the prefill
+prompt, so no output is lost either way.
 
 The scheduler is pure host-side bookkeeping; all device work (gather, step,
 scatter, repair) lives in the engine.  Deadlock freedom: a preemption victim
@@ -47,6 +52,7 @@ class Request:
     truncated: bool = False      # hit the block-table context cap
     cached_tokens: int = 0       # prefix tokens served from the cache
     cache_hit: Optional[Any] = None  # pending CacheHit (consumed by prepare)
+    swap: Optional[Any] = None   # pending SwapHandle (consumed by swap-in)
 
     @property
     def n_context(self) -> int:
@@ -75,14 +81,17 @@ class Scheduler:
         pool: PagedKVPool,
         cfg: ServingConfig,
         cache: Optional[Any] = None,
+        tiers: Optional[Any] = None,
     ):
         self.pool = pool
         self.cfg = cfg
         self.cache = cache                        # optional PrefixCache
+        self.tiers = tiers                        # optional TierManager
         self.waiting: collections.deque = collections.deque()
         self.running: List[Request] = []          # admission order
         self._free_slots = list(range(cfg.max_batch - 1, -1, -1))
         self.n_preemptions = 0
+        self.n_swap_preemptions = 0
 
     # -------------------------------------------------------------- lifecycle
     def add(self, req: Request) -> None:
@@ -108,6 +117,21 @@ class Scheduler:
         admitted = []
         while self.waiting and self._free_slots:
             req = self.waiting[0]
+            if req.swap is not None:
+                # a swapped-out request re-admits onto fresh pages through
+                # the normal allocation path; the engine writes the parked
+                # KV back before any decode reads it.  No cache lookup —
+                # its context is bit-complete in the host tier already.
+                pages = self._alloc(req.swap.n_pages)
+                if pages is None:
+                    break
+                self.waiting.popleft()
+                req.pages = pages
+                req.slot = self._free_slots.pop()
+                req.state = RequestState.RUNNING
+                self.running.append(req)
+                admitted.append(req)
+                continue
             hit = (
                 self.cache.lookup(req.prefill_tokens())
                 if self.cache is not None else None
@@ -188,16 +212,29 @@ class Scheduler:
         return None
 
     def preempt(self, req: Request) -> None:
-        """Recompute-style eviction: drop the pages, keep the tokens, rejoin
-        the head of the waiting queue.  "Drop" releases this request's
-        references only — pages the prefix cache (or another request) still
-        shares survive with their KV intact, so the re-prefill usually
-        re-admits straight onto them."""
+        """Eviction under page pressure.  With a tier manager and
+        ``swap_policy="swap"`` the victim's pages are parked in the
+        host-memory exact tier (boundary-scrubbed copies — the device
+        references are then released as usual) and the request re-admits
+        without re-prefilling.  Otherwise — no tiers, ``"recompute"``
+        policy, or a full host store — the classic recompute path: drop
+        the pages, keep the tokens, rejoin the head of the waiting queue.
+        Either way "drop" releases this request's references only — pages
+        the prefix cache (or another request) still shares survive with
+        their KV intact."""
         assert req.cache_hit is None, "preempting an unprepared cache hit"
+        assert req.swap is None, "preempting a request not yet swapped in"
+        handle = None
+        if self.tiers is not None and self.cfg.swap_policy == "swap":
+            handle = self.tiers.swap_out(req.pages)
         self.pool.free(req.pages)
         req.pages = []
-        req.pos = 0
-        req.cached_tokens = 0
+        if handle is not None:
+            req.swap = handle
+            self.n_swap_preemptions += 1
+        else:
+            req.pos = 0
+            req.cached_tokens = 0
         self._free_slots.append(req.slot)
         req.slot = None
         req.state = RequestState.WAITING

@@ -1,0 +1,289 @@
+"""Tiered KV: a host-memory *exact* page tier with repair at the boundary.
+
+The paper repairs values exactly when they cross from approximate memory
+into computation.  A second KV tier generalizes that idea to a memory
+hierarchy: the device pool dwells under relaxed refresh (approximate), the
+host store does not (exact, normally-refreshed DRAM) — so every device→host
+crossing is a legitimate repair boundary.  Concretely:
+
+  swap-out   one detector-scrub pass over the leaving pages (a page-scoped
+             ``RepairPlan`` tagged ``trigger="boundary"`` — the same "exact
+             island" pass the RuleSet API already models), THEN the host
+             copy.  The host tier therefore never holds a fatal lane: it is
+             clean by construction, like the paper's checkpoint islands.
+  swap-in    a trusted write back into freshly allocated device pages and a
+             ``page_clean_step`` re-stamp — the dwell model restarts from a
+             known-clean state, exactly as if the page had just been
+             scrubbed.  No detector runs: exact→approximate needs no repair.
+
+Two producers use the tier:
+
+  * ``Scheduler.preempt`` swaps the victim's pages out instead of dropping
+    them — preemption stops costing a full re-prefill (recompute survives
+    only as the fallback when the host store is full);
+  * ``PrefixCache`` eviction demotes cold entries to the host tier before
+    dropping them — a later hit promotes the page back and still skips the
+    suffix prefill.
+
+``HostPageStore`` mirrors the pool's discipline on the host side: slots
+leave a free list, double-free/read-after-free are hard errors (the PR-6
+refcount lesson), and buffers are plain pinned numpy — one page row per
+slot, same leaf layout as the pool, no dwell clock because the tier is
+exact.  The store copies pages (``PagedKVPool.pages_view`` is a device_get
+of the page rows), so freeing or recycling the device page afterwards can
+never invalidate the host copy.
+
+Byte accounting: every boundary scrub is charged to the owning
+``ApproxSpace.scrubbed_bytes`` (inside ``PagedKVPool.scrub_pages``) AND to
+the per-tier ``TierManager.boundary_scrub_bytes`` ledger, so tier-crossing
+repair cost is visible both globally and per mechanism.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..core import stats as stats_lib
+from ..runtime import ApproxSpace
+from ..runtime.plan import serving_scope
+from .config import ServingConfig
+from .pool import PagedKVPool, _is_float
+
+__all__ = ["HostPageStore", "SwapHandle", "TierManager"]
+
+
+class HostPageStore:
+    """Fixed-capacity host-side page buffer: the exact tier.
+
+    One numpy buffer per float pool leaf, shaped ``(host_pages, *row)`` —
+    a slot holds exactly one pool page row per leaf.  Non-float leaves
+    (none in the stock pool layouts) ride along as static copies, matching
+    the pool's ``_page_view`` convention so put/get trees are
+    tree-compatible with ``PagedKVPool.pages_view``/``write_pages``.
+    """
+
+    def __init__(self, pool_tree: Any, n_pages: int):
+        self.n_pages = int(n_pages)
+        leaves, self._treedef = jax.tree.flatten(pool_tree)
+        self._paged = [_is_float(leaf) for leaf in leaves]
+        self._buffers = [
+            np.zeros((self.n_pages,) + leaf.shape[1:], leaf.dtype)
+            if paged else np.asarray(leaf)
+            for leaf, paged in zip(leaves, self._paged)
+        ]
+        self._free: collections.deque = collections.deque(range(self.n_pages))
+        self._live = np.zeros(self.n_pages, bool)
+        # observation counters
+        self.puts = 0
+        self.gets = 0
+        self.peak_used = 0
+
+    # -------------------------------------------------------------- capacity
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - len(self._free)
+
+    # ------------------------------------------------------------------- i/o
+    def put(self, views: Any, n: int) -> List[int]:
+        """Store ``n`` page rows (leading axis of each float leaf in
+        ``views``) into ``n`` free slots; returns the slot ids in row
+        order.  Raises when the store cannot hold them — callers decide
+        the fallback (recompute / plain eviction), the store never
+        silently drops a page."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"host store full ({self.n_used}/{self.n_pages} used, "
+                f"need {n})"
+            )
+        slots = [self._free.popleft() for _ in range(n)]
+        idx = np.asarray(slots)
+        for buf, paged, v in zip(
+            self._buffers, self._paged, jax.tree.leaves(views)
+        ):
+            if paged:
+                buf[idx] = np.asarray(v)
+        self._live[idx] = True
+        self.puts += n
+        self.peak_used = max(self.peak_used, self.n_used)
+        return slots
+
+    def get(self, slots: Sequence[int]) -> Any:
+        """The stored rows for ``slots`` as a pool-shaped tree (leading
+        axis = len(slots)).  Fancy indexing copies, so the returned views
+        stay valid after the slots are freed and recycled."""
+        idx = np.asarray(list(slots))
+        if idx.size and not self._live[idx].all():
+            raise RuntimeError(f"reading freed host slot(s) in {slots}")
+        leaves = [
+            buf[idx] if paged else buf
+            for buf, paged in zip(self._buffers, self._paged)
+        ]
+        self.gets += idx.size
+        return jax.tree.unflatten(self._treedef, leaves)
+
+    def free(self, slots: Sequence[int]) -> None:
+        """Release slots back to the free list.  Double-free is a hard
+        error — the same silent-corruption class the pool's refcount
+        guards close (PR 6), on the host side."""
+        for s in slots:
+            if not 0 <= s < self.n_pages:
+                raise ValueError(f"bad host slot {s}")
+            if not self._live[s]:
+                raise RuntimeError(f"double free of host slot {s}")
+            self._live[s] = False
+            self._free.append(s)
+
+
+@dataclasses.dataclass
+class SwapHandle:
+    """A preempted request's context parked in the exact tier: host slots
+    in block-table page order.  Consumed exactly once by ``swap_in``."""
+
+    slots: List[int]
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.slots)
+
+
+class TierManager:
+    """Swap orchestration between the approximate device pool and the exact
+    host store — every crossing runs through here so the boundary-scrub
+    invariant (device→host implies one detector pass) and the byte ledger
+    cannot be bypassed."""
+
+    def __init__(
+        self, pool: PagedKVPool, space: ApproxSpace, cfg: ServingConfig
+    ):
+        self.pool = pool
+        self.space = space
+        self.cfg = cfg
+        self.host = HostPageStore(pool.tree, cfg.host_pages)
+        # per-tier ledger + swap counters (Engine.tier_stats)
+        self.boundary_scrub_bytes = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swapped_pages_out = 0
+        self.swapped_pages_in = 0
+        self.recompute_fallbacks = 0
+        self.demotions = 0
+        self.promotions = 0
+
+    # ------------------------------------------------------- boundary scrub
+    def _boundary_scrub(self, pages: Sequence[int]) -> None:
+        """One page-scoped repair pass over ``pages`` before they cross to
+        the host tier, tagged ``"boundary"`` so exact-island rule gating
+        applies.  Skipped when serving repair is off (``repair="off"`` is
+        the oracle arm: tier crossings must not repair either).  Bytes are
+        charged to ``ApproxSpace.scrubbed_bytes`` (inside the pool scrub)
+        and mirrored into the per-tier ledger."""
+        if serving_scope(self.cfg.repair) == "none":
+            return
+        before = self.pool.scrubbed_bytes
+        delta = self.pool.scrub_pages(
+            pages, stats_lib.zeros(), trigger="boundary"
+        )
+        self.space.record(delta)
+        self.boundary_scrub_bytes += self.pool.scrubbed_bytes - before
+
+    # -------------------------------------------------------- request swaps
+    def swap_out(self, pages: Sequence[int]) -> Optional[SwapHandle]:
+        """Scrub-then-copy ``pages`` into the host tier.  Returns ``None``
+        (and counts a recompute fallback) when the store cannot hold them
+        — the caller keeps the recompute-style preemption path.  The
+        device pages are NOT freed here; ownership stays with the caller
+        (the scheduler frees its references right after)."""
+        pages = list(pages)
+        if not pages or len(pages) > self.host.n_free:
+            self.recompute_fallbacks += 1
+            return None
+        self._boundary_scrub(pages)
+        views = self.pool.pages_view(pages)
+        slots = self.host.put(views, len(pages))
+        self.swap_outs += 1
+        self.swapped_pages_out += len(pages)
+        return SwapHandle(slots=slots)
+
+    def swap_in(self, handle: SwapHandle, pages: Sequence[int]) -> None:
+        """Write a parked context back into freshly allocated device pages
+        (the normal ``PagedKVPool.alloc`` path supplies ``pages``) and
+        release the host slots.  The exact tier is trusted: no detector
+        runs, and ``mark_clean`` re-stamps the dwell clock — the pages are
+        as clean as a just-scrubbed page."""
+        pages = list(pages)
+        assert len(pages) == handle.n_pages, (pages, handle)
+        self.pool.write_pages(pages, self.host.get(handle.slots))
+        self.pool.mark_clean(pages)
+        self.host.free(handle.slots)
+        self.swap_ins += 1
+        self.swapped_pages_in += len(pages)
+
+    # --------------------------------------------------- prefix-cache moves
+    def demote_page(self, page: int) -> Optional[int]:
+        """Park one cold cache page in the host tier (boundary scrub +
+        copy).  Returns the host slot, or ``None`` when the store is full
+        — the cache then just drops the entry, as before tiers."""
+        if self.host.n_free < 1:
+            return None
+        self._boundary_scrub([page])
+        slot = self.host.put(self.pool.pages_view([page]), 1)[0]
+        self.demotions += 1
+        return slot
+
+    def stash_views(self, views: Any) -> Optional[int]:
+        """Park one page-row view that is ALREADY exact (a prefix-cache
+        insert-time snapshot — bits from before any dwell) without a
+        boundary scrub: the data never lived un-scrubbed in the
+        approximate tier, so there is nothing to detect."""
+        if self.host.n_free < 1:
+            return None
+        slot = self.host.put(views, 1)[0]
+        self.demotions += 1
+        return slot
+
+    def promote_page(self, slot: int) -> Optional[int]:
+        """Re-materialize one parked page through the normal allocation
+        path.  Returns the new device page id (refcount 1, dwell
+        re-stamped) or ``None`` when the pool is full — the host entry
+        stays parked for a later attempt."""
+        pages = self.pool.alloc(1)
+        if pages is None:
+            return None
+        self.pool.write_pages(pages, self.host.get([slot]))
+        self.pool.mark_clean(pages)
+        self.host.free([slot])
+        self.promotions += 1
+        return pages[0]
+
+    def slot_views(self, slot: int) -> Any:
+        """The stored rows for one slot (leading-axis-1 tree) — the exact
+        bits a promoted full entry can reuse as its reference snapshot."""
+        return self.host.get([slot])
+
+    def drop_slot(self, slot: int) -> None:
+        """Discard a parked page (its cache entry was superseded)."""
+        self.host.free([slot])
+
+    # ------------------------------------------------------------ observation
+    def stats(self) -> Dict[str, int]:
+        return {
+            "host_pages": self.host.n_pages,
+            "host_used": self.host.n_used,
+            "host_peak_used": self.host.peak_used,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "swapped_pages_out": self.swapped_pages_out,
+            "swapped_pages_in": self.swapped_pages_in,
+            "boundary_scrub_bytes": self.boundary_scrub_bytes,
+            "recompute_fallbacks": self.recompute_fallbacks,
+            "demotions": self.demotions,
+            "promotions": self.promotions,
+        }

@@ -67,6 +67,38 @@ def test_kernel_matches_oracle_with_poisoned_pages(policy, constant):
     assert int(counts[pa.EV_TOTAL]) == 2
 
 
+def test_kernel_per_operand_fills_match_oracle():
+    """Per-tile operand-indexed fill selection: K repairs with zero, V with
+    a constant — one kernel call, bit-exact against the oracle given the
+    same per-operand fills."""
+    key = jax.random.PRNGKey(11)
+    k_pages, v_pages = _pool(key)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (2, 4, 16), jnp.float32)
+    k_pages = k_pages.at[2, 1, 1, 0, 3].set(jnp.nan)
+    v_pages = v_pages.at[5, 1, 0, 1, 0].set(jnp.inf)
+    bt = jnp.asarray([[0, 2, 8], [5, 8, 8]], jnp.int32)
+    pos = jnp.asarray([9, 3], jnp.int32)
+
+    out, page_counts, counts = pa.paged_attention(
+        q, k_pages, v_pages, bt, pos, layer=1,
+        policy_k="zero", constant_k=0.0,
+        policy_v="constant", constant_v=0.75,
+    )
+    ref_out, slot = ref.paged_attention_ref(
+        q, k_pages, v_pages, bt, pos, layer=1,
+        policy_k="zero", constant_k=0.0,
+        policy_v="constant", constant_v=0.75,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out), atol=1e-5)
+    assert int(page_counts[2]) == 1 and int(page_counts[5]) == 1
+    # a mixed-fill call must differ from the all-zero-fill one on the V
+    # operand (the Inf lane sits at a position the second request attends)
+    out_zero, _, _ = pa.paged_attention(
+        q, k_pages, v_pages, bt, pos, layer=1, policy="zero",
+    )
+    assert not np.allclose(np.asarray(out), np.asarray(out_zero))
+
+
 def test_kernel_null_tail_masking():
     """Null-padded tail slots must not influence the output: garbage (even
     huge finite values) parked in the null page stays masked by position."""
@@ -251,6 +283,48 @@ def test_fused_respects_reactive_rule_gating(model_params):
     )
     assert eng.paged_plan is not None
     assert all(d is None for d in eng.paged_plan.detectors.values())
+
+
+def test_mixed_fill_ruleset_stays_fused(model_params):
+    """A RuleSet whose K and V rules fill differently no longer forces the
+    gathered fallback: the plan carries per-leaf fills and the fused path
+    stays token-identical to the gathered one under injected flips."""
+    model, params = model_params
+    rules = rules_lib.RuleSet(entries=(
+        (r".*/k$", rules_lib.RepairRule(fill="zero")),
+        (r".*", rules_lib.RepairRule(fill=0.5)),
+    ))
+
+    def build():
+        eng = Engine(
+            model, params,
+            ServingConfig(page_size=4, n_pages=10, max_batch=4,
+                          max_pages_per_request=5, ber=1e-3, seed=3,
+                          sweep_interval=8, sweep_pages=2),
+            space=ApproxSpace(ApproxConfig(mode="memory", rules=rules)),
+        )
+        for i in range(8):
+            prompt = jax.random.randint(
+                jax.random.PRNGKey(i), (5 + i % 3,), 1, 96
+            )
+            eng.add_request(prompt, max_new=6)
+        return eng
+
+    fused = build()
+    assert fused.paged_plan is not None and fused._paged_fn is not None
+    assert fused.paged_plan.fills == {
+        "k": ("zero", 0.0), "v": ("constant", 0.5),
+    }
+    res_f = fused.run()
+
+    legacy = build()
+    legacy._paged_fn = None                      # force the gathered path
+    res_g = legacy.run()
+
+    assert fused.stats_dict()["events"] > 0      # mixed fills actually fired
+    for rid in res_f:
+        assert res_f[rid]["tokens"] == res_g[rid]["tokens"]
+    assert fused.stats_dict() == legacy.stats_dict()
 
 
 # ----------------------------------------------------------- plan placement

@@ -1,0 +1,319 @@
+"""Tiered KV: host-memory exact tier with repair-at-the-boundary swap.
+
+Covers the PR acceptance contract: swap round trips are bit-identical at
+BER=0; under injected flips a swapped-in page equals the detector-scrubbed
+device page (the boundary scrub IS the reactive detector pass) with every
+crossing ledgered through ``ApproxSpace.scrubbed_bytes``; host copies
+survive device-page recycling and shared refcounts (the PR-6 double-free
+discipline extends to the host tier); preemption storms produce identical
+tokens whether victims swap or recompute, with the swap arm re-prefilling
+zero tokens; a full host store falls back to recompute without deadlock;
+and prefix-cache eviction demotes through — and promotes back from — the
+host tier.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_transformer
+from repro.core import stats as stats_lib
+from repro.runtime import ApproxSpace
+from repro.serving import (
+    Engine,
+    PagedKVPool,
+    ServingConfig,
+    TierManager,
+)
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    return tiny_transformer()
+
+
+def _cfg(**kw):
+    base = dict(page_size=4, n_pages=10, max_batch=4,
+                max_pages_per_request=5, seed=3)
+    base.update(kw)
+    return ServingConfig(**base)
+
+
+def _tiers(model, **kw):
+    space = ApproxSpace(mode="memory")
+    cfg = _cfg(host_pages=kw.pop("host_pages", 6), **kw)
+    pool = PagedKVPool(model, space, cfg)
+    return pool, space, TierManager(pool, space, cfg)
+
+
+def _random_views(pool, pages, seed):
+    """A pool-shaped views tree (leading axis = len(pages)) of finite
+    random rows — distinct per seed, so recycled pages are detectably
+    overwritten."""
+    template = pool.pages_view(pages)
+    leaves, treedef = jax.tree.flatten(template)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    fresh = [
+        np.asarray(jax.random.normal(k, leaf.shape, leaf.dtype))
+        for k, leaf in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, fresh)
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------------- config
+def test_tier_config_validation():
+    with pytest.raises(ValueError, match="swap_policy"):
+        ServingConfig(swap_policy="parachute")
+    with pytest.raises(ValueError, match="host_pages"):
+        ServingConfig(host_pages=-1)
+    # host DRAM is the cheap tier: it may exceed the device pool
+    assert ServingConfig(n_pages=8, host_pages=64).host_pages == 64
+
+
+# -------------------------------------------------------------- round trips
+def test_swap_round_trip_bit_identical_at_zero_ber(model_params):
+    """swap_out -> device churn -> swap_in restores the exact bits: the
+    boundary scrub over clean pages is the identity, and host copies are
+    independent of the device pages they came from."""
+    model, _ = model_params
+    pool, space, tiers = _tiers(model)
+    pages = pool.alloc(3)
+    pool.write_pages(pages, _random_views(pool, pages, seed=1))
+    before = pool.pages_view(pages)
+
+    handle = tiers.swap_out(pages)
+    assert handle is not None and handle.n_pages == 3
+    pool.free(pages)
+    # churn: recycle the freed pages under different contents, then free
+    churn = pool.alloc(5)
+    pool.write_pages(churn, _random_views(pool, churn, seed=2))
+    pool.free(churn)
+
+    fresh = pool.alloc(3)
+    tiers.swap_in(handle, fresh)
+    _assert_trees_equal(before, pool.pages_view(fresh))
+    assert tiers.host.n_used == 0                 # slots came back
+    assert tiers.swap_outs == tiers.swap_ins == 1
+    assert tiers.swapped_pages_out == tiers.swapped_pages_in == 3
+
+
+def test_swap_in_equals_detector_scrubbed_page_under_flips(model_params):
+    """The boundary-scrub invariant: write the SAME poisoned rows into two
+    pages, round-trip one through the tier, scrub the other directly —
+    bit-identical results, and the crossing is ledgered per tier AND in
+    ``ApproxSpace.scrubbed_bytes``."""
+    model, _ = model_params
+    pool, space, tiers = _tiers(model)
+    p0, p1 = pool.alloc(2)
+    poisoned = jax.tree.map(
+        lambda v: np.array(v), _random_views(pool, [p0], seed=3)
+    )
+    for leaf in jax.tree.leaves(poisoned):
+        leaf[0, 0, 1, 0, 3] = np.nan
+        leaf[0, 1, 0, 1, 0] = np.inf
+    pool.write_pages([p0], poisoned)
+    pool.write_pages([p1], poisoned)
+    pool.now = 7                                  # accumulated dwell
+    assert pool.dwell(p0) == 7
+
+    handle = tiers.swap_out([p0])
+    pool.free([p0])
+    fresh = pool.alloc(1)
+    tiers.swap_in(handle, fresh)
+
+    pool.scrub_pages([p1], stats_lib.zeros(), trigger="boundary")
+    swapped = pool.pages_view(fresh)
+    scrubbed = pool.pages_view([p1])
+    _assert_trees_equal(swapped, scrubbed)
+    for leaf in jax.tree.leaves(swapped):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+    # ledger: the tier charged exactly one page row, mirrored globally
+    assert tiers.boundary_scrub_bytes > 0
+    assert pool.scrubbed_bytes >= tiers.boundary_scrub_bytes
+    assert space.scrubbed_bytes >= tiers.boundary_scrub_bytes
+    # the boundary pass's findings reached the unified stats
+    d = stats_lib.as_dict(space.stats)
+    assert d["nan_found"] >= 2 and d["inf_found"] >= 2
+    # dwell restarts from a known-clean state after swap-in
+    assert pool.dwell(fresh[0]) == 0
+
+
+def test_host_copy_survives_recycling_and_shared_refcounts(model_params):
+    """Satellite: freeing (or re-writing) the device page after swap-out
+    must never invalidate the host copy, and the PR-6 refcount discipline
+    still holds around a swap."""
+    model, _ = model_params
+    pool, space, tiers = _tiers(model)
+    (page,) = pool.alloc(1)
+    pool.write_pages([page], _random_views(pool, [page], seed=5))
+    expected = pool.pages_view([page])
+
+    pool.share([page])                            # a second holder
+    handle = tiers.swap_out([page])
+    pool.free([page])                             # rc 1 — still resident
+    assert not pool.is_free(page)
+    # the surviving holder keeps writing: host copy must be unaffected
+    pool.write_pages([page], _random_views(pool, [page], seed=6))
+    pool.free([page])                             # rc 0 — recycled
+    assert pool.is_free(page)
+    with pytest.raises(RuntimeError, match="double free"):
+        pool.free([page])
+
+    fresh = pool.alloc(1)                         # the normal alloc path
+    tiers.swap_in(handle, fresh)
+    _assert_trees_equal(expected, pool.pages_view(fresh))
+
+
+# ------------------------------------------------------------------- guards
+def test_host_store_and_pool_guards(model_params):
+    model, _ = model_params
+    pool, space, tiers = _tiers(model, host_pages=2)
+    pages = pool.alloc(3)
+    one = pool.pages_view([pages[2]])
+
+    # oversize swap-out declines and counts the fallback
+    assert tiers.swap_out(pages) is None
+    assert tiers.recompute_fallbacks == 1
+
+    handle = tiers.swap_out(pages[:2])
+    assert handle is not None and tiers.host.n_free == 0
+    with pytest.raises(RuntimeError, match="host store full"):
+        tiers.host.put(one, 1)
+    assert tiers.demote_page(pages[2]) is None    # cache path declines too
+    assert tiers.stash_views(one) is None
+
+    tiers.host.free(handle.slots)
+    with pytest.raises(RuntimeError, match="double free"):
+        tiers.host.free(handle.slots)
+    with pytest.raises(RuntimeError, match="freed host slot"):
+        tiers.host.get(handle.slots)
+    with pytest.raises(ValueError, match="bad host slot"):
+        tiers.host.free([99])
+
+    # device-side mirror: writing into a freed/bad page is a hard error
+    pool.free(pages)
+    with pytest.raises(RuntimeError, match="free page"):
+        pool.write_pages([pages[2]], one)
+    with pytest.raises(ValueError, match="bad page"):
+        pool.write_pages([pool.null_page + 1], one)
+
+
+# ------------------------------------------------------------------- engine
+def _storm_engine(model, params, **kw):
+    """8 staggered-length requests over a 10-page pool: page pressure
+    guarantees preemptions (the PR-5/6 storm workload)."""
+    eng = Engine(model, params, _cfg(
+        sweep_interval=8, sweep_pages=2, **kw
+    ))
+    for i in range(8):
+        prompt = jax.random.randint(jax.random.PRNGKey(i), (5 + i % 3,), 1, 96)
+        eng.add_request(prompt, max_new=6)
+    return eng
+
+
+def test_preemption_storm_swap_matches_recompute_tokens(model_params):
+    """Token parity between the swap and recompute arms at BER=0, with the
+    swap arm re-prefilling ZERO tokens — the cost swap-out exists to
+    avoid — and every crossing ledgered."""
+    model, params = model_params
+    swap = _storm_engine(model, params, host_pages=12)
+    res_s = swap.run()
+    rec = _storm_engine(model, params, host_pages=0)
+    res_r = rec.run()
+
+    assert rec.sched.n_preemptions > 0            # the storm really hit
+    assert rec.prefill_tokens_recomputed > 0
+    assert rec.tier_stats() == {
+        "enabled": False, "swap_policy": "swap",
+        "n_swap_preemptions": 0,
+        "prefill_tokens_recomputed": rec.prefill_tokens_recomputed,
+    }
+
+    ts = swap.tier_stats()
+    assert ts["enabled"] and ts["n_swap_preemptions"] > 0
+    assert ts["swap_outs"] == ts["swap_ins"] > 0
+    assert ts["swapped_pages_out"] == ts["swapped_pages_in"] > 0
+    assert ts["host_used"] == 0                   # every parked page returned
+    assert ts["recompute_fallbacks"] == 0
+    assert swap.prefill_tokens_recomputed == 0
+    assert ts["boundary_scrub_bytes"] > 0
+    assert swap.pool.scrubbed_bytes >= ts["boundary_scrub_bytes"]
+    assert swap.space.scrubbed_bytes >= ts["boundary_scrub_bytes"]
+
+    for rid in res_s:
+        assert res_s[rid]["tokens"] == res_r[rid]["tokens"]
+
+
+def test_swap_policy_recompute_keeps_pre_tier_preemption(model_params):
+    """swap_policy="recompute" with a host store is the comparison arm:
+    preemption drops pages exactly as before tiers existed."""
+    model, params = model_params
+    eng = _storm_engine(model, params, host_pages=12,
+                        swap_policy="recompute")
+    eng.run()
+    ts = eng.tier_stats()
+    assert ts["enabled"] and ts["n_swap_preemptions"] == 0
+    assert ts["swap_outs"] == 0 and ts["swap_ins"] == 0
+    assert eng.sched.n_preemptions > 0
+    assert eng.prefill_tokens_recomputed > 0
+
+
+def test_host_store_full_falls_back_to_recompute(model_params):
+    """A one-slot host store cannot hold any multi-page victim: every
+    preemption falls back to recompute, the run still terminates, and
+    tokens match the pure-recompute arm."""
+    model, params = model_params
+    tiny = _storm_engine(model, params, host_pages=1)
+    res_t = tiny.run()                            # no deadlock
+    rec = _storm_engine(model, params, host_pages=0)
+    res_r = rec.run()
+
+    ts = tiny.tier_stats()
+    assert ts["recompute_fallbacks"] > 0
+    assert ts["n_swap_preemptions"] == 0 and ts["swap_outs"] == 0
+    assert tiny.prefill_tokens_recomputed == rec.prefill_tokens_recomputed
+    for rid in res_t:
+        assert res_t[rid]["tokens"] == res_r[rid]["tokens"]
+
+
+# ------------------------------------------------------------- prefix cache
+def test_cache_demotes_and_promotes_through_host_tier(model_params):
+    """LRU eviction demotes cold entries to the host tier; a later hit on
+    the demoted prefix promotes the pages back through the normal alloc
+    path and still skips the prefix prefill — token-identical to the
+    no-cache engine at BER=0."""
+    model, params = model_params
+    shared_a = [1, 2, 3, 4, 5, 6, 7, 8]
+    shared_b = [11, 12, 13, 14, 15, 16, 17, 18]
+    prompts = [
+        shared_a + [9],
+        shared_b + [19],                          # insert evicts A's pages
+        shared_a + [10],                          # ... which promote back
+    ]
+
+    def run(cfg):
+        eng = Engine(model, params, cfg)
+        outs = []
+        for p in prompts:
+            rid = eng.add_request(p, max_new=3)
+            eng.run()
+            outs.append(eng.results[rid]["tokens"])
+        return eng, outs
+
+    tiered, toks_t = run(_cfg(n_pages=16, prefix_cache=True,
+                              max_cached_pages=2, host_pages=8))
+    plain, toks_p = run(_cfg(n_pages=16))
+    assert toks_t == toks_p
+
+    s = tiered.cache_stats()
+    assert s["demotions"] > 0 and s["promotions"] > 0
+    assert s["evictions"] > 0
+    assert tiered.prefill_tokens_saved > 0
+    ts = tiered.tier_stats()
+    assert ts["demotions"] == s["demotions"]
+    assert ts["promotions"] == s["promotions"]
