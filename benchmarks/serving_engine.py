@@ -5,25 +5,33 @@ The paper's claim at serving granularity: reactive repair should pay
 proportionally to what *faulted*, not to what is *resident*.  The engine
 runs the same mixed prefill/decode workload (more concurrent requests than
 the page pool can hold at once — admission control + preemption active)
-under three arms:
+under five arms:
 
-  whole   any fault among the touched pages scrubs the entire pool (the
-          pre-engine ``scrub_cache`` baseline); gathered-view decode
-  page    only the faulted pages are scrubbed (reactive, page-granular);
-          gathered-view decode — the PR-2/PR-4 gather path
-  paged   page repair + the fused paged-attention kernel: decode straight
-          off the pool (zero full-view copies), detection fused into the
-          read (README §Serving engine)
+  whole          any fault among the touched pages scrubs the entire pool
+                 (the pre-engine ``scrub_cache`` baseline); gathered-view
+                 prefill + decode
+  page           only the faulted pages are scrubbed (reactive,
+                 page-granular); gathered-view prefill + decode — the
+                 PR-2/PR-4 gather path
+  paged          page repair + the fused paged-attention kernel: decode
+                 straight off the pool, detection fused into the read; the
+                 prefill still gathers (the PR-5 half-fused row)
+  prefill_paged  the full kernel family: chunked paged prefill + fused
+                 decode — ZERO full-view copies across the whole request
+                 lifecycle (README §Serving engine)
+  split_k        the full family with split-K flash decoding: the 8-page
+                 walk partitioned across grid cells, merged by log-sum-exp
 
 CSV: name,us_per_call,derived — us_per_call is us/token (wall-clock);
-derived carries scrubbed-bytes/token, the event counters, and (paged arm)
-the pool-copy counts.  Asserted every run: at BER > 0 the page arm comes in
-strictly below the whole arm on scrubbed-bytes/token; the paged arm is *no
-worse* than the gather path — identical tokens emitted and no more
-scrubbed bytes/token — and issues zero decode-path full-view copies.
-Wall-clock is reported but not asserted for the paged arm: off-TPU the
-Pallas kernel runs in interpret mode (a Python-level simulator), which
-says nothing about the lowered kernel this arm exists for.
+derived carries scrubbed-bytes/token, the event counters, and the
+pool-copy counts.  Asserted every run: at BER > 0 the page arm comes in
+strictly below the whole arm on scrubbed-bytes/token; every fused arm is
+*no worse* than the gather path — identical tokens emitted and no more
+scrubbed bytes/token; the fully-fused arms issue ZERO full-view copies;
+the split-K arm really resolves >1 splits.  Wall-clock is reported but not
+asserted for the fused arms: off-TPU the Pallas kernels run in interpret
+mode (a Python-level simulator), which says nothing about the lowered
+kernels these arms exist for.
 
 A fourth comparison runs the tiered-KV arms (README §Serving engine —
 "Tiered KV"): the same storm workload with preemption resolved by
@@ -56,7 +64,16 @@ from repro.serving import Engine, ServingConfig
 BERS = (0.0, 1e-4, 1e-3)
 SMOKE_BERS = (0.0, 1e-3)
 
-ARMS = ("whole", "page", "paged")
+ARMS = ("whole", "page", "paged", "prefill_paged", "split_k")
+
+# per-arm engine switches: (repair, paged_decode, paged_prefill, split_k)
+_ARM_CFG = {
+    "whole": ("whole", "off", "off", 1),
+    "page": ("page", "off", "off", 1),
+    "paged": ("page", "auto", "off", 1),
+    "prefill_paged": ("page", "auto", "auto", 1),
+    "split_k": ("page", "auto", "auto", 0),     # auto: M=8 -> 4 splits
+}
 
 
 def _model():
@@ -87,20 +104,29 @@ def run(smoke: bool = False):
     for ber in SMOKE_BERS if smoke else BERS:
         per_mode = {}
         for arm in ARMS:
+            repair, paged_decode, paged_prefill, split_k = _ARM_CFG[arm]
             engine = Engine(
                 model,
                 params,
                 ServingConfig(
                     page_size=4, n_pages=10, max_batch=4,
-                    max_pages_per_request=6,
-                    repair="whole" if arm == "whole" else "page",
-                    paged_decode="auto" if arm == "paged" else "off",
+                    max_pages_per_request=8,
+                    repair=repair, paged_decode=paged_decode,
+                    paged_prefill=paged_prefill, split_k=split_k,
                     ber=ber, sweep_interval=16, sweep_pages=2, seed=7,
                 ),
             )
-            if arm == "paged":
+            if paged_decode == "auto":
                 assert engine.paged_plan is not None, (
                     "fused decode must engage on the bench config"
+                )
+            if paged_prefill == "auto":
+                assert engine._prefill_fn is not None, (
+                    "fused prefill must engage on the bench config"
+                )
+            if arm == "split_k":
+                assert engine._split_k > 1, (
+                    "split-K must resolve >1 splits on the bench config"
                 )
             _workload(engine, n_requests, max_new)
             t0 = time.perf_counter()
@@ -136,17 +162,23 @@ def run(smoke: bool = False):
                 per_mode["page"]["scrubbed_bytes_per_token"]
                 < per_mode["whole"]["scrubbed_bytes_per_token"]
             ), "page-granular repair must scrub strictly fewer bytes/token"
-        # the fused paged arm is NO WORSE than the gather path: identical
-        # token streams (same repair math, fused into the read) and no more
-        # repair traffic — and its decode issues zero full-view copies
-        assert per_mode["paged"]["tokens"] == per_mode["page"]["tokens"], (
-            "paged decode drifted from the gathered path"
-        )
-        assert (
-            per_mode["paged"]["scrubbed_bytes_per_token"]
-            <= per_mode["page"]["scrubbed_bytes_per_token"]
-        ), "paged decode must not scrub more bytes/token than the gather path"
+        # every fused arm is NO WORSE than the gather path: identical token
+        # streams (same repair math, fused into the read) and no more
+        # repair traffic
+        for arm in ("paged", "prefill_paged", "split_k"):
+            assert per_mode[arm]["tokens"] == per_mode["page"]["tokens"], (
+                f"{arm} drifted from the gathered path"
+            )
+            assert (
+                per_mode[arm]["scrubbed_bytes_per_token"]
+                <= per_mode["page"]["scrubbed_bytes_per_token"]
+            ), f"{arm} must not scrub more bytes/token than the gather path"
         assert per_mode["paged"]["pool_gathers"] < per_mode["page"]["pool_gathers"]
+        # the fully-fused arms retire EVERY full-view copy — admission,
+        # prefill and decode all run straight off the pool
+        for arm in ("prefill_paged", "split_k"):
+            assert per_mode[arm]["pool_gathers"] == 0, arm
+            assert per_mode[arm]["pool_scatters"] == 0, arm
     return rows, arm_metrics
 
 
@@ -226,7 +258,8 @@ def run_tiered(smoke: bool = False):
 def main(smoke: bool = False, out: Optional[str] = None):
     print("# serving_engine: continuous batching over the paged KV pool;")
     print("# us_per_call is us/token; page must beat whole on bytes/token;")
-    print("# paged (fused kernel) must match page tokens with zero decode copies")
+    print("# fused arms must match page tokens; prefill_paged/split_k run the")
+    print("# whole lifecycle off the pool (zero full-view copies)")
     print("name,us_per_call,derived")
     rows, arm_metrics = run(smoke=smoke)
     for name, us, derived in rows:

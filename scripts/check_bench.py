@@ -89,9 +89,12 @@ def check(path: str) -> int:
             if key not in serving:
                 missing.append(f"sections.serving.{key}")
         rows = serving.get("rows") or {}
-        checked += 1
-        if not any(name.startswith("serving_paged_") for name in rows):
-            missing.append("sections.serving.rows.serving_paged_*")
+        for prefix in (
+            "serving_paged_", "serving_prefill_paged_", "serving_split_k_"
+        ):
+            checked += 1
+            if not any(name.startswith(prefix) for name in rows):
+                missing.append(f"sections.serving.rows.{prefix}*")
         for name, row in rows.items():
             for key in SERVING_ROW_KEYS:
                 checked += 1

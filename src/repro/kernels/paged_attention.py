@@ -67,6 +67,37 @@ NAN_K, INF_K, EV_K, NAN_V, INF_V, EV_V, EV_TOTAL = range(7)
 DEFAULT_DETECTOR = "default"
 
 
+def _repair_and_count(
+    consts_ref, k_ref, v_ref, slot_ref, counts_ref,
+    *, policy_k: str, constant_k: float, policy_v: str, constant_v: float,
+):
+    """Fused on-read repair of one page's K/V rows (the trap) — shared by
+    every kernel in the paged family.  Per-operand fill selection: each
+    tile repairs with ITS operand's rule fill (row 0 = K, row 1 = V), so a
+    mixed-fill RuleSet compiles into one kernel instead of forcing the
+    gathered fallback.  Accumulates the AT_* event counts and writes the
+    per-page-slot fatal count the reactive repair manager consumes."""
+    k_fixed, nan_k, inf_k = common.repair_tile(
+        k_ref[0, 0], policy=policy_k, constant=constant_k,
+        consts=consts_ref[0],
+    )
+    v_fixed, nan_v, inf_v = common.repair_tile(
+        v_ref[0, 0], policy=policy_v, constant=constant_v,
+        consts=consts_ref[1],
+    )
+    ev_k = ((nan_k + inf_k) > 0).astype(jnp.int32)
+    ev_v = ((nan_v + inf_v) > 0).astype(jnp.int32)
+    counts_ref[NAN_K] += nan_k
+    counts_ref[INF_K] += inf_k
+    counts_ref[EV_K] += ev_k
+    counts_ref[NAN_V] += nan_v
+    counts_ref[INF_V] += inf_v
+    counts_ref[EV_V] += ev_v
+    counts_ref[EV_TOTAL] += ((ev_k + ev_v) > 0).astype(jnp.int32)
+    slot_ref[0, 0] = nan_k + inf_k + nan_v + inf_v
+    return k_fixed, v_fixed
+
+
 def _paged_kernel(
     consts_ref,      # int32[2, 8]  detector constants: row 0 K, row 1 V
     bt_ref,          # int32[B, M]  block tables (also drives the index maps)
@@ -92,29 +123,11 @@ def _paged_kernel(
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    # ---- fused on-read repair of this page's K/V rows (the trap) ----
-    # per-operand fill selection: each tile repairs with ITS operand's
-    # rule fill (row 0 = K, row 1 = V), so a mixed-fill RuleSet compiles
-    # into one kernel instead of forcing the gathered-decode fallback
-    k_fixed, nan_k, inf_k = common.repair_tile(
-        k_ref[0, 0], policy=policy_k, constant=constant_k,
-        consts=consts_ref[0],
+    k_fixed, v_fixed = _repair_and_count(
+        consts_ref, k_ref, v_ref, slot_ref, counts_ref,
+        policy_k=policy_k, constant_k=constant_k,
+        policy_v=policy_v, constant_v=constant_v,
     )
-    v_fixed, nan_v, inf_v = common.repair_tile(
-        v_ref[0, 0], policy=policy_v, constant=constant_v,
-        consts=consts_ref[1],
-    )
-    ev_k = ((nan_k + inf_k) > 0).astype(jnp.int32)
-    ev_v = ((nan_v + inf_v) > 0).astype(jnp.int32)
-    counts_ref[NAN_K] += nan_k
-    counts_ref[INF_K] += inf_k
-    counts_ref[EV_K] += ev_k
-    counts_ref[NAN_V] += nan_v
-    counts_ref[INF_V] += inf_v
-    counts_ref[EV_V] += ev_v
-    counts_ref[EV_TOTAL] += ((ev_k + ev_v) > 0).astype(jnp.int32)
-    # the per-page detection the reactive repair manager consumes
-    slot_ref[0, 0] = nan_k + inf_k + nan_v + inf_v
 
     # ---- online softmax over this page ----
     H = n_kv * group
@@ -299,6 +312,486 @@ def paged_attention(
     out, slot_counts, counts = paged_attention_raw(
         q, k_pages, v_pages, block_tables, positions,
         jnp.asarray(layer, jnp.int32), **kw,
+    )
+    page_counts = jnp.zeros((k_pages.shape[0],), jnp.int32).at[
+        jnp.asarray(block_tables, jnp.int32)
+    ].add(slot_counts)
+    return out, page_counts, counts
+
+
+# --------------------------------------------------------------------------
+# Chunked-q paged prefill: admission attends straight off the pool too.
+# --------------------------------------------------------------------------
+def _paged_prefill_kernel(
+    consts_ref,      # int32[2, 8]  detector constants: row 0 K, row 1 V
+    bt_ref,          # int32[B, M]  block tables (also drives the index maps)
+    qstart_ref,      # int32[B]     context position of chunk row 0
+    layer_ref,       # int32[1]     which L row of the pool leaves
+    q_ref, k_ref, v_ref,
+    o_ref, slot_ref, counts_ref,
+    acc_ref, m_ref, l_ref,
+    *, sm_scale: float,
+    policy_k: str, constant_k: float, policy_v: str, constant_v: float,
+    pg: int, n_kv: int, group: int, nm: int, nc: int, out_dtype,
+):
+    b, j = pl.program_id(0), pl.program_id(1)
+    step = b * pl.num_programs(1) + j
+
+    @pl.when(step == 0)
+    def _init_counts():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    @pl.when(j == 0)
+    def _init_state():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_fixed, v_fixed = _repair_and_count(
+        consts_ref, k_ref, v_ref, slot_ref, counts_ref,
+        policy_k=policy_k, constant_k=constant_k,
+        policy_v=policy_v, constant_v=constant_v,
+    )
+
+    # ---- online softmax: the whole q chunk against this page ----
+    Dh = q_ref.shape[-1]
+    R = nc * n_kv * group                                    # (C, H) rows
+    q = q_ref[0].astype(jnp.float32).reshape(nc, n_kv, group, Dh)
+    qh = jnp.moveaxis(q, 1, 0).reshape(n_kv, nc * group, Dh)
+    kb = jnp.moveaxis(k_fixed.astype(jnp.float32), 1, 0)     # (Kh, pg, Dh)
+    s = jax.lax.dot_general(
+        qh, kb, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ) * sm_scale                                             # (Kh, C*G, pg)
+    s = s.reshape(n_kv, nc, group, pg)
+    # causal mask, per chunk row: row c sits at context position
+    # q_start + c and may read keys at positions <= that
+    tq = qstart_ref[b] + jax.lax.broadcasted_iota(
+        jnp.int32, (1, nc, 1, 1), 1
+    )
+    tk = j * pg + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, pg), 3)
+    s = jnp.where(tk <= tq, s, NEG_INF)
+    # scratch rows ordered (C, Kh, G) so the flush is a plain reshape
+    s2 = jnp.moveaxis(s, 0, 1).reshape(R, pg)
+
+    m_prev = m_ref[:, 0]                                     # (R,)
+    m_new = jnp.maximum(m_prev, jnp.max(s2, axis=-1))
+    p = jnp.exp(s2 - m_new[:, None])                         # (R, pg)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+    # quantize the softmax weights to the cache dtype before the value
+    # contraction, matching the decode kernel and the gathered path
+    pk = jnp.moveaxis(p.reshape(nc, n_kv, group, pg), 1, 0)
+    pk = pk.reshape(n_kv, nc * group, pg).astype(v_fixed.dtype)
+    vb = jnp.moveaxis(v_fixed, 1, 0)                         # (Kh, pg, Dh)
+    pv = jax.lax.dot_general(
+        pk, vb, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                        # (Kh, C*G, Dh)
+    pv = jnp.moveaxis(pv.reshape(n_kv, nc, group, Dh), 0, 1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv.reshape(acc_ref.shape)
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(j == nm - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(out_dtype).reshape(
+            nc, n_kv * group, Dh
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "policy", "constant", "include_inf", "interpret",
+        "detector_k", "detector_v",
+        "policy_k", "constant_k", "policy_v", "constant_v",
+    ),
+)
+def paged_prefill_raw(
+    q: jax.Array,              # (B, C, H, Dh) one causal chunk per request
+    k_pages: jax.Array,        # (P, L, pg, Kh, Dh)
+    v_pages: jax.Array,        # (P, L, pg, Kh, Dh)
+    block_tables: jax.Array,   # (B, M) int32
+    q_start: jax.Array,        # (B,) int32 — context position of chunk row 0
+    layer: jax.Array,          # int32 scalar — L row of the pool leaves
+    *,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    interpret: Optional[bool] = None,
+    detector_k=DEFAULT_DETECTOR,
+    detector_v=DEFAULT_DETECTOR,
+    policy_k: Optional[str] = None,
+    constant_k: Optional[float] = None,
+    policy_v: Optional[str] = None,
+    constant_v: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One layer of chunked-q paged prefill with fused on-read repair.
+
+    The q chunk (already written into the pool by the caller) attends over
+    the request's pages via the block-table index maps — same grid walk,
+    per-operand detector constants, and per-tile fills as decode, with the
+    chunk's causal mask (`key position <= q_start + row`) instead of a
+    single decode position.  Chunk row ``c`` must sit at context position
+    ``q_start[b] + c``; rows past the real chunk length produce garbage the
+    caller discards (they read positions beyond their causal horizon, which
+    is harmless — detection counts are per *page tile* and q-independent).
+    Returns ``(out (B, C, H, Dh), slot_counts (B, M) int32, counts
+    int32[8])``.
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    policy_k = policy if policy_k is None else policy_k
+    constant_k = constant if constant_k is None else constant_k
+    policy_v = policy if policy_v is None else policy_v
+    constant_v = constant if constant_v is None else constant_v
+    B, C, H, Dh = q.shape
+    P, L, pg, Kh, _ = k_pages.shape
+    assert v_pages.shape == k_pages.shape, (k_pages.shape, v_pages.shape)
+    assert H % Kh == 0, (H, Kh)
+    group = H // Kh
+    M = block_tables.shape[1]
+    sm_scale = 1.0 / math.sqrt(Dh)
+
+    def operand_row(det):
+        if det is None:
+            return jnp.zeros((8,), jnp.int32)
+        if det == DEFAULT_DETECTOR:
+            det = common.resolve_detector(None, include_inf)
+        return common.detector_operand(det, k_pages.dtype)
+
+    consts = jnp.stack([operand_row(detector_k), operand_row(detector_v)])
+
+    from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe import
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,  # detector consts, block tables, q_start, layer
+        grid=(B, M),
+        in_specs=[
+            pl.BlockSpec((1, C, H, Dh), lambda b, j, c, bt, qs, lay: (b, 0, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, pg, Kh, Dh),
+                lambda b, j, c, bt, qs, lay: (bt[b, j], lay[0], 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, pg, Kh, Dh),
+                lambda b, j, c, bt, qs, lay: (bt[b, j], lay[0], 0, 0, 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, H, Dh), lambda b, j, c, bt, qs, lay: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, c, bt, qs, lay: (b, j)),
+            pl.BlockSpec((8,), lambda b, j, c, bt, qs, lay: (0,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((C * H, Dh), jnp.float32),
+            pltpu.VMEM((C * H, 128), jnp.float32),
+            pltpu.VMEM((C * H, 128), jnp.float32),
+        ],
+    )
+    out, slot_counts, counts = pl.pallas_call(
+        functools.partial(
+            _paged_prefill_kernel,
+            sm_scale=sm_scale,
+            policy_k=policy_k,
+            constant_k=constant_k,
+            policy_v=policy_v,
+            constant_v=constant_v,
+            pg=pg,
+            n_kv=Kh,
+            group=group,
+            nm=M,
+            nc=C,
+            out_dtype=q.dtype,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C, H, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B, M), jnp.int32),
+            jax.ShapeDtypeStruct((8,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        consts,
+        jnp.asarray(block_tables, jnp.int32),
+        jnp.asarray(q_start, jnp.int32),
+        jnp.asarray(layer, jnp.int32).reshape(1),
+        q, k_pages, v_pages,
+    )
+    return out, slot_counts, counts
+
+
+def paged_prefill(
+    q: jax.Array,              # (B, C, H, Dh)
+    k_pages: jax.Array,        # (P, pg, Kh, Dh) or (P, L, pg, Kh, Dh)
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, M) int32
+    q_start: jax.Array,        # (B,) int32
+    *,
+    layer: int = 0,
+    **kw,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Convenience entry mirroring ``paged_attention``: layer-free pools,
+    ``page_counts`` scatter-added to the pool's page axis."""
+    if k_pages.ndim == 4:
+        k_pages = k_pages[:, None]
+        v_pages = v_pages[:, None]
+    out, slot_counts, counts = paged_prefill_raw(
+        q, k_pages, v_pages, block_tables, q_start,
+        jnp.asarray(layer, jnp.int32), **kw,
+    )
+    page_counts = jnp.zeros((k_pages.shape[0],), jnp.int32).at[
+        jnp.asarray(block_tables, jnp.int32)
+    ].add(slot_counts)
+    return out, page_counts, counts
+
+
+# --------------------------------------------------------------------------
+# Split-K flash decoding: the page walk parallelized across grid cells.
+# --------------------------------------------------------------------------
+def _paged_splitk_kernel(
+    consts_ref,      # int32[2, 8]  detector constants: row 0 K, row 1 V
+    bt_ref,          # int32[B, M]  block tables (also drives the index maps)
+    pos_ref,         # int32[B]     last valid position per request
+    layer_ref,       # int32[1]     which L row of the pool leaves
+    q_ref, k_ref, v_ref,
+    o_ref, mo_ref, lo_ref, slot_ref, counts_ref,
+    acc_ref, m_ref, l_ref,
+    *, sm_scale: float,
+    policy_k: str, constant_k: float, policy_v: str, constant_v: float,
+    pg: int, n_kv: int, group: int, ns: int,
+):
+    b, g, jj = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    step = (b * pl.num_programs(1) + g) * pl.num_programs(2) + jj
+
+    @pl.when(step == 0)
+    def _init_counts():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    @pl.when(jj == 0)
+    def _init_state():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    k_fixed, v_fixed = _repair_and_count(
+        consts_ref, k_ref, v_ref, slot_ref, counts_ref,
+        policy_k=policy_k, constant_k=constant_k,
+        policy_v=policy_v, constant_v=constant_v,
+    )
+
+    # ---- online softmax over this split's slice of the page walk ----
+    H = n_kv * group
+    q = q_ref[0].astype(jnp.float32).reshape(n_kv, group, q_ref.shape[-1])
+    kb = jnp.moveaxis(k_fixed.astype(jnp.float32), 1, 0)     # (Kh, pg, Dh)
+    s = jax.lax.dot_general(
+        q, kb, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ) * sm_scale                                             # (Kh, G, pg)
+    t = (g * ns + jj) * pg + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, pg), 2
+    )
+    s = jnp.where(t <= pos_ref[b], s, NEG_INF)
+    s2 = s.reshape(H, pg)
+
+    m_prev = m_ref[:, 0]                                     # (H,)
+    m_new = jnp.maximum(m_prev, jnp.max(s2, axis=-1))
+    # null-tail guard: unlike the serial walk (whose slot 0 always holds a
+    # valid position), a split can land on NOTHING but null padding.  Its
+    # running max then never leaves NEG_INF, and a bare exp(s - m) would be
+    # exp(0) = 1 per fill lane — fill values leaking probability mass into
+    # the merge.  Masking p on score validity keeps such splits at exactly
+    # (m, l, acc) = (-inf, 0, 0), which the LSE merge drops.
+    p = jnp.where(
+        s2 > NEG_INF * 0.5, jnp.exp(s2 - m_new[:, None]), 0.0
+    )                                                        # (H, pg)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
+    vb = jnp.moveaxis(v_fixed, 1, 0)                         # (Kh, pg, Dh)
+    pv = jax.lax.dot_general(
+        p.reshape(n_kv, group, pg).astype(v_fixed.dtype), vb,
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                        # (Kh, G, Dh)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv.reshape(acc_ref.shape)
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(jj == ns - 1)
+    def _flush():
+        # raw partials — normalization happens in the LSE merge stage
+        o_ref[0, 0] = acc_ref[...]
+        mo_ref[0, 0] = m_ref[:, 0]
+        lo_ref[0, 0] = l_ref[:, 0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "splits", "policy", "constant", "include_inf", "interpret",
+        "detector_k", "detector_v",
+        "policy_k", "constant_k", "policy_v", "constant_v",
+    ),
+)
+def paged_attention_splitk_raw(
+    q: jax.Array,              # (B, H, Dh)
+    k_pages: jax.Array,        # (P, L, pg, Kh, Dh)
+    v_pages: jax.Array,        # (P, L, pg, Kh, Dh)
+    block_tables: jax.Array,   # (B, M) int32
+    positions: jax.Array,      # (B,) int32, inclusive
+    layer: jax.Array,          # int32 scalar — L row of the pool leaves
+    *,
+    splits: int,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    interpret: Optional[bool] = None,
+    detector_k=DEFAULT_DETECTOR,
+    detector_v=DEFAULT_DETECTOR,
+    policy_k: Optional[str] = None,
+    constant_k: Optional[float] = None,
+    policy_v: Optional[str] = None,
+    constant_v: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Split-K paged decode: flash-decoding for the block-table page walk.
+
+    The M block-table slots are partitioned into ``splits`` contiguous
+    groups, each walked by its own grid cell into an unnormalized partial
+    ``(acc, m, l)``; a log-sum-exp merge reduce stage combines the partials
+    (colossal-ai ``flash_decoding.py``'s mid_o/mid_o_lse staging).  Splits
+    whose slice is pure null padding carry ``m = -inf`` and zero weight into
+    the merge — see the null-tail guard in the kernel body.  Detection and
+    per-page counts are identical to the serial kernel: every slot is
+    visited exactly once, so ``slot_counts`` is bit-identical.  Returns
+    ``(out (B, H, Dh), slot_counts (B, M) int32, counts int32[8])``.
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    policy_k = policy if policy_k is None else policy_k
+    constant_k = constant if constant_k is None else constant_k
+    policy_v = policy if policy_v is None else policy_v
+    constant_v = constant if constant_v is None else constant_v
+    B, H, Dh = q.shape
+    P, L, pg, Kh, _ = k_pages.shape
+    assert v_pages.shape == k_pages.shape, (k_pages.shape, v_pages.shape)
+    assert H % Kh == 0, (H, Kh)
+    group = H // Kh
+    M = block_tables.shape[1]
+    assert splits >= 1 and M % splits == 0, (
+        f"splits={splits} must divide the block-table width M={M}"
+    )
+    ns = M // splits
+    sm_scale = 1.0 / math.sqrt(Dh)
+
+    def operand_row(det):
+        if det is None:
+            return jnp.zeros((8,), jnp.int32)
+        if det == DEFAULT_DETECTOR:
+            det = common.resolve_detector(None, include_inf)
+        return common.detector_operand(det, k_pages.dtype)
+
+    consts = jnp.stack([operand_row(detector_k), operand_row(detector_v)])
+
+    from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe import
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,  # detector consts, block tables, positions, layer
+        grid=(B, splits, ns),
+        in_specs=[
+            pl.BlockSpec((1, H, Dh), lambda b, g, jj, c, bt, pos, lay: (b, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, pg, Kh, Dh),
+                lambda b, g, jj, c, bt, pos, lay: (
+                    bt[b, g * ns + jj], lay[0], 0, 0, 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, 1, pg, Kh, Dh),
+                lambda b, g, jj, c, bt, pos, lay: (
+                    bt[b, g * ns + jj], lay[0], 0, 0, 0
+                ),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (1, 1, H, Dh), lambda b, g, jj, c, bt, pos, lay: (b, g, 0, 0)
+            ),
+            pl.BlockSpec((1, 1, H), lambda b, g, jj, c, bt, pos, lay: (b, g, 0)),
+            pl.BlockSpec((1, 1, H), lambda b, g, jj, c, bt, pos, lay: (b, g, 0)),
+            pl.BlockSpec(
+                (1, 1), lambda b, g, jj, c, bt, pos, lay: (b, g * ns + jj)
+            ),
+            pl.BlockSpec((8,), lambda b, g, jj, c, bt, pos, lay: (0,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H, Dh), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+        ],
+    )
+    o_part, m_part, l_part, slot_counts, counts = pl.pallas_call(
+        functools.partial(
+            _paged_splitk_kernel,
+            sm_scale=sm_scale,
+            policy_k=policy_k,
+            constant_k=constant_k,
+            policy_v=policy_v,
+            constant_v=constant_v,
+            pg=pg,
+            n_kv=Kh,
+            group=group,
+            ns=ns,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, splits, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, M), jnp.int32),
+            jax.ShapeDtypeStruct((8,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        consts,
+        jnp.asarray(block_tables, jnp.int32),
+        jnp.asarray(positions, jnp.int32),
+        jnp.asarray(layer, jnp.int32).reshape(1),
+        q, k_pages, v_pages,
+    )
+    # ---- log-sum-exp merge reduce stage ----
+    # empty splits (m == -inf) must contribute NOTHING: their exp() weight
+    # is forced to zero rather than trusting exp(-inf - m*) arithmetic,
+    # which would turn into exp(0) = 1 when every split of a row is empty
+    m_star = jnp.max(m_part, axis=1)                         # (B, H)
+    live = m_part > NEG_INF * 0.5                            # (B, G, H)
+    w = jnp.where(live, jnp.exp(m_part - m_star[:, None, :]), 0.0)
+    l_tot = jnp.sum(w * l_part, axis=1)                      # (B, H)
+    acc = jnp.sum(w[..., None] * o_part, axis=1)             # (B, H, Dh)
+    out = (acc / jnp.maximum(l_tot, 1e-30)[..., None]).astype(q.dtype)
+    return out, slot_counts, counts
+
+
+def paged_attention_splitk(
+    q: jax.Array,              # (B, H, Dh)
+    k_pages: jax.Array,        # (P, pg, Kh, Dh) or (P, L, pg, Kh, Dh)
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, M) int32
+    positions: jax.Array,      # (B,) int32, inclusive
+    *,
+    splits: int,
+    layer: int = 0,
+    **kw,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Convenience entry mirroring ``paged_attention`` for the split-K
+    variant: layer-free pools, page-axis ``page_counts``."""
+    if k_pages.ndim == 4:
+        k_pages = k_pages[:, None]
+        v_pages = v_pages[:, None]
+    out, slot_counts, counts = paged_attention_splitk_raw(
+        q, k_pages, v_pages, block_tables, positions,
+        jnp.asarray(layer, jnp.int32), splits=splits, **kw,
     )
     page_counts = jnp.zeros((k_pages.shape[0],), jnp.int32).at[
         jnp.asarray(block_tables, jnp.int32)

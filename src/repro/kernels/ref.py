@@ -139,6 +139,32 @@ def _paged_masks(x, detector, include_inf):
     return detector.masks(x)
 
 
+def _repair_paged_rows(rows, detector, policy, constant, include_inf):
+    """Repair (B, M, pg, Kh, Dh) page rows, one (b, m) row per kernel tile,
+    with the paged family's per-operand fill grammar.  Returns the repaired
+    rows and the per-slot fatal-lane counts (B, M)."""
+    nan_m, inf_m = _paged_masks(rows, detector, include_inf)
+    mask = nan_m | inf_m
+    if policy == "zero":
+        rep = jnp.zeros_like(rows)
+    elif policy == "constant":
+        rep = jnp.full_like(rows, constant)
+    elif policy == "clamp_finite_max":
+        rep = jnp.full_like(rows, jnp.finfo(rows.dtype).max)
+    elif policy == "neighbor_mean":
+        ok = (~mask).astype(jnp.float32)
+        cnt = jnp.maximum(ok.sum(axis=(2, 3, 4), keepdims=True), 1.0)
+        tot = jnp.where(mask, 0.0, rows.astype(jnp.float32)).sum(
+            axis=(2, 3, 4), keepdims=True
+        )
+        rep = jnp.broadcast_to(tot / cnt, rows.shape).astype(rows.dtype)
+    else:
+        raise ValueError(policy)
+    fixed = jnp.where(mask, rep, rows)
+    n_fatal = (nan_m | inf_m).astype(jnp.int32).sum(axis=(2, 3, 4))
+    return fixed, n_fatal                                      # (B, M)
+
+
 def paged_attention_ref(
     q,                 # (B, H, Dh)
     k_pages,           # (P, pg, Kh, Dh) or (P, L, pg, Kh, Dh)
@@ -178,33 +204,14 @@ def paged_attention_ref(
     M = bt.shape[1]
     pos = jnp.asarray(positions, jnp.int32)
 
-    def repair_rows(rows, detector, policy, constant):
-        # rows: (B, M, pg, Kh, Dh); one (b, m) page row == one kernel tile
-        nan_m, inf_m = _paged_masks(rows, detector, include_inf)
-        mask = nan_m | inf_m
-        if policy == "zero":
-            rep = jnp.zeros_like(rows)
-        elif policy == "constant":
-            rep = jnp.full_like(rows, constant)
-        elif policy == "clamp_finite_max":
-            rep = jnp.full_like(rows, jnp.finfo(rows.dtype).max)
-        elif policy == "neighbor_mean":
-            ok = (~mask).astype(jnp.float32)
-            cnt = jnp.maximum(ok.sum(axis=(2, 3, 4), keepdims=True), 1.0)
-            tot = jnp.where(mask, 0.0, rows.astype(jnp.float32)).sum(
-                axis=(2, 3, 4), keepdims=True
-            )
-            rep = jnp.broadcast_to(tot / cnt, rows.shape).astype(rows.dtype)
-        else:
-            raise ValueError(policy)
-        fixed = jnp.where(mask, rep, rows)
-        n_fatal = (nan_m | inf_m).astype(jnp.int32).sum(axis=(2, 3, 4))
-        return fixed, n_fatal                                  # (B, M)
-
     k_rows = k_pages[bt, layer]                                # (B, M, pg, Kh, Dh)
     v_rows = v_pages[bt, layer]
-    fk, cnt_k = repair_rows(k_rows, detector_k, policy_k, constant_k)
-    fv, cnt_v = repair_rows(v_rows, detector_v, policy_v, constant_v)
+    fk, cnt_k = _repair_paged_rows(
+        k_rows, detector_k, policy_k, constant_k, include_inf
+    )
+    fv, cnt_v = _repair_paged_rows(
+        v_rows, detector_v, policy_v, constant_v, include_inf
+    )
     slot_counts = cnt_k + cnt_v
 
     T = M * pg
@@ -223,6 +230,147 @@ def paged_attention_ref(
         "bkgt,btkd->bkgd", w.astype(fv.dtype), fv,
         preferred_element_type=jnp.float32,
     )
+    return out.reshape(B, H, Dh).astype(q.dtype), slot_counts
+
+
+def paged_prefill_ref(
+    q,                 # (B, C, H, Dh) — one causal chunk per request
+    k_pages,           # (P, pg, Kh, Dh) or (P, L, pg, Kh, Dh)
+    v_pages,
+    block_tables,      # (B, M) int32
+    q_start,           # (B,) int32 — context position of chunk row 0
+    *,
+    layer: int = 0,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    detector_k="default",
+    detector_v="default",
+    policy_k=None,
+    constant_k=None,
+    policy_v=None,
+    constant_v=None,
+):
+    """Oracle of kernels.paged_prefill: gather, tile-repair, then full
+    causal softmax — chunk row ``c`` reads key positions ``<= q_start + c``.
+    Rows past the caller's real chunk length are computed like any other
+    (the kernel's garbage-row contract); callers compare valid rows only.
+    Returns ``(out (B, C, H, Dh), slot_counts (B, M))``."""
+    if k_pages.ndim == 4:
+        k_pages = k_pages[:, None]
+        v_pages = v_pages[:, None]
+    policy_k = policy if policy_k is None else policy_k
+    constant_k = constant if constant_k is None else constant_k
+    policy_v = policy if policy_v is None else policy_v
+    constant_v = constant if constant_v is None else constant_v
+    B, C, H, Dh = q.shape
+    P, L, pg, Kh, _ = k_pages.shape
+    G = H // Kh
+    bt = jnp.asarray(block_tables, jnp.int32)
+    M = bt.shape[1]
+    qs = jnp.asarray(q_start, jnp.int32)
+
+    fk, cnt_k = _repair_paged_rows(
+        k_pages[bt, layer], detector_k, policy_k, constant_k, include_inf
+    )
+    fv, cnt_v = _repair_paged_rows(
+        v_pages[bt, layer], detector_v, policy_v, constant_v, include_inf
+    )
+    slot_counts = cnt_k + cnt_v
+
+    T = M * pg
+    fk = fk.reshape(B, T, Kh, Dh)
+    fv = fv.reshape(B, T, Kh, Dh)
+    qg = q.reshape(B, C, Kh, G, Dh).astype(jnp.float32)
+    s = jnp.einsum(
+        "bckgd,btkd->bckgt", qg, fk.astype(jnp.float32)
+    ) / math.sqrt(Dh)
+    tq = qs[:, None] + jnp.arange(C)[None, :]                  # (B, C)
+    t = jnp.arange(T)
+    s = jnp.where(
+        t[None, None, None, None, :] <= tq[:, :, None, None, None], s, -1e30
+    )
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bckgt,btkd->bckgd", w.astype(fv.dtype), fv,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, C, H, Dh).astype(q.dtype), slot_counts
+
+
+def paged_splitk_ref(
+    q,                 # (B, H, Dh)
+    k_pages,           # (P, pg, Kh, Dh) or (P, L, pg, Kh, Dh)
+    v_pages,
+    block_tables,      # (B, M) int32
+    positions,         # (B,) int32, inclusive
+    *,
+    splits: int,
+    layer: int = 0,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    detector_k="default",
+    detector_v="default",
+    policy_k=None,
+    constant_k=None,
+    policy_v=None,
+    constant_v=None,
+):
+    """Oracle of kernels.paged_attention_splitk: per-split softmax partials
+    merged by log-sum-exp, with the null-tail guard made explicit — a split
+    whose slice holds no valid position carries ``(m, l) = (-inf, 0)`` and
+    zero weight into the merge, never its fill values.  Returns
+    ``(out (B, H, Dh), slot_counts (B, M))``."""
+    if k_pages.ndim == 4:
+        k_pages = k_pages[:, None]
+        v_pages = v_pages[:, None]
+    policy_k = policy if policy_k is None else policy_k
+    constant_k = constant if constant_k is None else constant_k
+    policy_v = policy if policy_v is None else policy_v
+    constant_v = constant if constant_v is None else constant_v
+    B, H, Dh = q.shape
+    P, L, pg, Kh, _ = k_pages.shape
+    G = H // Kh
+    bt = jnp.asarray(block_tables, jnp.int32)
+    M = bt.shape[1]
+    assert splits >= 1 and M % splits == 0, (splits, M)
+    ns = M // splits
+    pos = jnp.asarray(positions, jnp.int32)
+
+    fk, cnt_k = _repair_paged_rows(
+        k_pages[bt, layer], detector_k, policy_k, constant_k, include_inf
+    )
+    fv, cnt_v = _repair_paged_rows(
+        v_pages[bt, layer], detector_v, policy_v, constant_v, include_inf
+    )
+    slot_counts = cnt_k + cnt_v
+
+    # (B, splits, ns*pg, Kh, Dh): each split sees its contiguous page slice
+    fk = fk.reshape(B, splits, ns * pg, Kh, Dh)
+    fv = fv.reshape(B, splits, ns * pg, Kh, Dh)
+    qg = q.reshape(B, Kh, G, Dh).astype(jnp.float32)
+    s = jnp.einsum(
+        "bkgd,bstkd->bskgt", qg, fk.astype(jnp.float32)
+    ) / math.sqrt(Dh)
+    t = (
+        jnp.arange(splits)[:, None] * ns * pg + jnp.arange(ns * pg)[None, :]
+    )                                                          # (splits, ns*pg)
+    valid = t[None, :, None, None, :] <= pos[:, None, None, None, None]
+    s = jnp.where(valid, s, -1e30)
+    m = jnp.max(s, axis=-1)                                    # (B, s, Kh, G)
+    p = jnp.where(valid, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)                                    # (B, s, Kh, G)
+    acc = jnp.einsum(
+        "bskgt,bstkd->bskgd", p.astype(fv.dtype).astype(jnp.float32), fv.astype(jnp.float32)
+    )                                                          # (B, s, Kh, G, Dh)
+    m_star = jnp.max(m, axis=1)                                # (B, Kh, G)
+    live = m > -5e29
+    w = jnp.where(live, jnp.exp(m - m_star[:, None]), 0.0)     # (B, s, Kh, G)
+    l_tot = jnp.sum(w * l, axis=1)
+    out = jnp.sum(w[..., None] * acc, axis=1) / jnp.maximum(
+        l_tot, 1e-30
+    )[..., None]
     return out.reshape(B, H, Dh).astype(q.dtype), slot_counts
 
 

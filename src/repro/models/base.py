@@ -94,6 +94,24 @@ class Model:
             f"{type(self).__name__} has no paged decode path"
         )
 
+    # Whether prefill_paged exists: chunked prefill straight off the paged
+    # pool (the admission-side twin of serve_step_paged).
+    supports_paged_prefill: bool = False
+
+    def prefill_paged(
+        self, params, pool, batch, block_tables, q_start, q_len, **repair_kw
+    ):
+        """One causal prompt chunk over the page-major pool tree directly:
+        writes the chunk's K/V into the requests' pages and attends via the
+        chunked-q paged kernel.  ``batch["tokens"]``: (B, C); ``q_start`` /
+        ``q_len``: (B,) int32 chunk placement (rows past ``q_len`` are
+        padding — written as a harmless duplicate of the last valid row,
+        their logits garbage).  Returns ``(logits (B, C, V), pool',
+        slot_counts (B, M), counts int32[8])``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no paged prefill path"
+        )
+
     def prefill(self, params, cache, batch, pos):
         """Single batched prefill: consume all S prompt tokens in one call,
         populating cache positions ``pos .. pos+S-1`` and returning the

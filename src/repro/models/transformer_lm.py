@@ -231,6 +231,7 @@ class TransformerLM(Model):
         policy: str = "zero",
         constant: float = 0.0,
         fills=None,              # {"k": (policy, constant), "v": (...)}
+        split_k: int = 1,
     ):
         """One decode step straight off the paged pool (no gathered view):
         each layer writes its new K/V into one page slot per request and
@@ -241,7 +242,8 @@ class TransformerLM(Model):
         and the HLO stays flat in depth.  ``fills`` overrides the shared
         ``policy``/``constant`` per pool leaf name — each operand's rule
         fill reaches its kernel tile, so mixed-fill RuleSets keep the
-        fused path."""
+        fused path.  ``split_k > 1`` selects the split-K flash-decoding
+        walk (``ServingConfig.split_k``)."""
         detectors = detectors or {}
         fills = fills or {}
         fill_k = fills.get("k", (policy, constant))
@@ -255,6 +257,71 @@ class TransformerLM(Model):
             a, kp, vp, slot, cnt = self.attn.paged_decode(
                 p_l["attn"], self.norm1(p_l["norm1"], h), kp, vp,
                 block_tables, positions, layer,
+                detector_k=detectors.get("k"), detector_v=detectors.get("v"),
+                policy_k=fill_k[0], constant_k=fill_k[1],
+                policy_v=fill_v[0], constant_v=fill_v[1],
+                split_k=split_k,
+            )
+            h = h + a
+            y = self.mlp(p_l["mlp"], self.norm2(p_l["norm2"], h))
+            if isinstance(self.mlp, MoE):
+                y, _ = y
+            return (
+                h + y, kp, vp, slot_acc + slot, cnt_acc + cnt, layer + 1
+            ), None
+
+        carry0 = (
+            h,
+            pool["layers"]["k"],
+            pool["layers"]["v"],
+            jnp.zeros((B, M), jnp.int32),
+            jnp.zeros((8,), jnp.int32),
+            jnp.zeros((), jnp.int32),
+        )
+        (h, kp, vp, slot_counts, counts, _), _ = jax.lax.scan(
+            body, carry0, params["layers"]
+        )
+        h = self.final_norm(params["final_norm"], h)
+        logits = self._readout(params, h)
+        return logits, {"layers": {"k": kp, "v": vp}}, slot_counts, counts
+
+    # ---------------------------------------------------------- paged prefill
+    supports_paged_prefill: bool = True
+
+    def prefill_paged(
+        self,
+        params,
+        pool,                    # {"layers": {"k","v"}}: (P, L, pg, K, Dh)
+        batch,                   # {"tokens": (B, C)} — one causal chunk
+        block_tables,            # (B, M) int32
+        q_start,                 # (B,) int32 — context position of row 0
+        q_len,                   # (B,) int32 — valid rows in the chunk
+        *,
+        detectors=None,          # {"k": Detector|None, "v": Detector|None}
+        policy: str = "zero",
+        constant: float = 0.0,
+        fills=None,              # {"k": (policy, constant), "v": (...)}
+    ):
+        """One prompt chunk straight off the paged pool — the admission-side
+        twin of ``serve_step_paged``: each layer scatters the chunk's K/V
+        into the requests' pages and attends via the chunked-q paged kernel
+        with fused on-read repair, the layer index riding the scan carry as
+        a scalar-prefetch operand.  Rows past ``q_len`` are padding (their
+        writes deduplicate onto the last valid position; their logits are
+        garbage the engine discards)."""
+        detectors = detectors or {}
+        fills = fills or {}
+        fill_k = fills.get("k", (policy, constant))
+        fill_v = fills.get("v", (policy, constant))
+        h = self.embed(params["embed"], batch["tokens"])
+        B = h.shape[0]
+        M = block_tables.shape[1]
+
+        def body(carry, p_l):
+            h, kp, vp, slot_acc, cnt_acc, layer = carry
+            a, kp, vp, slot, cnt = self.attn.paged_prefill(
+                p_l["attn"], self.norm1(p_l["norm1"], h), kp, vp,
+                block_tables, q_start, q_len, layer,
                 detector_k=detectors.get("k"), detector_v=detectors.get("v"),
                 policy_k=fill_k[0], constant_k=fill_k[1],
                 policy_v=fill_v[0], constant_v=fill_v[1],

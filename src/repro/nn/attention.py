@@ -246,6 +246,7 @@ class Attention:
         constant_k=None,
         policy_v=None,
         constant_v=None,
+        split_k: int = 1,
         update_cache: bool = True,
     ):
         """Decode straight off the paged pool — no gathered view.
@@ -259,6 +260,9 @@ class Attention:
         resolves them; ``None`` disables detection for that operand).
         ``policy_k``/``policy_v`` (+ constants) override the shared fill
         per operand — mixed-fill RuleSets stay on the fused path.
+        ``split_k > 1`` partitions the page walk across that many grid
+        cells (flash decoding) with a log-sum-exp merge; per-page counts
+        stay bit-identical to the serial walk.
 
         Returns ``(out (B,1,D), k_pages', v_pages', slot_counts (B,M),
         counts int32[8])``.
@@ -284,14 +288,108 @@ class Attention:
                 v_new[:, 0].astype(v_pages.dtype)
             )
 
-        ctx, slot_counts, counts = paged_kernel.paged_attention_raw(
-            q[:, 0], k_pages, v_pages, block_tables, pos, layer,
+        if split_k > 1:
+            ctx, slot_counts, counts = paged_kernel.paged_attention_splitk_raw(
+                q[:, 0], k_pages, v_pages, block_tables, pos, layer,
+                splits=split_k,
+                policy=policy, constant=constant,
+                detector_k=detector_k, detector_v=detector_v,
+                policy_k=policy_k, constant_k=constant_k,
+                policy_v=policy_v, constant_v=constant_v,
+            )
+        else:
+            ctx, slot_counts, counts = paged_kernel.paged_attention_raw(
+                q[:, 0], k_pages, v_pages, block_tables, pos, layer,
+                policy=policy, constant=constant,
+                detector_k=detector_k, detector_v=detector_v,
+                policy_k=policy_k, constant_k=constant_k,
+                policy_v=policy_v, constant_v=constant_v,
+            )
+        out = self._out(p, ctx[:, None])                      # (B, 1, D)
+        return out, k_pages, v_pages, slot_counts, counts
+
+    def paged_prefill(
+        self,
+        p,
+        x: jax.Array,            # (B, C, D) hidden — one causal chunk
+        k_pages: jax.Array,      # (P, L, pg, K, Dh) pool leaf, page-major
+        v_pages: jax.Array,
+        block_tables: jax.Array, # (B, M) int32, null-padded
+        q_start: jax.Array,      # (B,) int32 — context position of chunk row 0
+        q_len: jax.Array,        # (B,) int32 — valid rows in the chunk
+        layer: jax.Array,        # int32 scalar — this block's L row
+        *,
+        detector_k=None,
+        detector_v=None,
+        policy: str = "zero",
+        constant: float = 0.0,
+        policy_k=None,
+        constant_k=None,
+        policy_v=None,
+        constant_v=None,
+        update_cache: bool = True,
+    ):
+        """Chunked prefill straight off the paged pool — no gathered view.
+
+        The chunk's K/V scatter into the request's pages position-by-
+        position, then the chunked-q Pallas kernel attends over the block
+        tables with the same fused on-read repair as ``paged_decode``.
+
+        Padded chunk rows (``row >= q_len``) must not write: a write of
+        zeros would silently HEAL any flip parked in an unwritten lane
+        (the gathered path leaves those lanes untouched), and a write of
+        garbage could fabricate detectable faults.  They are redirected to
+        re-write the request's last valid position with its own value —
+        duplicate scatter indices carrying identical payloads are
+        deterministic, and the pool stays bit-identical to the gathered
+        path's write set.
+
+        Returns ``(out (B,C,D), k_pages', v_pages', slot_counts (B,M),
+        counts int32[8])`` — out rows past ``q_len`` are garbage the caller
+        discards.
+        """
+        from ..kernels import paged_attention as paged_kernel
+
+        B, C = x.shape[:2]
+        q, k_new, v_new = self._qkv(p, x)
+        qs = jnp.asarray(q_start, jnp.int32).reshape(B)
+        ql = jnp.asarray(q_len, jnp.int32).reshape(B)
+        pos_arr = qs[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        q, k_new = self._rope(q, k_new, pos_arr, pos_arr)
+
+        if update_cache:
+            pg = k_pages.shape[2]
+            rows = jnp.arange(C, dtype=jnp.int32)[None, :]     # (1, C)
+            valid = rows < ql[:, None]                         # (B, C)
+            last = jnp.maximum(ql - 1, 0)                      # (B,)
+            safe_pos = jnp.where(valid, pos_arr, (qs + last)[:, None])
+            bslot = jnp.broadcast_to(
+                jnp.arange(B, dtype=jnp.int32)[:, None], (B, C)
+            )
+            page = jnp.asarray(block_tables, jnp.int32)[bslot, safe_pos // pg]
+            off = safe_pos % pg
+
+            def dedup(new):                                    # (B, C, K, Dh)
+                lastv = jnp.take_along_axis(
+                    new, last[:, None, None, None], axis=1
+                )
+                return jnp.where(valid[..., None, None], new, lastv)
+
+            k_pages = k_pages.at[page, layer, off].set(
+                dedup(k_new).astype(k_pages.dtype)
+            )
+            v_pages = v_pages.at[page, layer, off].set(
+                dedup(v_new).astype(v_pages.dtype)
+            )
+
+        ctx, slot_counts, counts = paged_kernel.paged_prefill_raw(
+            q, k_pages, v_pages, block_tables, qs, layer,
             policy=policy, constant=constant,
             detector_k=detector_k, detector_v=detector_v,
             policy_k=policy_k, constant_k=constant_k,
             policy_v=policy_v, constant_v=constant_v,
         )
-        out = self._out(p, ctx[:, None])                      # (B, 1, D)
+        out = self._out(p, ctx)                               # (B, C, D)
         return out, k_pages, v_pages, slot_counts, counts
 
     def decode_cross(self, p, x, cache, enc_len: Optional[int] = None):

@@ -12,7 +12,13 @@ import dataclasses
 
 _REPAIR_MODES = ("page", "whole", "off")
 _PAGED_DECODE = ("auto", "off")
+_PAGED_PREFILL = ("auto", "off")
 _SWAP_POLICIES = ("swap", "recompute")
+
+# split-K auto heuristic: engage flash decoding once the block-table walk
+# is at least this many pages wide (below it the serial walk wins — the
+# merge stage costs more than it saves)
+_SPLIT_K_MIN_PAGES = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +56,27 @@ class ServingConfig:
                              "off"  — always use the gathered-view decode
                                       (the PR-2 baseline; bench comparison
                                       arm)
+      paged_prefill          "auto" — admission prefills straight off the
+                                      pool through the chunked-q paged
+                                      kernel whenever the fused decode plan
+                                      engages (zero full-view copies at
+                                      admission too)
+                             "off"  — gathered-view prefill (comparison arm)
+      prefill_chunk          vllm-style chunked prefill: at most this many
+                             prompt tokens per request per engine step, so
+                             long admissions interleave with decode instead
+                             of stalling it (0 = whole remaining prompt in
+                             one chunk).  Only the fused paged prefill
+                             chunks; the gathered fallback always prefills
+                             whole.
+      split_k                split-K flash decoding (``SNIPPETS.md`` 3):
+                             0 — auto: split the page walk once the block
+                                 table is >= 8 pages wide, into the largest
+                                 divisor of ``max_pages_per_request`` that
+                                 keeps >= 2 pages per split
+                             1 — always serial (comparison arm)
+                             N — split into (the largest divisor of the
+                                 block-table width <=) N grid cells
 
     Prefix cache (README §Serving engine):
       prefix_cache           share KV pages between requests with a common
@@ -100,6 +127,9 @@ class ServingConfig:
     sweep_interval: int = 0
     sweep_pages: int = 4
     paged_decode: str = "auto"
+    paged_prefill: str = "auto"
+    prefill_chunk: int = 0
+    split_k: int = 0
 
     prefix_cache: bool = False
     max_cached_pages: int = 0
@@ -116,6 +146,12 @@ class ServingConfig:
             raise ValueError(f"bad repair granularity {self.repair!r}")
         if self.paged_decode not in _PAGED_DECODE:
             raise ValueError(f"bad paged_decode mode {self.paged_decode!r}")
+        if self.paged_prefill not in _PAGED_PREFILL:
+            raise ValueError(f"bad paged_prefill mode {self.paged_prefill!r}")
+        if self.prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0 ({self.prefill_chunk})")
+        if self.split_k < 0:
+            raise ValueError(f"split_k must be >= 0 ({self.split_k})")
         if self.page_size < 1 or self.n_pages < 1:
             raise ValueError("page_size and n_pages must be >= 1")
         if self.max_pages_per_request > self.n_pages:
@@ -143,3 +179,20 @@ class ServingConfig:
     def pages_for(self, n_tokens: int) -> int:
         """Pages needed to hold ``n_tokens`` cache positions."""
         return -(-n_tokens // self.page_size)
+
+    def resolve_split_k(self) -> int:
+        """Grid splits for the decode page walk, resolved against the
+        block-table width M.  The kernel requires a divisor of M (each slot
+        walked exactly once, or per-page counts would double-charge), so
+        both the explicit setting and the auto heuristic round down to the
+        largest divisor within their budget."""
+        M = self.max_pages_per_request
+        if self.split_k == 1:
+            return 1
+        if self.split_k > 1:
+            want = min(self.split_k, M)
+        elif M < _SPLIT_K_MIN_PAGES:
+            return 1
+        else:
+            want = M // 2                 # auto: >= 2 pages per split
+        return max(d for d in range(1, want + 1) if M % d == 0)

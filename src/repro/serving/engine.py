@@ -10,34 +10,42 @@ QoS) builds on:
     engine.results[rid]["tokens"]    # prompt + generated
 
 One engine step is: (1) one approximate-memory window strikes the resident
-pool (simulation boundary, ``ber > 0`` only); (2) admission + batched
-prefill of newly admitted requests (one ``Model.prefill`` call each — the
-whole prompt in one pass; a swapped-out request skips prefill entirely and
-has its parked KV written back from the host tier instead); (3) one jitted
-decode step over the static slot batch (per-request positions — requests at
-different depths share the executable) plus the reactive repair pass;
-(4) the background sweep tick.  All repair/flip/kernel events land in the
-engine's unified stats stream.
+pool (simulation boundary, ``ber > 0`` only); (2) admission (a swapped-out
+request skips prefill entirely and has its parked KV written back from the
+host tier instead); (3) the prefill lane — fused (one prompt chunk per
+mid-prefill request through the chunked-q paged kernel, straight off the
+pool) or the gathered fallback (one whole-prompt ``Model.prefill`` call per
+admission); (4) one jitted decode step over the static slot batch
+(per-request positions — requests at different depths share the executable)
+plus the reactive repair pass; (5) the background sweep tick.  With
+``prefill_chunk > 0`` stages (3) and (4) coexist: prompt chunks and decode
+tokens share the batch step, vllm-style.  All repair/flip/kernel events
+land in the engine's unified stats stream.
 
-Decode runs *straight off the pool* whenever the model and the pool rules
-allow it (``_paged_decode_plan``): the Pallas paged-attention kernel
-consumes the page-major pool leaves + block tables directly, repairing
-fatal KV lanes in VMEM as it streams them and emitting per-page fatal
-counts — the fused kernel IS the reactive detector, so decode issues zero
-full-view ``gather``/``scatter`` copies (the surviving write is one page
-slot per request for the newly produced K/V) and the reactive scrub runs
-*after* the step from the kernel's counts.  Ineligible configurations
-(register-mode model reads, non-constant fills, ``repair="off"``) keep the
-PR-2 gathered-view path with its probe-based pre-decode repair — token
-outputs are identical where both paths apply (bit-exact for f32 pools;
-bf16 pools quantize softmax weights before the online-softmax rescale, so
-parity there is value-approximate, token-level in practice).
+Both lifecycle halves run *straight off the pool* whenever the model and
+the pool rules allow it (``_paged_decode_plan``): the Pallas paged kernel
+family consumes the page-major pool leaves + block tables directly,
+repairing fatal KV lanes in VMEM as it streams them and emitting per-page
+fatal counts — the fused kernels ARE the reactive detector, so admission,
+prefill and decode together issue zero full-view ``gather``/``scatter``
+copies (the surviving writes are the per-chunk/per-token K/V page slots)
+and the reactive scrub runs *after* each lane from the kernels' counts.
+Wide block tables additionally split the decode page walk across grid
+cells (``ServingConfig.split_k`` — flash-decoding with a log-sum-exp merge).
+Ineligible configurations (register-mode model reads, non-constant fills,
+``repair="off"``) keep the PR-2 gathered-view path with its probe-based
+pre-compute repair — token outputs are identical where both paths apply
+(bit-exact for f32 pools; bf16 pools quantize softmax weights before the
+online-softmax rescale, so parity there is value-approximate, token-level
+in practice).
 
 Static shapes: the decode batch is always ``(max_batch, 1)`` tokens over
 ``(max_batch, max_pages_per_request)`` block tables (empty slots run the
 null page at position 0 and are ignored), so the whole serving run compiles
 exactly one decode executable; prefill compiles one executable per distinct
-prompt length.
+chunk width (a fixed ``prefill_chunk`` means one compiled prefill step for
+the whole run; 0 retraces per distinct remaining-prompt length, like the
+gathered path).
 
 ``launch.serve.generate(..., paged=True)`` is the single-request degenerate
 case of this engine.
@@ -99,10 +107,14 @@ class _PagedDecodePlan:
     detector per pool-leaf name (``None`` = detection off for that leaf)
     plus one ``(policy, constant)`` kernel fill per leaf name — each
     operand's tile repairs with its own rule's fill, so a mixed-fill
-    RuleSet no longer forces the gathered-decode fallback."""
+    RuleSet no longer forces the gathered-decode fallback.  ``prefill``
+    extends the same spec to admission: the chunked-q paged prefill kernel
+    runs with identical per-operand detectors/fills, so the whole request
+    lifecycle shares one repair contract."""
 
     detectors: Mapping[str, Any]
     fills: Mapping[str, Tuple[str, float]]
+    prefill: bool = False
 
 
 def _paged_decode_plan(
@@ -156,7 +168,17 @@ def _paged_decode_plan(
         detectors[name] = det
         if det is not None or name not in fills:
             fills[name] = fill
-    return _PagedDecodePlan(detectors=detectors, fills=fills)
+    return _PagedDecodePlan(
+        detectors=detectors,
+        fills=fills,
+        # the prefill arm rides on decode eligibility: same pool rules, same
+        # kernel repair contract — only the model surface and the config
+        # switch are extra
+        prefill=(
+            bool(getattr(model, "supports_paged_prefill", False))
+            and cfg.paged_prefill == "auto"
+        ),
+    )
 
 
 class Engine:
@@ -224,10 +246,20 @@ class Engine:
             _paged_decode_plan(model, self.space, self.pool, self.cfg)
             if self.cfg.paged_decode == "auto" else None
         )
+        # split-K flash decoding: resolved once against the static block-
+        # table width (a divisor of it — see ServingConfig.resolve_split_k)
+        self._split_k = self.cfg.resolve_split_k()
         self._paged_fn = (
             self._build_paged_step(self.paged_plan)
             if self.paged_plan is not None else None
         )
+        # fused chunked prefill: the admission-side twin of the decode step
+        self._prefill_fn = (
+            self._build_paged_prefill_step(self.paged_plan)
+            if self.paged_plan is not None and self.paged_plan.prefill
+            else None
+        )
+        self._prefilling: List[Request] = []   # mid-prefill (chunk) lane
         self.kernel_counts = np.zeros(8, np.int64)   # fused AT_* totals
         self._stream = stats_lib.zeros()
         self._requests: Dict[int, Request] = {}
@@ -283,15 +315,14 @@ class Engine:
                 stats=self._stream, donate=True,
             )
 
-        # (2) admission + batched prefill (admitted pages are freshly zeroed,
-        # but the null padding page rides along — one repair pass covers
-        # every admission before any prefill consumes its pages).  Cache-hit
-        # shared pages are excluded from that probe: their admission policy
-        # IS scrub-on-reuse (the dwell gate only saves anything if a trusted
-        # page skips the read entirely; residual faults are the reactive
-        # pass's job, same as any other resident page)
-        prefilled = set()
-        admitted = self.sched.admit()
+        # (2) admission.  A preempted lane member leaves the lane here: a
+        # recompute victim restarts from scratch when re-admitted, a swap
+        # victim rejoins the lane at its saved chunk position on swap-in.
+        self._prefilling = [
+            r for r in self._prefilling if r.state is RequestState.RUNNING
+        ]
+        plan = self.sched.step_plan(self._prefilling)
+        admitted = plan.admitted
         if admitted:
             pages = sorted({p for r in admitted for p in r.pages})
             shared = {
@@ -308,35 +339,79 @@ class Engine:
             # allocation would be charging for nothing)
             swapped = {p for r in admitted if r.swap is not None for p in r.pages}
             fresh = sorted(set(pages) - shared - swapped)
-            if fresh:
+            if fresh and self._prefill_fn is None:
+                # gathered fallback only: admitted pages are freshly zeroed,
+                # but the null padding page rides along — one probe pass
+                # covers every admission before prefill consumes its pages.
+                # Cache-hit shared pages are excluded: their admission
+                # policy IS scrub-on-reuse.  On the fused path the prefill
+                # kernel is the detector — no probe at all.
                 self._stream = self.repair.repair_step(fresh, self._stream)
             self._last_touched = pages
         for req in admitted:
             if req.swap is not None:
                 # tier swap-in instead of re-prefill: the parked context is
                 # written back whole and the request decodes this very step
-                # (it is NOT in ``prefilled`` — no token was emitted yet)
+                # — unless it was swapped out mid-prefill, in which case it
+                # rejoins the chunk lane where it left off
                 handle, req.swap = req.swap, None
                 self.tiers.swap_in(handle, req.pages)
+                if req.prefill_pos is not None and self._prefill_fn is not None:
+                    self._prefilling.append(req)
                 continue
             if self.cache is not None:
                 self._stream = self.cache.prepare_hit(req, self._stream)
+            if self._prefill_fn is not None:
+                # fused lane: the request streams prompt chunks over the
+                # next step(s); cache insert + finish happen when the last
+                # chunk lands
+                if req.prefill_pos is None:
+                    req.prefill_pos = 0
+                self._prefilling.append(req)
+                continue
             self._prefill(req, emitted)
             if self.cache is not None:
                 # insert BEFORE finish: the cache's own references keep the
                 # prefix resident even when the request finishes right away
                 self.cache.insert(req)
-            prefilled.add(req.rid)
             if req.state is RequestState.RUNNING and self._maybe_finish(req):
                 finished.append(req.rid)
 
-        # (3) one decode step + the reactive repair pass.  Reserving a page
+        # (3) the fused prefill lane: one prompt chunk per mid-prefill
+        # request, straight off the pool, then ONE reactive pass from the
+        # summed per-page fatal counts (per-request passes would scrub a
+        # faulty shared/null page once per request — the gathered path
+        # charges it once per step)
+        if self._prefilling:
+            page_counts = np.zeros((self.cfg.n_pages + 1,), np.int64)
+            covered = {self.pool.null_page}
+            still: List[Request] = []
+            for req in self._prefilling:
+                counts_r, done = self._prefill_paged(req, emitted)
+                page_counts += counts_r
+                covered.update(req.pages)
+                if not done:
+                    still.append(req)
+                    continue
+                if self.cache is not None:
+                    self.cache.insert(req)
+                if req.state is RequestState.RUNNING and self._maybe_finish(req):
+                    finished.append(req.rid)
+            self._prefilling = still
+            self._last_touched = sorted(
+                set(self._last_touched) | (covered - {self.pool.null_page})
+            )
+            self._stream = self.repair.repair_counts(
+                page_counts, covered, self._stream
+            )
+
+        # (4) one decode step + the reactive repair pass.  Reserving a page
         # for one request may preempt another — both one that hasn't
         # reserved yet (inner state check) and one that already did (final
         # filter): victims never reach the decode batch.
         decodable = []
-        for r in list(self.sched.running):
-            if r.rid in prefilled or r.state is not RequestState.RUNNING:
+        for r in plan.decode:
+            if r.state is not RequestState.RUNNING:
                 continue
             if self._reserve_next_page(r):
                 decodable.append(r)
@@ -364,7 +439,7 @@ class Engine:
                 if self._maybe_finish(req):
                     finished.append(req.rid)
 
-        # (4) background sweep tick
+        # (5) background sweep tick
         self._stream = self.repair.sweep_step(t, self._stream)
 
         self._t += 1
@@ -393,11 +468,12 @@ class Engine:
         per-page fatal counts scatter-added over the block tables.  The pool
         tree is donated — the in-place write-back of the one resident."""
         model, n_rows = self.model, self.cfg.n_pages + 1
+        split_k = self._split_k
 
         def paged_step(params, pool_tree, batch, bt, pos, stats):
             logits, pool_tree, slot_counts, counts = model.serve_step_paged(
                 params, pool_tree, batch, bt, pos,
-                detectors=spec.detectors, fills=spec.fills,
+                detectors=spec.detectors, fills=spec.fills, split_k=split_k,
             )
             nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
             page_counts = jnp.zeros((n_rows,), jnp.int32).at[bt].add(
@@ -406,6 +482,31 @@ class Engine:
             return nxt, pool_tree, page_counts, counts, stats
 
         return jax.jit(paged_step, donate_argnums=(1,))
+
+    def _build_paged_prefill_step(self, spec: _PagedDecodePlan):
+        """The fused prefill executable: chunked-q paged prefill + greedy
+        readout at the chunk's last valid row + per-page fatal counts
+        scatter-added over the block table.  One compiled executable per
+        distinct chunk width (``q_len`` is a traced operand — ragged tails
+        share the executable with full chunks)."""
+        model, n_rows = self.model, self.cfg.n_pages + 1
+
+        def prefill_step(params, pool_tree, batch, bt, q_start, q_len, stats):
+            logits, pool_tree, slot_counts, counts = model.prefill_paged(
+                params, pool_tree, batch, bt, q_start, q_len,
+                detectors=spec.detectors, fills=spec.fills,
+            )
+            last = jnp.maximum(q_len - 1, 0)
+            nxt = jnp.argmax(
+                jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0],
+                axis=-1,
+            ).astype(jnp.int32)
+            page_counts = jnp.zeros((n_rows,), jnp.int32).at[bt].add(
+                slot_counts
+            )
+            return nxt, pool_tree, page_counts, counts, stats
+
+        return jax.jit(prefill_step, donate_argnums=(1,))
 
     def _reserve_next_page(self, req: Request) -> bool:
         """Point ``req.pos`` at this step's write position and make sure its
@@ -439,6 +540,47 @@ class Engine:
         tok = int(np.asarray(nxt)[0])
         req.tokens.append(tok)
         emitted.setdefault(req.rid, []).append(tok)
+
+    def _prefill_paged(
+        self, req: Request, emitted: Dict[int, List[int]]
+    ) -> Tuple[np.ndarray, bool]:
+        """One fused prompt chunk straight off the pool: write the chunk's
+        K/V into the request's pages and attend via the chunked-q paged
+        kernel — zero full-view copies.  ``prefill_chunk == 0`` consumes
+        the whole remaining context in one chunk.  Returns the kernel's
+        per-page fatal counts and whether the prefill completed (the first
+        generated token is emitted only then — greedy readout at the last
+        prompt position, same as the gathered path)."""
+        toks = req.prefill_tokens()
+        start = req.cached_tokens + req.prefill_pos
+        rest = toks[start:]
+        # static chunk width: a short tail pads up rather than retracing
+        width = len(rest) if self.cfg.prefill_chunk == 0 else self.cfg.prefill_chunk
+        chunk = rest[:width]
+        q_len = len(chunk)
+        padded = chunk + [0] * (width - q_len)
+        bt = self.pool.block_table(req.pages)[None, :]
+        nxt, self.pool.tree, page_counts, counts, self._stream = (
+            self._prefill_fn(
+                self.params, self.pool.tree,
+                {"tokens": jnp.asarray([padded], jnp.int32)},
+                jnp.asarray(bt), jnp.asarray([start], jnp.int32),
+                jnp.asarray([q_len], jnp.int32), self._stream,
+            )
+        )
+        self.kernel_counts += np.asarray(counts, np.int64)
+        req.prefill_pos += q_len
+        done = start + q_len >= len(toks)
+        if done:
+            req.pos = len(toks)
+            req.prefill_pos = None
+            self.prefill_tokens_saved += req.cached_tokens
+            if req.n_preempted:
+                self.prefill_tokens_recomputed += len(toks) - req.cached_tokens
+            tok = int(np.asarray(nxt)[0])
+            req.tokens.append(tok)
+            emitted.setdefault(req.rid, []).append(tok)
+        return np.asarray(page_counts), done
 
     def _decode_batch(
         self, reqs: List[Request]
@@ -563,6 +705,8 @@ class Engine:
             "scrub_calls": self.pool.scrub_calls,
             "scrubbed_bytes_per_token": self.pool.scrubbed_bytes / toks,
             "paged_decode": self._paged_fn is not None,
+            "paged_prefill": self._prefill_fn is not None,
+            "split_k": self._split_k,
             "pool_gathers": self.pool.n_gathers,
             "pool_scatters": self.pool.n_scatters,
             "paged_kernel_events": int(self.kernel_counts[6]),  # AT_EV_TOTAL

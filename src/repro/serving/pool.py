@@ -317,6 +317,24 @@ class PagedKVPool:
 
     # ----------------------------------------------------------------- repair
     def fatal_pages(self, page_ids: Sequence[int]) -> List[int]:
+        """DEPRECATED public probe — the paged kernel family emits per-page
+        fatal counts as a side effect of the read (prefill AND decode), so
+        reactive detection no longer needs a separate scan over resident
+        pages.  The probe survives for gathered-view fallbacks (non-paged
+        models, ineligible rule sets) via ``PageRepairManager.repair_step``,
+        which calls the private ``_probe_fatal_pages`` directly."""
+        import warnings
+
+        warnings.warn(
+            "PagedKVPool.fatal_pages is deprecated: the paged kernels emit "
+            "per-page fatal counts on read (PageRepairManager.repair_counts);"
+            " the probe remains only for gathered-view fallback paths",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self._probe_fatal_pages(page_ids)
+
+    def _probe_fatal_pages(self, page_ids: Sequence[int]) -> List[int]:
         """The subset of ``page_ids`` holding >=1 fatal lane — the trap
         analogue at page granularity (detection only; no repair).
 

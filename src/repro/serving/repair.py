@@ -5,14 +5,15 @@ granularity:
 
   reactive   every engine step knows exactly which pages it touched (the
              scheduled requests' block tables + the null padding page).
-             On the paged-decode path the *fused kernel* is the trap: it
-             emits per-page fatal counts as it streams the KV lanes, so
-             ``repair_counts`` scrubs exactly the pages that faulted with
-             no separate detection pass at all.  ``repair_step`` keeps the
-             probe-based detection (``pool.fatal_pages``) for prefill and
-             for the gathered-view fallback.  The pre-engine baseline —
-             scrub the whole cache whenever anything faulted — is kept as
-             ``repair="whole"`` for the bench comparison.
+             On the paged paths — prefill AND decode — the *fused kernel*
+             is the trap: it emits per-page fatal counts as it streams the
+             KV lanes, so ``repair_counts`` scrubs exactly the pages that
+             faulted with no separate detection pass at all.
+             ``repair_step`` keeps probe-based detection (the deprecated
+             ``pool.fatal_pages``, now ``_probe_fatal_pages`` internally)
+             solely for the gathered-view fallback.  The pre-engine
+             baseline — scrub the whole cache whenever anything faulted —
+             is kept as ``repair="whole"`` for the bench comparison.
 
   routed     fused-kernel counter vectors (``kernels.ops`` ``MM_*``/``AT_*``
              layout) reported through ``note_kernel`` are folded into the
@@ -87,7 +88,7 @@ class PageRepairManager:
         if scope == "none":
             return stats
         candidates = set(touched) | self._dirty | {self.pool.null_page}
-        faulty = self.pool.fatal_pages(candidates)
+        faulty = self.pool._probe_fatal_pages(candidates)
         return self._scrub_faulty(scope, faulty, stats)
 
     def repair_counts(
@@ -96,10 +97,11 @@ class PageRepairManager:
         covered: Sequence[int],
         stats: stats_lib.Stats,
     ) -> stats_lib.Stats:
-        """Reactive repair driven by the fused paged-attention kernel's
-        per-page fatal counts — the decode-path replacement for the
-        ``pool.fatal_pages`` probe.  ``page_counts`` is the ``(n_pages+1,)``
-        vector the compiled decode step emitted; ``covered`` is the page set
+        """Reactive repair driven by the fused paged kernels' per-page
+        fatal counts — the replacement for the ``fatal_pages`` probe on
+        every paged path (prefill and decode).  ``page_counts`` is the
+        ``(n_pages+1,)`` vector the compiled step emitted (or several
+        steps' vectors summed); ``covered`` is the page set
         the kernel actually streamed (the step's block tables, null page
         included).  Dirty pages *outside* the kernel's coverage keep the
         probe — their faults are invisible to this step's reads but were
@@ -119,7 +121,9 @@ class PageRepairManager:
         faulty = [int(p) for p in np.nonzero(counts > 0)[0]]
         stale = self._dirty - set(covered)
         if stale:
-            faulty = sorted(set(faulty) | set(self.pool.fatal_pages(stale)))
+            faulty = sorted(
+                set(faulty) | set(self.pool._probe_fatal_pages(stale))
+            )
         return self._scrub_faulty(scope, faulty, stats)
 
     def _scrub_faulty(

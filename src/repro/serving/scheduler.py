@@ -48,6 +48,7 @@ class Request:
     pages: List[int] = dataclasses.field(default_factory=list)
     pos: int = 0                 # next cache write position
     slot: Optional[int] = None   # decode batch slot while RUNNING
+    prefill_pos: Optional[int] = None  # chunked-prefill progress (None = not mid-prefill)
     n_preempted: int = 0
     truncated: bool = False      # hit the block-table context cap
     cached_tokens: int = 0       # prefix tokens served from the cache
@@ -71,6 +72,21 @@ class Request:
         """What a (re-)prefill must consume: the prompt plus anything already
         generated before a preemption (recompute-style resume)."""
         return self.prompt + self.tokens
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One engine step's worth of work, split by lifecycle stage.
+
+    ``admitted`` are fresh (or re-admitted) requests this step pulled off
+    the waiting queue; ``decode`` are running requests eligible for a
+    decode token — i.e. not newly admitted and not mid-prefill.  With
+    chunked prefill both lists are non-empty in the same step: prompt
+    chunks and decode tokens share the batch (vllm-style mixed batching),
+    each through its own fused kernel over the same pool."""
+
+    admitted: List[Request]
+    decode: List[Request]
 
 
 class Scheduler:
@@ -163,6 +179,26 @@ class Scheduler:
                 self.cache.note_admit(hit)
         return admitted
 
+    def step_plan(self, prefilling: List[Request]) -> StepPlan:
+        """Admit, then partition this step's work: requests still streaming
+        prompt chunks (``prefilling`` — the engine's fused-prefill lane —
+        plus anything just admitted that needs a prefill) hold their decode
+        slot but are not decodable until their last chunk lands.  A
+        swapped-out request re-admitting with a *complete* context
+        (``prefill_pos is None``) decodes this very step — its parked KV is
+        written back whole, no prefill owed."""
+        admitted = self.admit()
+        busy = {id(r) for r in prefilling}
+        busy |= {
+            id(r) for r in admitted
+            if r.swap is None or r.prefill_pos is not None
+        }
+        decode = [
+            r for r in self.running
+            if id(r) not in busy and r.state is RequestState.RUNNING
+        ]
+        return StepPlan(admitted=admitted, decode=decode)
+
     def _alloc(self, n: int) -> Optional[List[int]]:
         """Pool allocation with cache-eviction backpressure: a full pool
         first reclaims LRU cache-only pages, then fails (admission waits /
@@ -230,11 +266,14 @@ class Scheduler:
         self.pool.free(req.pages)
         req.pages = []
         if handle is not None:
+            # swap keeps prefill_pos: a mid-prefill victim re-enters the
+            # fused prefill lane right where it left off after swap-in
             req.swap = handle
             self.n_swap_preemptions += 1
         else:
             req.pos = 0
             req.cached_tokens = 0
+            req.prefill_pos = None   # recompute restarts the prefill
         self._free_slots.append(req.slot)
         req.slot = None
         req.state = RequestState.WAITING

@@ -338,10 +338,10 @@ def test_elastic_reshard_restore_and_reference_repair(mesh, tmp_path):
 
 # -------------------------------------------------------- paged attention
 def test_paged_decode_over_sharded_pool_matches_unsharded(mesh):
-    """The fused paged-decode path attends over a "page"->"data"-sharded
-    pool: tokens identical to the unsharded engine, zero full-view decode
-    copies — the page-axis sharding pays off end to end (no gather ever
-    rebuilds a contiguous view)."""
+    """The fused kernel family attends over a "page"->"data"-sharded pool:
+    tokens identical to the unsharded engine, ZERO full-view copies across
+    admission, prefill and decode — the page-axis sharding pays off end to
+    end (no gather ever rebuilds a contiguous view)."""
     from repro.serving import Engine, ServingConfig
 
     from conftest import tiny_transformer
@@ -357,6 +357,7 @@ def test_paged_decode_over_sharded_pool_matches_unsharded(mesh):
     ))
     assert sharded.pool.shardings is not None
     assert sharded._paged_fn is not None, "fused path must engage on mesh"
+    assert sharded._prefill_fn is not None
     plain = Engine(model, params, cfg, space=ApproxSpace(
         ApproxConfig(mode="memory", policy="zero", max_magnitude=None)
     ))
@@ -366,6 +367,43 @@ def test_paged_decode_over_sharded_pool_matches_unsharded(mesh):
     res_s, res_p = sharded.run(), plain.run()
     for rs, rp in zip(rids_s, rids_p):
         assert res_s[rs]["tokens"] == res_p[rp]["tokens"]
-    # decode ran straight off the sharded pool: only the 2 prefills copied
-    assert sharded.pool.n_gathers == 2
-    assert sharded.pool.n_scatters == 2
+    # prefill AND decode ran straight off the sharded pool
+    assert sharded.pool.n_gathers == 0
+    assert sharded.pool.n_scatters == 0
+
+
+def test_splitk_decode_over_sharded_pool_matches_serial(mesh):
+    """Split-K flash decoding over the sharded pool: the grid-parallel page
+    walk (log-sum-exp merge) emits the same tokens and per-page fault
+    ledger as the serial walk on the same mesh."""
+    from repro.serving import Engine, ServingConfig
+
+    from conftest import tiny_transformer
+
+    model, params = tiny_transformer()
+
+    def build(split_k):
+        eng = Engine(model, params, ServingConfig(
+            page_size=4, n_pages=12, max_batch=2, max_pages_per_request=8,
+            ber=1e-3, seed=5, split_k=split_k,
+        ), space=ApproxSpace(
+            ApproxConfig(mode="memory", policy="zero", max_magnitude=None),
+            mesh=mesh,
+        ))
+        prompt = jax.random.randint(jax.random.PRNGKey(9), (26,), 1, 96)
+        eng.add_request(prompt, max_new=6)         # context spans 8 pages
+        eng.add_request([4, 17, 2], max_new=6)
+        return eng
+
+    split = build(0)                               # auto: M=8 -> 4 splits
+    assert split._split_k == 4 and split.pool.shardings is not None
+    res_s = split.run()
+    serial = build(1)
+    res_1 = serial.run()
+    for rid in res_s:
+        assert res_s[rid]["tokens"] == res_1[rid]["tokens"]
+    assert split.stats_dict() == serial.stats_dict()
+    np.testing.assert_array_equal(
+        split.pool.page_events, serial.pool.page_events
+    )
+    assert split.pool.n_gathers == 0 and split.pool.n_scatters == 0
