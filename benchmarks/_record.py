@@ -4,13 +4,21 @@
 accepts an ``out`` kwarg; each section merges its own entry under
 ``sections`` instead of overwriting the file, so the record accumulates
 (serving engine + repair pipeline today).  ``run.py`` removes the file at
-the start of a run — a record never mixes two runs' sections.
+the start of a run — the top-level ``sections`` never mixes two runs.
+
+The record also carries the bench *trajectory*: before unlinking, ``run.py``
+reads the prior record's ``history`` (``read_history``) and, after the
+sections finish, appends the fresh run under a caller-supplied timestamp
+(``append_history``).  Top-level ``sections`` stays "latest"; ``history``
+is the append-only run log.  This module stays clock-free on purpose —
+timestamps are injected by the CLI layer, so benchmark code itself is
+deterministic and replayable.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict
+from typing import Any, Dict, List
 
 
 def merge_record(path: str, name: str, section: Dict[str, Any],
@@ -27,3 +35,36 @@ def merge_record(path: str, name: str, section: Dict[str, Any],
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
     print(f"# merged section {name!r} into {path}")
+
+
+def read_history(path: str) -> List[Dict[str, Any]]:
+    """The prior record's run log (empty when the file or key is absent, or
+    the file is unreadable — a corrupt record must not block a fresh run)."""
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            record = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []
+    history = record.get("history", [])
+    return history if isinstance(history, list) else []
+
+
+def append_history(path: str, timestamp: str,
+                   prior: List[Dict[str, Any]]) -> None:
+    """Append this run's ``sections`` to the trajectory: ``history`` becomes
+    ``prior`` + one ``{"timestamp", "sections"}`` entry for the record's
+    current (latest) sections."""
+    if not os.path.exists(path):
+        return
+    with open(path) as f:
+        record = json.load(f)
+    record["history"] = list(prior) + [{
+        "timestamp": timestamp,
+        "sections": record.get("sections", {}),
+    }]
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# appended run {timestamp!r} to history ({len(record['history'])}"
+          f" runs) in {path}")

@@ -1,0 +1,160 @@
+"""Autopilot bench: the profiled frontier, quality-vs-refresh per region
+group, for the transformer and recurrent presets (README §Autopilot).
+
+Each preset runs its profiling campaign (short injected greedy-serve
+episodes, flips confined to one group at a time) and solves the frontier
+against the preset's quality budget.  The section records the full grid —
+the EDEN story in numbers: how far each data structure's refresh can be
+relaxed before measured quality leaves the budget, and where the solver
+places each group.
+
+CSV: name,us_per_call,derived — one row per (model, group, refresh point);
+us_per_call is campaign wall-time per profiled cell, derived carries
+BER / quality / flips / energy saving.  ASSIGN rows follow with the solved
+per-group refresh.
+
+Asserted every run: on the recurrent preset the solved refresh for the
+recurrent-state group is STRICTLY shorter (more conservative) than the
+projection-weights group's — the compounding-state asymmetry the frontier
+exists to discover; and every group's assignment meets the budget or is
+collapsed to the exact island.
+
+``main(out=...)`` merges an ``autopilot`` section into the shared bench
+record (``benchmarks/run.py --out BENCH_repair.json``), validated by
+``scripts/check_bench.py``.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Dict, Optional
+
+from repro.autopilot import run_campaign, solve_frontier
+from repro.configs import get_preset
+
+# smoke mode: the two separating points only, shorter episodes — the
+# full four-point sweep is the default-mode (and README) story
+SMOKE_POINTS = (1.0, 2.0)
+SMOKE_STEPS = 6
+
+
+def _finite(x: Any) -> Any:
+    """JSON-safe float: non-finite (a diverged metric) becomes None rather
+    than a bare NaN token downstream parsers reject."""
+    if isinstance(x, float) and not math.isfinite(x):
+        return None
+    return x
+
+
+def _preset(name: str, smoke: bool):
+    import dataclasses
+
+    p = get_preset(name, steps=SMOKE_STEPS if smoke else 8)
+    if smoke:
+        p = dataclasses.replace(
+            p, campaign=dataclasses.replace(
+                p.campaign, refresh_points=SMOKE_POINTS
+            )
+        )
+    return p
+
+
+def run(smoke: bool = False):
+    rows = []
+    models: Dict[str, Any] = {}
+    budgets: Dict[str, float] = {}
+    for name in ("transformer", "recurrent"):
+        p = _preset(name, smoke)
+        model = p.build_model()
+        t0 = time.perf_counter()
+        profile = run_campaign(model, p.campaign)
+        dt = time.perf_counter() - t0
+        us_per_cell = 1e6 * dt / max(len(profile.cells), 1)
+        frontier = solve_frontier(profile, p.budget)
+        budgets[name] = p.budget
+
+        for c in profile.cells:
+            rows.append((
+                f"{name}_{c.group}_r{c.refresh_s:g}",
+                us_per_cell,
+                f"ber={c.ber:.2e};quality={_finite(c.quality)};"
+                f"flips={c.flips};saving={c.energy_saving:.3f};"
+                f"faults_per_step={c.faults_per_step:.2f}",
+            ))
+        for a in frontier.assignments:
+            rows.append((
+                f"{name}_ASSIGN_{a.group}",
+                0.0,
+                f"refresh_s={a.refresh_s:g};collapsed={a.collapsed};"
+                f"quality={_finite(a.quality)};saving={a.energy_saving:.3f}",
+            ))
+
+        # every assignment meets the budget or collapsed to the exact island
+        for a in frontier.assignments:
+            assert a.collapsed or (
+                math.isfinite(a.quality) and a.quality <= p.budget
+            ), f"{name}/{a.group}: assignment violates the quality budget"
+
+        models[name] = {
+            "model": profile.model,
+            "metric": profile.metric,
+            "steps": profile.steps,
+            "budget": p.budget,
+            "frontier": [
+                {
+                    "group": c.group,
+                    "refresh_s": c.refresh_s,
+                    "ber": c.ber,
+                    "quality": _finite(c.quality),
+                    "flips": c.flips,
+                    "faults_per_step": c.faults_per_step,
+                    "energy_saving": c.energy_saving,
+                }
+                for c in profile.cells
+            ],
+            "assignments": {
+                a.group: {
+                    "refresh_s": a.refresh_s,
+                    "ber": a.ber,
+                    "collapsed": a.collapsed,
+                    "quality": _finite(a.quality),
+                    "energy_saving": a.energy_saving,
+                    "expected_faults_per_step": a.expected_faults_per_step,
+                }
+                for a in frontier.assignments
+            },
+            "energy_saving": frontier.energy_saving,
+        }
+
+    # the acceptance asymmetry: recurrent state strictly more conservative
+    # than the projection weights on the recurrent preset
+    rec = models["recurrent"]["assignments"]
+    assert (
+        rec["recurrent_state"]["refresh_s"] < rec["proj_weights"]["refresh_s"]
+    ), (
+        "recurrent state was not assigned a strictly more conservative "
+        f"refresh than the projection weights: {rec}"
+    )
+    return rows, models
+
+
+def main(smoke: bool = False, out: Optional[str] = None):
+    print("# autopilot: per-region tolerance campaign + frontier solve;")
+    print("# us_per_call is campaign wall-time per profiled cell; ASSIGN")
+    print("# rows carry the solved per-group refresh.  Asserted: recurrent")
+    print("# state lands strictly more conservative than proj weights")
+    print("name,us_per_call,derived")
+    rows, models = run(smoke=smoke)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if out:
+        from ._record import merge_record
+
+        merge_record(out, "autopilot", {
+            "models": models,
+            "recurrent_state_more_conservative": True,  # asserted above
+        }, smoke=smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,9 +15,15 @@ accepts a ``smoke`` kwarg shrink themselves; the rest are already tiny.
 accepts an ``out`` kwarg (``serving_engine``: tokens/s + bytes/token per
 arm; ``prefix_cache``: prefill-tokens-saved + gated-vs-always reuse-scrub
 bytes; ``repair_pipeline``: eager-vs-compiled scrub/inject wall-time and
-scrubbed-bytes/step on 1 and 8 fake devices) MERGE their JSON record there
-(benchmarks/_record.py) — the per-PR perf baseline.  The file is removed
-at the start of a run so a record never mixes two runs' sections.
+scrubbed-bytes/step on 1 and 8 fake devices; ``autopilot``: the profiled
+quality-vs-refresh frontier per region group) MERGE their JSON record
+there (benchmarks/_record.py) — the per-PR perf baseline.
+
+The top-level ``sections`` always holds the LATEST run; the prior record's
+``history`` list is carried across the rewrite and this run is appended to
+it under ``--timestamp`` (default: current UTC time — the only clock in
+the bench path lives here in the CLI layer, keeping the benchmark code
+itself deterministic).  ``scripts/check_bench.py`` validates both shapes.
 """
 from __future__ import annotations
 
@@ -26,8 +32,10 @@ import inspect
 import os
 import sys
 import traceback
+from datetime import datetime, timezone
 
 from . import (
+    autopilot,
     energy_model,
     fig6_provenance,
     fig7_overhead,
@@ -47,6 +55,7 @@ SECTIONS = (
     ("serving_engine (README §Serving engine)", serving_engine.main),
     ("prefix_cache (README §Serving engine)", prefix_cache.main),
     ("repair_pipeline (README §Distributed repair)", repair_pipeline.main),
+    ("autopilot (README §Autopilot)", autopilot.main),
 )
 
 
@@ -61,9 +70,23 @@ def main(argv=None) -> None:
         help="JSON record path for sections that support it "
         "(repair_pipeline)",
     )
+    ap.add_argument(
+        "--timestamp", default=None,
+        help="history entry label for this run (default: current UTC time;"
+        " the bench record keeps every run under 'history')",
+    )
     args = ap.parse_args(argv)
-    if args.out and os.path.exists(args.out):
-        os.unlink(args.out)            # fresh record: sections merge into it
+    prior_history = []
+    if args.out:
+        from ._record import append_history, read_history
+
+        prior_history = read_history(args.out)
+        if os.path.exists(args.out):
+            os.unlink(args.out)        # fresh record: sections merge into it
+    timestamp = args.timestamp
+    if timestamp is None:
+        # the bench path's only clock: benchmark modules stay deterministic
+        timestamp = datetime.now(timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ")
 
     failures = 0
     for title, fn in SECTIONS:
@@ -79,6 +102,8 @@ def main(argv=None) -> None:
         except Exception:
             failures += 1
             traceback.print_exc()
+    if args.out:
+        append_history(args.out, timestamp, prior_history)
     if failures:
         sys.exit(1)
 

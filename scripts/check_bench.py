@@ -7,9 +7,14 @@ section (tokens/s + scrubbed-bytes/token per arm, the paged-kernel arm's
 zero-decode-copy counters), the tiered-KV section (swap-vs-recompute
 re-prefilled tokens, boundary-scrub bytes/token), and the prefix-cache
 section (prefill-tokens-saved per share ratio, gated vs always-scrub
-reuse bytes).  If a refactor renames or drops any of those
-keys the bench silently stops backing the README's claims — this check
-makes the bench step fail loudly instead.
+reuse bytes).  README §Autopilot cites the autopilot section (the profiled
+quality-vs-refresh frontier per region group and the solved per-group
+assignments for the transformer and recurrent presets).  The record's
+``history`` list — the bench trajectory ``benchmarks/run.py`` appends each
+run to — must be non-empty, well-shaped, and end with the latest sections.
+If a refactor renames or drops any of those keys the bench silently stops
+backing the README's claims — this check makes the bench step fail loudly
+instead.
 
     python scripts/check_bench.py BENCH_repair.json
 """
@@ -59,6 +64,33 @@ PREFIX_ROW_KEYS = (
     "reuse_scrubs",
     "reuse_ref_repairs",
     "reuse_skips",
+)
+AUTOPILOT_KEYS = ("models", "recurrent_state_more_conservative")
+AUTOPILOT_MODELS = ("transformer", "recurrent")
+AUTOPILOT_MODEL_KEYS = (
+    "model",
+    "metric",
+    "budget",
+    "frontier",
+    "assignments",
+    "energy_saving",
+)
+AUTOPILOT_CELL_KEYS = (
+    "group",
+    "refresh_s",
+    "ber",
+    "quality",
+    "flips",
+    "faults_per_step",
+    "energy_saving",
+)
+AUTOPILOT_ASSIGN_KEYS = (
+    "refresh_s",
+    "ber",
+    "collapsed",
+    "quality",
+    "energy_saving",
+    "expected_faults_per_step",
 )
 
 
@@ -136,6 +168,64 @@ def check(path: str) -> int:
                 checked += 1
                 if key not in row:
                     missing.append(f"sections.prefix_cache.rows.{name}.{key}")
+    auto = sections.get("autopilot")
+    if not isinstance(auto, dict):
+        missing.append("sections.autopilot")
+    else:
+        for key in AUTOPILOT_KEYS:
+            checked += 1
+            if key not in auto:
+                missing.append(f"sections.autopilot.{key}")
+        models = auto.get("models") or {}
+        for mname in AUTOPILOT_MODELS:
+            mod = models.get(mname)
+            if not isinstance(mod, dict):
+                missing.append(f"sections.autopilot.models.{mname}")
+                continue
+            for key in AUTOPILOT_MODEL_KEYS:
+                checked += 1
+                if key not in mod:
+                    missing.append(f"sections.autopilot.models.{mname}.{key}")
+            cells = mod.get("frontier") or []
+            checked += 1
+            if len(cells) < 4:      # >= 2 groups x >= 2 refresh points
+                missing.append(
+                    f"sections.autopilot.models.{mname}.frontier"
+                    "[>=2 groups x >=2 points]"
+                )
+            for i, cell in enumerate(cells):
+                for key in AUTOPILOT_CELL_KEYS:
+                    checked += 1
+                    if key not in cell:
+                        missing.append(
+                            f"sections.autopilot.models.{mname}"
+                            f".frontier[{i}].{key}"
+                        )
+            for gname, assign in (mod.get("assignments") or {}).items():
+                for key in AUTOPILOT_ASSIGN_KEYS:
+                    checked += 1
+                    if key not in assign:
+                        missing.append(
+                            f"sections.autopilot.models.{mname}"
+                            f".assignments.{gname}.{key}"
+                        )
+    # the bench trajectory: every run appended under a timestamp, the
+    # top-level sections mirroring the newest entry
+    history = record.get("history")
+    checked += 1
+    if not isinstance(history, list) or not history:
+        missing.append("history[non-empty list]")
+    else:
+        for i, entry in enumerate(history):
+            checked += 1
+            if not (
+                isinstance(entry, dict)
+                and isinstance(entry.get("timestamp"), str)
+                and isinstance(entry.get("sections"), dict)
+            ):
+                missing.append(f"history[{i}].{{timestamp,sections}}")
+        if not missing and history[-1]["sections"] != sections:
+            missing.append("history[-1].sections == sections (latest run)")
     if missing:
         print(f"{path}: missing keys the README quotes:", file=sys.stderr)
         for m in missing:

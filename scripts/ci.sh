@@ -7,6 +7,8 @@
 #   bash scripts/ci.sh tests      # tier-1 suite only (single device)
 #   bash scripts/ci.sh multidev   # distributed-repair suite (8 fake devices)
 #   bash scripts/ci.sh smoke      # examples only
+#   bash scripts/ci.sh autopilot  # autopilot smoke lane: tiny 2-group x
+#                                 # 2-point campaign + online-guard trip
 #   bash scripts/ci.sh bench      # benchmark sections (--smoke shapes),
 #                                 # records + validates BENCH_repair.json
 set -euo pipefail
@@ -47,6 +49,17 @@ fi
 if [[ "$what" == "all" || "$what" == "smoke" ]]; then
     echo "== smoke: examples/quickstart.py =="
     python examples/quickstart.py
+fi
+
+if [[ "$what" == "all" || "$what" == "autopilot" ]]; then
+    # the EDEN-style autopilot at smoke scale, fixed seeds: the recurrent
+    # preset's campaign (2 groups x 2 refresh points) must land the
+    # recurrent state strictly more conservative than the weights, and the
+    # online guard must demonstrably tighten under injected fault excess
+    echo "== autopilot smoke (campaign separation + guard trip) =="
+    python -m pytest -x -q \
+        tests/test_autopilot.py::test_recurrent_smoke_campaign_separates_state_from_weights \
+        tests/test_autopilot.py::test_engine_guard_trips_and_keeps_serving
 fi
 
 if [[ "$what" == "all" || "$what" == "bench" ]]; then

@@ -1,0 +1,489 @@
+"""Profiling campaign — per-region error-tolerance curves (EDEN's
+measurement step, README §Autopilot).
+
+The paper repairs NaNs reactively at a *given* BER; EDEN's observation is
+that the energy win lives in choosing a *different* DRAM parameter point per
+data structure.  This module measures what each structure can afford:
+
+  RegionGroup        one named data-structure class — a path regex over the
+                     state tree (the same binding grammar as ``RuleSet``)
+                     plus the repair rule the group deploys with while it
+                     is approximate
+  CampaignConfig     the sweep: groups × refresh-interval points, episode
+                     kind (short injected serve or train runs), lengths,
+                     and the seed every key in the campaign derives from
+  ProfileCell        one (group, refresh point) measurement: BER + energy
+                     saving from ``ApproxMemoryModel.from_refresh``, the
+                     quality metric, ground-truth flips, and the observed
+                     fatal-fault rate (the guard's expectation)
+  ToleranceProfile   the full grid, JSON round-trippable and
+                     seed-deterministic — ``frontier.solve_frontier``
+                     consumes it
+
+Episode mechanics: each cell runs a short episode with flips confined to
+ONE group — ``ApproxSpace.inject(..., regions=...)`` takes a masked region
+tree (every leaf not matching the group's pattern pinned EXACT), so the
+cell's quality delta is attributable to that group alone.  Each injection
+window is followed by a boundary scrub under the campaign's RuleSet (the
+groups' own deployed rules, labeled per group so the per-rule counters
+separate), then the production step runs — the same
+inject → repair → compute cycle as deployment.
+
+Quality is measured against a clean (BER = 0) episode with identical seeds,
+prompts, and batches:
+
+  serve   token-divergence rate — the fraction of next-token predictions
+          that differ from the clean run's, decoded teacher-forced on the
+          clean trajectory so the metric grades per position instead of
+          locking in after the first flipped argmax (greedy, token by
+          token, so recurrent models profile without batched prefill)
+  train   loss delta — mean loss over the episode's second half minus the
+          clean run's (the first half is warmup noise)
+
+Determinism: every key derives from ``PRNGKey(seed)`` via ``fold_in`` of
+(group index, point index, step) — repeated campaigns are bit-identical,
+and the eager/compiled injection paths agree by construction (both funnel
+through ``inject_tree``'s per-leaf-position key split).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import regions as regions_lib
+from ..core.injection import ApproxMemoryModel
+from ..core.rules import Detector, RepairRule, RuleSet
+from ..launch.serve import build_serve_step
+from ..launch.train import build_train_step, init_train_state, make_optimizer
+from ..runtime import ApproxConfig, ApproxSpace, ScrubSchedule
+
+__all__ = [
+    "RegionGroup", "CampaignConfig", "ProfileCell", "ToleranceProfile",
+    "campaign_space", "group_regions", "run_campaign",
+    "rule_to_json", "rule_from_json",
+]
+
+_EPISODES = ("serve", "train")
+_METRICS = {"serve": "token_divergence", "train": "loss_delta"}
+
+
+# ---------------------------------------------------------------------------
+# Rule (de)serialization — ToleranceProfile JSON round trip.
+# ---------------------------------------------------------------------------
+
+
+def rule_to_json(rule: RepairRule) -> Dict[str, Any]:
+    """JSON-able dict for a ``RepairRule`` (str/float fills only — callable
+    fills have no stable serialization and raise)."""
+    fill = rule.fill
+    if not isinstance(fill, (str, int, float)):
+        raise TypeError(
+            f"only str/float fills serialize to JSON, got {type(fill).__name__}"
+        )
+    return {
+        "detect": {
+            "nan": rule.detect.nan,
+            "inf": rule.detect.inf,
+            "max_magnitude": rule.detect.max_magnitude,
+            "bitpatterns": [list(bp) for bp in rule.detect.bitpatterns],
+        },
+        "fill": fill,
+        "trigger": rule.trigger,
+        "exact": rule.exact,
+        "label": rule.label,
+    }
+
+
+def rule_from_json(d: Dict[str, Any]) -> RepairRule:
+    det = d["detect"]
+    return RepairRule(
+        detect=Detector(
+            nan=bool(det["nan"]),
+            inf=bool(det["inf"]),
+            max_magnitude=det["max_magnitude"],
+            bitpatterns=tuple(tuple(bp) for bp in det["bitpatterns"]),
+        ),
+        fill=d["fill"],
+        trigger=d["trigger"],
+        exact=bool(d["exact"]),
+        label=d["label"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# The campaign surface.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionGroup:
+    """One named data-structure class: a path regex (``RuleSet`` binding
+    grammar, searched against ``a/b/c`` renderings) plus the repair rule the
+    group deploys with while approximate.  The default rule is the serving
+    posture — NaN/Inf-only zero fill, no magnitude clamp (activations and
+    recurrent state are not O(1) like weights); weight groups typically pass
+    the training rule (``neighbor_mean`` + range guard) instead."""
+
+    name: str
+    pattern: str
+    rule: RepairRule = RepairRule(
+        detect=Detector(nan=True, inf=True), fill="zero", trigger="boundary"
+    )
+
+    def labeled_rule(self) -> RepairRule:
+        """The deployed rule labeled with the group's name — per-rule
+        counters and guard expectations key on it."""
+        return dataclasses.replace(self.rule, label=self.name)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "pattern": self.pattern,
+            "rule": rule_to_json(self.rule),
+        }
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "RegionGroup":
+        return RegionGroup(
+            name=d["name"], pattern=d["pattern"],
+            rule=rule_from_json(d["rule"]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignConfig:
+    """The sweep: ``groups`` × ``refresh_points``, measured with ``episode``
+    runs of ``steps`` production steps each."""
+
+    groups: Tuple[RegionGroup, ...]
+    refresh_points: Tuple[float, ...]
+    episode: str = "serve"          # "serve" | "train"
+    steps: int = 12
+    batch: int = 2
+    prompt_len: int = 8             # serve episodes: greedy-decoded prompt
+    seq_len: int = 16               # train episodes: tokens per batch row
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.episode not in _EPISODES:
+            raise ValueError(
+                f"bad episode {self.episode!r}; expected one of {_EPISODES}"
+            )
+        if not self.groups:
+            raise ValueError("a campaign needs at least one RegionGroup")
+        if not self.refresh_points:
+            raise ValueError("a campaign needs at least one refresh point")
+        names = [g.name for g in self.groups]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate group names: {names}")
+        if self.steps < 2:
+            raise ValueError("episodes need at least 2 steps")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileCell:
+    """One (group, refresh point) measurement."""
+
+    group: str
+    refresh_s: float
+    ber: float
+    energy_saving: float            # refresh model's saving at this point
+    quality: float                  # token_divergence | loss_delta
+    flips: int                      # ground-truth injected bit flips
+    faults_per_step: float          # group-rule fatal detections / step
+    approx_bytes: int               # bytes the group's mask exposes
+
+
+@dataclasses.dataclass(frozen=True)
+class ToleranceProfile:
+    """The campaign's output grid — JSON round-trippable, seed-deterministic
+    (same config + params → bit-identical cells)."""
+
+    model: str
+    episode: str
+    metric: str
+    steps: int
+    seed: int
+    groups: Tuple[RegionGroup, ...]
+    refresh_points: Tuple[float, ...]
+    cells: Tuple[ProfileCell, ...]
+
+    def group_cells(self, name: str) -> Tuple[ProfileCell, ...]:
+        return tuple(c for c in self.cells if c.group == name)
+
+    def cell(self, name: str, refresh_s: float) -> ProfileCell:
+        for c in self.cells:
+            if c.group == name and c.refresh_s == refresh_s:
+                return c
+        raise KeyError(f"no cell for group {name!r} at refresh {refresh_s}")
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "model": self.model,
+            "episode": self.episode,
+            "metric": self.metric,
+            "steps": self.steps,
+            "seed": self.seed,
+            "groups": [g.to_json() for g in self.groups],
+            "refresh_points": list(self.refresh_points),
+            "cells": [dataclasses.asdict(c) for c in self.cells],
+        }, indent=2)
+
+    @staticmethod
+    def from_json(text: str) -> "ToleranceProfile":
+        d = json.loads(text)
+        return ToleranceProfile(
+            model=d["model"],
+            episode=d["episode"],
+            metric=d["metric"],
+            steps=d["steps"],
+            seed=d["seed"],
+            groups=tuple(RegionGroup.from_json(g) for g in d["groups"]),
+            refresh_points=tuple(d["refresh_points"]),
+            cells=tuple(ProfileCell(**c) for c in d["cells"]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Campaign runtime pieces.
+# ---------------------------------------------------------------------------
+
+
+def campaign_space(groups: Tuple[RegionGroup, ...]) -> ApproxSpace:
+    """The campaign's runtime: memory mode, the groups' deployed rules bound
+    in group order (labels = group names, so ``rule_stats()`` separates the
+    groups' fault counters), host-driven boundary scrubs (the episode loop
+    scrubs between injection and compute — no in-step scrub, so per-rule
+    counters stay host-visible)."""
+    entries = tuple((g.pattern, g.labeled_rule()) for g in groups)
+    return ApproxSpace(ApproxConfig(
+        mode="memory",
+        rules=RuleSet(entries),
+        scrub=ScrubSchedule(boundary=False),
+    ))
+
+
+def group_regions(space: ApproxSpace, tree: Any, pattern: str) -> Any:
+    """The masked region tree confining one injection window to the group:
+    leaves matching ``pattern`` keep the space's region classification,
+    everything else is pinned EXACT (never flipped)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    base = jax.tree.leaves(space.regions_for(tree))
+    rx = re.compile(pattern)
+    masked = [
+        region if rx.search(regions_lib.path_str(path)) else
+        regions_lib.Region.EXACT
+        for (path, _), region in zip(flat, base)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, masked)
+
+
+def _group_faults(space: ApproxSpace, name: str) -> int:
+    """Cumulative fatal detections (nan + inf) charged to the group's rule."""
+    row = space.rule_stats().get(name)
+    return 0 if row is None else row["nan_found"] + row["inf_found"]
+
+
+def _inject_and_scrub(
+    space: ApproxSpace, resident: Any, regions: Any, ber: float, key,
+) -> Tuple[Any, int]:
+    """One deployment cycle prefix: a masked injection window followed by
+    the boundary scrub under the campaign rules.  Returns the (repaired)
+    resident and the window's ground-truth flip count."""
+    resident, flips = space.inject(
+        resident, key, ber, record=False, regions=regions
+    )
+    resident = space.scrub(resident, trigger="boundary")
+    return resident, int(flips)
+
+
+# ---------------------------------------------------------------------------
+# Episodes.
+# ---------------------------------------------------------------------------
+
+
+def _serve_episode(
+    model: Any,
+    params: Any,
+    space: ApproxSpace,
+    cfg: CampaignConfig,
+    pattern: Optional[str],
+    ber: float,
+    ep_key: jax.Array,
+    force: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, int, int]:
+    """One greedy serve episode (token by token — recurrent decode cells
+    need the warmup anyway).  Returns (emitted tokens [steps, batch],
+    total flips, group approx bytes).  ``pattern=None`` → clean run.
+
+    With ``force`` (the clean run's emitted stream) the decode is
+    teacher-forced on the clean trajectory: every step sees the clean
+    context, so ``emitted != clean`` counts positions whose next-token
+    prediction the faults actually changed — one early argmax flip does
+    not lock every later position into disagreement, which would square-
+    wave the metric and hide the per-group dose-response the frontier
+    solver needs."""
+    vocab = model.cfg.vocab
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(cfg.seed + 7),
+        (cfg.batch, cfg.prompt_len), 1, vocab,
+    )
+    cache = model.init_cache(cfg.batch, cfg.prompt_len + cfg.steps + 1)
+    step_fn = jax.jit(build_serve_step(model))
+    resident = {"params": params, "cache": cache}
+    masked = (
+        group_regions(space, resident, pattern) if pattern is not None
+        else None
+    )
+    approx_bytes = (
+        regions_lib.count_bytes(resident, masked)[0] if masked is not None
+        else 0
+    )
+    flips_total = 0
+    emitted: List[np.ndarray] = []
+    S0 = cfg.prompt_len
+    nxt = prompts[:, :1]
+    for t in range(S0 + cfg.steps - 1):
+        if t < S0:
+            tok = prompts[:, t:t + 1]
+        elif force is not None:
+            tok = jnp.asarray(force[t - S0])[:, None]
+        else:
+            tok = nxt
+        if masked is not None and ber > 0.0:
+            resident, flips = _inject_and_scrub(
+                space, resident, masked, ber, jax.random.fold_in(ep_key, t)
+            )
+            flips_total += flips
+        nxt_flat, _, new_cache = step_fn(
+            resident["params"], resident["cache"], {"tokens": tok},
+            jnp.asarray(t, jnp.int32),
+        )
+        resident = {"params": resident["params"], "cache": new_cache}
+        nxt = nxt_flat[:, None]
+        if t >= S0 - 1:
+            emitted.append(np.asarray(nxt_flat))
+    return np.stack(emitted), flips_total, approx_bytes
+
+
+def _train_episode(
+    model: Any,
+    space: ApproxSpace,
+    cfg: CampaignConfig,
+    pattern: Optional[str],
+    ber: float,
+    ep_key: jax.Array,
+) -> Tuple[np.ndarray, int, int]:
+    """One injected train episode.  Returns (per-step losses, total flips,
+    group approx bytes).  ``pattern=None`` → clean run."""
+    vocab = model.cfg.vocab
+    opt = make_optimizer(warmup=2, total=cfg.steps)
+    state = init_train_state(model, opt, jax.random.PRNGKey(cfg.seed))
+    # the campaign scrubs host-side between steps; the step itself runs raw
+    step_fn = jax.jit(build_train_step(model, opt, space=ApproxSpace(mode="off")))
+    resident = {"params": state["params"], "opt": state["opt"]}
+    masked = (
+        group_regions(space, resident, pattern) if pattern is not None
+        else None
+    )
+    approx_bytes = (
+        regions_lib.count_bytes(resident, masked)[0] if masked is not None
+        else 0
+    )
+    flips_total = 0
+    losses: List[float] = []
+    for i in range(cfg.steps):
+        if masked is not None and ber > 0.0:
+            resident = {"params": state["params"], "opt": state["opt"]}
+            resident, flips = _inject_and_scrub(
+                space, resident, masked, ber, jax.random.fold_in(ep_key, i)
+            )
+            flips_total += flips
+            state = {**state, **resident}
+        batch = {
+            "tokens": jax.random.randint(
+                jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 11), i),
+                (cfg.batch, cfg.seq_len), 1, vocab,
+            )
+        }
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    return np.asarray(losses), flips_total, approx_bytes
+
+
+# ---------------------------------------------------------------------------
+# The campaign driver.
+# ---------------------------------------------------------------------------
+
+
+def run_campaign(
+    model: Any,
+    cfg: CampaignConfig,
+    params: Any = None,
+) -> ToleranceProfile:
+    """Sweep ``cfg.groups`` × ``cfg.refresh_points`` and return the measured
+    ``ToleranceProfile``.  ``params`` defaults to ``model.init(seed)``; pass
+    trained params to profile a real deployment."""
+    space = campaign_space(cfg.groups)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(cfg.seed))
+
+    if cfg.episode == "serve":
+        clean, _, _ = _serve_episode(
+            model, params, space, cfg, None, 0.0, jax.random.PRNGKey(0)
+        )
+    else:
+        clean, _, _ = _train_episode(
+            model, space, cfg, None, 0.0, jax.random.PRNGKey(0)
+        )
+    half = cfg.steps // 2
+
+    cells: List[ProfileCell] = []
+    for gi, group in enumerate(cfg.groups):
+        for pi, refresh_s in enumerate(cfg.refresh_points):
+            mm = ApproxMemoryModel.from_refresh(refresh_s)
+            ep_key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(cfg.seed), gi), pi
+            )
+            faults0 = _group_faults(space, group.name)
+            if cfg.episode == "serve":
+                emitted, flips, nbytes = _serve_episode(
+                    model, params, space, cfg, group.pattern, mm.ber, ep_key,
+                    force=clean,
+                )
+                quality = float(np.mean(emitted != clean))
+            else:
+                losses, flips, nbytes = _train_episode(
+                    model, space, cfg, group.pattern, mm.ber, ep_key
+                )
+                quality = float(
+                    np.mean(losses[half:]) - np.mean(clean[half:])
+                )
+            faults = _group_faults(space, group.name) - faults0
+            cells.append(ProfileCell(
+                group=group.name,
+                refresh_s=float(refresh_s),
+                ber=float(mm.ber),
+                energy_saving=float(mm.energy_saving),
+                quality=quality,
+                flips=int(flips),
+                faults_per_step=faults / float(cfg.steps),
+                approx_bytes=int(nbytes),
+            ))
+
+    return ToleranceProfile(
+        model=str(getattr(model.cfg, "name", type(model).__name__)),
+        episode=cfg.episode,
+        metric=_METRICS[cfg.episode],
+        steps=cfg.steps,
+        seed=cfg.seed,
+        groups=cfg.groups,
+        refresh_points=tuple(float(r) for r in cfg.refresh_points),
+        cells=tuple(cells),
+    )

@@ -52,3 +52,12 @@ def get_config(name: str) -> ArchConfig:
             f"unknown architecture {name!r}; known: {sorted(REGISTRY)}"
         )
     return REGISTRY[name]
+
+
+# autopilot campaign presets (README §Autopilot) — imported after the
+# registry exists because the preset recipes resolve through get_config
+from .autopilot_presets import (  # noqa: E402,F401
+    AutopilotPreset,
+    get_preset,
+    preset_names,
+)

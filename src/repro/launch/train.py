@@ -301,6 +301,10 @@ def train_loop(
         # space.rule_stats() below
         state = init_train_state(model, opt, key, space=space)
     rc_space = space if "rule_counts" in state else None
+    guard = None
+    if space.config.autopilot is not None:
+        from ..autopilot.guard import OnlineGuard  # deferred: launch has no
+        guard = OnlineGuard(space, space.config.autopilot)  # autopilot dep
     if mesh is not None:
         rules = rules or sh.rules_for_mesh(mesh)
         space.use_mesh(mesh, rules)
@@ -322,6 +326,21 @@ def train_loop(
                 state, jax.random.fold_in(key, 10_000 + i), ber, space
             )
         state, metrics = step_fn(state, data_fn(i))
+        if guard is not None and (i + 1) % guard.cfg.window == 0:
+            # the in-jit scrub ledger must land in space.rule_stats() before
+            # the guard reads its window delta
+            state = _fold_rule_counts(space, state)
+            decisions = guard.observe()
+            if decisions:
+                # the step closes over the old rules' detectors/fills —
+                # rebuild against the tightened RuleSet (labels and n_rules
+                # are preserved by the guard, so the state's ledger block
+                # stays shape-compatible)
+                step_fn = jax.jit(
+                    build_train_step(model, opt, n_micro=n_micro, space=space),
+                    donate_argnums=(0,) if mesh is not None else (),
+                )
+                history.append({"step": i, "autopilot": decisions})
         if log_every and (i % log_every == 0 or i == steps - 1):
             history.append(
                 {"step": i, **{k: float(v) for k, v in metrics.items()},

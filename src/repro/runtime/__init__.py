@@ -26,7 +26,7 @@ delegates here and warns; new code should construct an ``ApproxSpace``
 directly.
 """
 from ..core.rules import Detector, RepairRule, RuleSet  # noqa: F401
-from .config import ApproxConfig, ScrubSchedule  # noqa: F401
+from .config import ApproxConfig, AutopilotConfig, ScrubSchedule  # noqa: F401
 from .space import (  # noqa: F401
     ApproxSpace,
     inject_tree,
@@ -39,6 +39,7 @@ from .plan import RepairPlan, serving_scope  # noqa: F401
 __all__ = [
     "ApproxConfig",
     "ApproxSpace",
+    "AutopilotConfig",
     "Detector",
     "RepairPlan",
     "RepairRule",

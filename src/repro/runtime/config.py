@@ -47,6 +47,62 @@ class ScrubSchedule:
 
 
 @dataclasses.dataclass(frozen=True)
+class AutopilotConfig:
+    """The online-guard contract emitted by the autopilot frontier solver
+    (README §Autopilot).
+
+    The profiling campaign measures, per rule label, how many fatal events
+    the detector is *expected* to report per step at the assigned refresh
+    point.  The guard watches ``ApproxSpace.rule_stats()`` deltas per
+    ``window`` steps and compares observed counts against
+    ``tolerance × expected × window + floor``; ``patience`` consecutive
+    over-threshold windows tighten the drifting group's rule one stage
+    (stricter detector/trigger, then demotion to the exact-ECC rule), and
+    ``cooldown`` windows must pass before the same group can be tightened
+    again — the hysteresis that keeps one noisy window from cascading.
+
+      window     steps per observation window
+      tolerance  multiplier over the profiled expectation before a strike
+      floor      absolute event slack added to every threshold (guards the
+                 expected≈0 labels against single-event trips)
+      patience   consecutive over-threshold windows before tightening
+      cooldown   windows to ignore a label after tightening it
+      expected   ordered (rule label, expected fatal events per step)
+    """
+
+    window: int = 8
+    tolerance: float = 4.0
+    floor: float = 4.0
+    patience: int = 2
+    cooldown: int = 2
+    expected: Tuple[Tuple[str, float], ...] = ()
+
+    def __post_init__(self):
+        if self.window <= 0:
+            raise ValueError("autopilot window must be positive")
+        if self.patience <= 0:
+            raise ValueError("autopilot patience must be positive")
+        if isinstance(self.expected, dict):
+            object.__setattr__(
+                self, "expected", tuple(sorted(self.expected.items()))
+            )
+
+    def expected_rate(self, label: str) -> float:
+        """Profiled fatal events per step for ``label`` (0.0 if unknown)."""
+        for name, rate in self.expected:
+            if name == label:
+                return float(rate)
+        return 0.0
+
+    def threshold(self, label: str) -> float:
+        """Observed events per window above this are a strike."""
+        return (
+            self.tolerance * self.expected_rate(label) * self.window
+            + self.floor
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class ApproxConfig:
     """One frozen config owning repair, injection, regions, and scheduling.
 
@@ -96,6 +152,10 @@ class ApproxConfig:
     )
     scrub: ScrubSchedule = ScrubSchedule()
     rules: Optional[rules_lib.RuleSet] = None
+    # Online guard contract (README §Autopilot).  None disables the guard;
+    # an AutopilotConfig arms it in train_loop (serving has its own switch
+    # on ServingConfig.autopilot).
+    autopilot: Optional[AutopilotConfig] = None
 
     def __post_init__(self):
         if self.mode not in _MODES:

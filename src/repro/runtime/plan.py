@@ -409,6 +409,7 @@ def plan_for(
     scope: str = "tree",
     ber: Optional[float] = None,
     trigger: str = "forced",
+    regions: Any = None,
 ) -> RepairPlan:
     """Plan one repair pass over ``tree`` for ``space``.
 
@@ -425,6 +426,11 @@ def plan_for(
     (layout, trigger) pair is one executable.  The rule-set digest joins the
     cache key; reference/inject scopes ignore the trigger (forced /
     mode-independent respectively).
+
+    ``regions`` overrides the space's cached region tree (same treedef) —
+    the autopilot campaign's per-group injection masks.  The override's
+    leaf values join the cache key, so each distinct mask compiles its own
+    executable and masks never alias each other's plans.
     """
     if scope not in SCOPES:
         raise ValueError(f"bad plan scope {scope!r}; expected one of {SCOPES}")
@@ -446,16 +452,20 @@ def plan_for(
     shardings = tuple(_sharding_of(leaf) for leaf in leaves)
     extra = float(ber) if scope == "inject" else None
     kernels_on = kernel_plans_enabled()
+    regions_key = (
+        None if regions is None else tuple(jax.tree.leaves(regions))
+    )
     key = (
         scope, trigger, treedef, avals, shardings, extra,
-        space._rules_digest, kernels_on,
+        space._rules_digest, kernels_on, regions_key,
     )
 
     plan = space._plan_cache.get(key)
     if plan is not None:
         return plan
 
-    regions = space.regions_for(tree)
+    if regions is None:
+        regions = space.regions_for(tree)
     rule_tree, index_tree = space.rules_for(tree)
     placement = _placement(shardings)
     if (

@@ -36,6 +36,7 @@ repair.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -558,14 +559,19 @@ class ApproxSpace:
         scope: str = "tree",
         ber: Optional[float] = None,
         trigger: str = "forced",
+        regions: Any = None,
     ):
         """The ``RepairPlan`` for one (scope, trigger, state layout) pair —
         cached by ``(scope, trigger, treedef, avals, shardings, rule-set
         digest)`` so each distinct layout × rule-set traces its compiled
-        executable exactly once (README §Distributed repair)."""
+        executable exactly once (README §Distributed repair).  ``regions``
+        overrides the space's cached region tree (the autopilot campaign's
+        per-group injection masks); its leaves join the cache key."""
         from . import plan as plan_lib  # deferred: plan builds on us
 
-        return plan_lib.plan_for(self, tree, scope=scope, ber=ber, trigger=trigger)
+        return plan_lib.plan_for(
+            self, tree, scope=scope, ber=ber, trigger=trigger, regions=regions
+        )
 
     # ---------------------------------------------------------------- regions
     def rules_for(self, tree: Any) -> Tuple[Any, Any]:
@@ -608,6 +614,33 @@ class ApproxSpace:
     def region_bytes(self, tree: Any) -> Tuple[int, int]:
         """(approx_bytes, exact_bytes) of ``tree`` under this space's rules."""
         return regions_lib.count_bytes(tree, self.regions_for(tree))
+
+    # ------------------------------------------------------------- rule swap
+    def set_rules(self, ruleset: rules_lib.RuleSet) -> "ApproxSpace":
+        """Swap in a new repair ``RuleSet`` at runtime — the autopilot
+        guard's tightening mechanism (README §Autopilot).
+
+        Every derived structure keyed on the rule set is invalidated: the
+        per-leaf rule/region assignment caches, the plan cache (executables
+        close over detectors and fills), and the rules digest.  The per-rule
+        counter ledger survives when the label layout is unchanged (the
+        guard only *replaces* rules in place, keeping labels/positions, so
+        observed-rate windows stay comparable across a tighten); a layout
+        change resets it.
+        """
+        old_labels = self._ruleset.labels()
+        self.config = dataclasses.replace(self.config, rules=ruleset)
+        self._ruleset = self.config.ruleset
+        self._rules_digest = self._ruleset.digest()
+        self._rule_cache.clear()
+        self._region_cache.clear()
+        self._plan_cache.clear()
+        if (
+            self._rule_counts is not None
+            and self._ruleset.labels() != old_labels
+        ):
+            self._rule_counts = None
+        return self
 
     # ------------------------------------------------------------ mechanisms
     def use(
@@ -748,6 +781,7 @@ class ApproxSpace:
         stats: Optional[stats_lib.Stats] = None,
         record: bool = True,
         donate: bool = False,
+        regions: Any = None,
     ) -> Tuple[Any, Any]:
         """Simulation boundary: one approximate-memory window of bit flips
         over the approximate region of ``tree``.
@@ -762,12 +796,23 @@ class ApproxSpace:
         flips would; the compiled executable (cached per layout, donated
         buffers with ``donate=True``) flips shard-locally and reduces the
         flip count globally, never per-replica.
+
+        ``regions`` overrides the space's region tree (same treedef) — the
+        autopilot campaign passes a masked region tree to confine one
+        window's flips to a single region group.  Flip masks are
+        bit-identical across the compiled and eager paths for a given
+        (tree, key, ber, regions): both funnel through ``inject_tree``,
+        which splits ``key`` once per *leaf position*, so masking a leaf
+        EXACT never shifts the keys the remaining leaves draw.
         """
         ber = self.config.resolved_ber if ber is None else ber
+        region_tree = self.regions_for(tree) if regions is None else regions
         if ber <= 0.0 or _has_tracers(tree):
-            out, flips = inject_tree(tree, key, ber, self.regions_for(tree))
+            out, flips = inject_tree(tree, key, ber, region_tree)
         else:
-            plan = self.plan_for(tree, scope="inject", ber=ber)
+            plan = self.plan_for(
+                tree, scope="inject", ber=ber, regions=regions
+            )
             out, flips = plan.run(tree, key=key, donate=donate)
         if stats is not None:
             return out, stats_lib.record_flips(stats, flips)

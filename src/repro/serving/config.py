@@ -9,6 +9,7 @@ field; the invariants below keep the scheduler deadlock-free.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Optional
 
 _REPAIR_MODES = ("page", "whole", "off")
 _PAGED_DECODE = ("auto", "off")
@@ -140,6 +141,12 @@ class ServingConfig:
 
     ber: float = 0.0
     seed: int = 0
+
+    # Online autopilot guard (README §Autopilot): an ``AutopilotConfig``
+    # (runtime.config) arms the engine's per-window fault monitor — drifting
+    # pool rule groups are tightened (stricter detector, then exact
+    # demotion) against the profiled expectations.  ``None`` disables it.
+    autopilot: Optional[Any] = None
 
     def __post_init__(self):
         if self.repair not in _REPAIR_MODES:

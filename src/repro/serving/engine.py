@@ -273,6 +273,14 @@ class Engine:
         # tokens a re-prefill had to re-process after a recompute-style
         # preemption (the cost swap-out exists to avoid)
         self.prefill_tokens_recomputed = 0
+        # online autopilot guard (README §Autopilot): per-window fault
+        # monitor over the pool rules; a trip tightens the drifting group's
+        # rule and rebuilds the fused executables that closed over it
+        self.guard = None
+        self.autopilot_trips = 0
+        if self.cfg.autopilot is not None:
+            from ..autopilot.guard import OnlineGuard  # deferred import
+            self.guard = OnlineGuard(self.space, self.cfg.autopilot)
 
     # ------------------------------------------------------------------ admit
     def add_request(self, prompt: Sequence[int], max_new: int) -> int:
@@ -441,6 +449,30 @@ class Engine:
 
         # (5) background sweep tick
         self._stream = self.repair.sweep_step(t, self._stream)
+
+        # (6) autopilot guard: close the observation window; a trip swapped
+        # the pool RuleSet, so the fused executables that closed over the
+        # old rules' detectors/fills must be rebuilt (the gathered _step_fn
+        # is rules-independent — the engine space never scrubs in-step)
+        if self.guard is not None:
+            decisions = self.guard.tick()
+            if decisions:
+                self.autopilot_trips += len(decisions)
+                self.paged_plan = (
+                    _paged_decode_plan(
+                        self.model, self.space, self.pool, self.cfg
+                    )
+                    if self.cfg.paged_decode == "auto" else None
+                )
+                self._paged_fn = (
+                    self._build_paged_step(self.paged_plan)
+                    if self.paged_plan is not None else None
+                )
+                self._prefill_fn = (
+                    self._build_paged_prefill_step(self.paged_plan)
+                    if self.paged_plan is not None and self.paged_plan.prefill
+                    else None
+                )
 
         self._t += 1
         for rid, toks in emitted.items():
@@ -710,5 +742,6 @@ class Engine:
             "pool_gathers": self.pool.n_gathers,
             "pool_scatters": self.pool.n_scatters,
             "paged_kernel_events": int(self.kernel_counts[6]),  # AT_EV_TOTAL
+            "autopilot_trips": self.autopilot_trips,
             **self.repair.summary(),
         }

@@ -126,6 +126,12 @@ class PrefixCache:
         self.tiers = tiers                        # optional TierManager
         self._entries: Dict[Tuple[int, ...], _Entry] = {}
         self._host_entries: Dict[Tuple[int, ...], _HostEntry] = {}
+        # interior fragments of partial tails: token-prefix → owner entry
+        # key.  A request diverging *inside* an already-forked page matches
+        # the owner's shared rows through one of these and CoW-forks again
+        # instead of re-prefilling the whole tail.  Real entries shadow
+        # fragments (the resident index is always probed first).
+        self._fragments: Dict[Tuple[int, ...], Tuple[int, ...]] = {}
         self._clock = 0
         # observation counters (Engine.cache_stats)
         self.hits = 0
@@ -137,6 +143,7 @@ class PrefixCache:
         self.reuse_scrubs = 0          # detector scrub-on-reuse passes
         self.reuse_ref_repairs = 0     # snapshot reference repairs
         self.reuse_skips = 0           # hits below the dwell threshold
+        self.fragment_hits = 0         # partial matched via an interior key
         self.demotions = 0             # evictions parked in the host tier
         self.promotions = 0            # host entries re-materialized on hit
 
@@ -172,15 +179,28 @@ class PrefixCache:
             full.append(e)
             k += 1
         # bounded tail probe: the longest partial entry extending the chain
-        # inside the next page (≤ page_size - 1 dict probes)
+        # inside the next page (≤ page_size - 1 dict probes).  A miss on
+        # the exact key falls through to the fragment index: the owner's
+        # page holds valid KV for its first n rows (KV at a row depends
+        # only on the tokens up to it, which match), so the hit reuses the
+        # owner's page and the suffix prefill overwrites from row n on.
         partial = None
+        matched = 0
         lo = len(full) * pg
         for n in range(min(cap, lo + pg - 1), lo, -1):
-            e = self._entries.get(toks[:n])
+            key = toks[:n]
+            e = self._entries.get(key)
             if e is None:
-                e = self._promote(toks[:n], n, True, full)
+                e = self._promote(key, n, True, full)
+            if e is None:
+                owner = self._fragments.get(key)
+                if owner is not None:
+                    e = self._entries.get(owner)
+                    if e is not None and e.partial:
+                        self.fragment_hits += 1
             if e is not None and e.partial:
                 partial = e
+                matched = n
                 break
         if not full and partial is None:
             return None
@@ -190,7 +210,7 @@ class PrefixCache:
         if partial is not None:
             self._touch(partial)
             partial.hits += 1
-        n_tokens = partial.n_tokens if partial is not None else lo
+        n_tokens = matched if partial is not None else lo
         return CacheHit(n_tokens=n_tokens, full=tuple(full), partial=partial)
 
     def _promote(
@@ -231,9 +251,28 @@ class PrefixCache:
         if parent is not None:
             parent.n_children += 1
         self._entries[key] = e
+        if e.partial:
+            self._register_fragments(e)
         self._touch(e)
         self.promotions += 1
         return e
+
+    # -------------------------------------------------- interior fragments
+    def _fragment_keys(self, e: _Entry):
+        lo = (e.n_tokens // self.cfg.page_size) * self.cfg.page_size
+        return (e.key[:n] for n in range(lo + 1, e.n_tokens))
+
+    def _register_fragments(self, e: _Entry) -> None:
+        """Index every interior prefix of a partial tail.  Two partials
+        sharing a fragment race; last insert wins (the loser's rows are a
+        miss again — one extra prefill, never a correctness issue)."""
+        for key in self._fragment_keys(e):
+            self._fragments[key] = e.key
+
+    def _drop_fragments(self, e: _Entry) -> None:
+        for key in self._fragment_keys(e):
+            if self._fragments.get(key) == e.key:
+                del self._fragments[key]
 
     def note_admit(self, hit: Optional[CacheHit]) -> None:
         """Count one successful admission against the hit/miss ledger (the
@@ -361,6 +400,8 @@ class PrefixCache:
         if parent is not None:
             parent.n_children += 1
         self._entries[key] = e
+        if partial:
+            self._register_fragments(e)
         self._touch(e)
         self.inserts += 1
         return e
@@ -392,6 +433,8 @@ class PrefixCache:
         if victim is None:
             return None
         del self._entries[victim.key]
+        if victim.partial:
+            self._drop_fragments(victim)
         if victim.parent is not None:
             self._entries[victim.parent].n_children -= 1
         self._demote(victim)
@@ -451,6 +494,7 @@ class PrefixCache:
             "reuse_scrubs": self.reuse_scrubs,
             "reuse_ref_repairs": self.reuse_ref_repairs,
             "reuse_skips": self.reuse_skips,
+            "fragment_hits": self.fragment_hits,
             "host_entries": len(self._host_entries),
             "demotions": self.demotions,
             "promotions": self.promotions,

@@ -1,0 +1,492 @@
+"""EDEN-style BER autopilot: campaign determinism + JSON round trips, the
+frontier solver's budget/collapse logic, the online guard's hysteresis
+ladder, and the train-loop / serving-engine wiring."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_transformer
+from repro.autopilot import (
+    CampaignConfig,
+    FrontierAssignment,
+    GroupAssignment,
+    NOMINAL_REFRESH_S,
+    OnlineGuard,
+    ProfileCell,
+    RegionGroup,
+    ToleranceProfile,
+    campaign_space,
+    group_regions,
+    run_campaign,
+    solve_frontier,
+)
+from repro.core import regions as regions_lib
+from repro.core.rules import Detector, RepairRule, RuleSet
+from repro.runtime import ApproxConfig, ApproxSpace, AutopilotConfig
+
+
+WEIGHT_RULE = RepairRule(
+    detect=Detector(nan=True, inf=True, max_magnitude=1e3),
+    fill="neighbor_mean", trigger="boundary",
+)
+
+
+# ----------------------------------------------------------------- configs
+def test_autopilot_config_validates_and_normalizes():
+    cfg = AutopilotConfig(expected={"b": 1.0, "a": 0.5})
+    assert cfg.expected == (("a", 0.5), ("b", 1.0))     # sorted tuple
+    assert cfg.expected_rate("a") == 0.5
+    assert cfg.expected_rate("missing") == 0.0
+    # threshold = tolerance * rate * window + floor
+    assert cfg.threshold("b") == pytest.approx(
+        cfg.tolerance * 1.0 * cfg.window + cfg.floor
+    )
+    with pytest.raises(ValueError):
+        AutopilotConfig(window=0)
+    with pytest.raises(ValueError):
+        AutopilotConfig(patience=0)
+
+
+def test_campaign_config_validation():
+    g = RegionGroup(name="g", pattern="params/")
+    with pytest.raises(ValueError):
+        CampaignConfig(groups=(), refresh_points=(1.0,))
+    with pytest.raises(ValueError):
+        CampaignConfig(groups=(g,), refresh_points=())
+    with pytest.raises(ValueError):
+        CampaignConfig(groups=(g, g), refresh_points=(1.0,))
+    with pytest.raises(ValueError):
+        CampaignConfig(groups=(g,), refresh_points=(1.0,), episode="eval")
+    with pytest.raises(ValueError):
+        CampaignConfig(groups=(g,), refresh_points=(1.0,), steps=1)
+
+
+# --------------------------------------------------- rule-swap primitives
+def test_ruleset_with_rule_replaces_in_place_keeping_label_and_order():
+    rs = RuleSet((
+        ("params/", RepairRule(detect=Detector(nan=True), label="w")),
+        ("cache/", RepairRule(detect=Detector(nan=True), label="kv")),
+    ))
+    swapped = rs.with_rule("kv", RepairRule.exact_rule())
+    assert [r.label for _, r in swapped.entries] == ["w", "kv"]
+    assert [p for p, _ in swapped.entries] == ["params/", "cache/"]
+    assert swapped.entries[1][1].exact
+    assert not rs.entries[1][1].exact             # original untouched
+    assert swapped.digest() != rs.digest()
+    with pytest.raises(KeyError):
+        rs.with_rule("nope", RepairRule.exact_rule())
+
+
+def test_space_set_rules_swaps_digest_and_preserves_counters():
+    rs = RuleSet((
+        ("w", RepairRule(detect=Detector(nan=True), label="w")),
+    ))
+    space = ApproxSpace(ApproxConfig(mode="memory", rules=rs))
+    space.record_rule_counts(
+        jnp.asarray([[3, 1, 4], [0, 0, 0]], jnp.int32)
+    )
+    before = space.rule_stats()["w"]
+    d0 = space.ruleset.digest()
+    space.set_rules(rs.with_rule("w", RepairRule(
+        detect=Detector(nan=True, inf=True, max_magnitude=10.0),
+        label="w",
+    )))
+    assert space.ruleset.digest() != d0
+    # same labels -> the per-rule ledger survives the swap
+    assert space.rule_stats()["w"] == before
+    assert space.config.rules is space.ruleset
+
+
+# ------------------------------------------------------------ region masks
+def test_group_regions_masks_non_matching_leaves_exact():
+    tree = {
+        "params": {"w": jnp.ones((4, 4))},
+        "cache": {"k": jnp.ones((2, 2))},
+        "step": jnp.zeros((), jnp.int32),
+    }
+    space = campaign_space((RegionGroup(name="g", pattern=r"cache/"),))
+    masked = group_regions(space, tree, r"cache/")
+    flat = {
+        regions_lib.path_str(p): r
+        for (p, _), r in zip(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            jax.tree.leaves(masked),
+        )
+    }
+    assert flat["cache/k"] == regions_lib.Region.APPROX
+    assert flat["params/w"] == regions_lib.Region.EXACT
+    assert flat["step"] == regions_lib.Region.EXACT
+
+
+def test_masked_injection_confines_flips_to_the_group():
+    tree = {
+        "params": {"w": jnp.ones((64, 64))},
+        "cache": {"k": jnp.ones((64, 64))},
+    }
+    space = campaign_space((RegionGroup(name="g", pattern=r"cache/"),))
+    masked = group_regions(space, tree, r"cache/")
+    out, flips = space.inject(
+        tree, jax.random.PRNGKey(0), 1e-3, record=False, regions=masked
+    )
+    assert int(flips) > 0
+    np.testing.assert_array_equal(
+        np.asarray(out["params"]["w"]), np.asarray(tree["params"]["w"])
+    )
+    assert not np.array_equal(
+        np.asarray(out["cache"]["k"]), np.asarray(tree["cache"]["k"])
+    )
+
+
+# ------------------------------------------------------- campaign + JSON
+def _mini_campaign():
+    return CampaignConfig(
+        groups=(
+            RegionGroup(
+                name="ffn", pattern=r"params/layers/mlp/", rule=WEIGHT_RULE
+            ),
+            RegionGroup(name="kv", pattern=r"cache/"),
+        ),
+        refresh_points=(1.0, 4.0),
+        episode="serve",
+        steps=4,
+        batch=2,
+        prompt_len=4,
+        seed=0,
+    )
+
+
+def test_campaign_is_seed_deterministic_and_round_trips_json():
+    model, params = tiny_transformer()
+    cfg = _mini_campaign()
+    p1 = run_campaign(model, cfg, params=params)
+    p2 = run_campaign(model, cfg, params=params)
+    assert p1.cells == p2.cells
+    assert p1.metric == "token_divergence"
+    assert len(p1.cells) == 4                     # 2 groups x 2 points
+    assert {c.group for c in p1.cells} == {"ffn", "kv"}
+    # injected cells actually flipped bits at the aggressive point
+    assert p1.cell("ffn", 4.0).flips > 0
+    rt = ToleranceProfile.from_json(p1.to_json())
+    assert rt == p1
+    json.loads(p1.to_json())                      # valid JSON text
+
+
+def test_campaign_train_episode_measures_loss_delta():
+    model, params = tiny_transformer()
+    cfg = dataclasses.replace(
+        _mini_campaign(),
+        episode="train",
+        groups=(
+            RegionGroup(
+                name="ffn", pattern=r"params/layers/mlp/", rule=WEIGHT_RULE
+            ),
+        ),
+        refresh_points=(4.0,),
+    )
+    prof = run_campaign(model, cfg, params=params)
+    assert prof.metric == "loss_delta"
+    (cell,) = prof.cells
+    assert cell.flips > 0
+    assert np.isfinite(cell.quality)
+
+
+# ------------------------------------------------------------- the solver
+def _profile(cells):
+    groups = tuple(
+        RegionGroup(name=n, pattern=f"{n}/")
+        for n in sorted({c.group for c in cells})
+    )
+    return ToleranceProfile(
+        model="m", episode="serve", metric="token_divergence",
+        steps=4, seed=0, groups=groups,
+        refresh_points=tuple(sorted({c.refresh_s for c in cells})),
+        cells=tuple(cells),
+    )
+
+
+def _cell(group, refresh, quality, faults=0.5, nbytes=1024):
+    from repro.core.injection import ApproxMemoryModel
+
+    mm = ApproxMemoryModel.from_refresh(refresh)
+    return ProfileCell(
+        group=group, refresh_s=refresh, ber=mm.ber,
+        energy_saving=mm.energy_saving, quality=quality,
+        flips=7, faults_per_step=faults, approx_bytes=nbytes,
+    )
+
+
+def test_solver_picks_longest_refresh_within_budget():
+    prof = _profile([
+        _cell("a", 0.256, 0.0),
+        _cell("a", 1.0, 0.1),
+        _cell("a", 4.0, 0.9),
+    ])
+    fr = solve_frontier(prof, budget=0.25)
+    a = fr.assignment("a")
+    assert a.refresh_s == 1.0 and not a.collapsed
+    assert a.quality == 0.1
+    assert fr.refresh_map() == {"a/": 1.0}
+
+
+def test_solver_collapses_hopeless_group_to_exact_island():
+    prof = _profile([
+        _cell("a", 0.256, 0.0),
+        _cell("a", 1.0, 0.05),
+        _cell("s", 0.256, 0.6),
+        _cell("s", 1.0, float("nan")),      # diverged episode: never passes
+    ])
+    fr = solve_frontier(prof, budget=0.25)
+    s = fr.assignment("s")
+    assert s.collapsed and s.refresh_s == NOMINAL_REFRESH_S
+    assert s.ber == 0.0 and s.energy_saving == 0.0
+    rules = dict(fr.ruleset().entries)
+    assert rules["s/"].exact and rules["s/"].label == "s"
+    assert not rules["a/"].exact
+    # guard contract: collapsed group expects zero faults
+    auto = fr.autopilot()
+    assert auto.expected_rate("s") == 0.0
+    assert auto.expected_rate("a") == 0.5
+    # byte-weighted saving counts the collapsed group's bytes at 0 saving
+    assert 0.0 < fr.energy_saving < fr.assignment("a").energy_saving
+
+
+def test_frontier_round_trips_json():
+    prof = _profile([
+        _cell("a", 1.0, 0.1),
+        _cell("s", 1.0, 0.9),
+    ])
+    fr = solve_frontier(prof, budget=0.3)
+    rt = FrontierAssignment.from_json(fr.to_json())
+    assert rt.assignments == fr.assignments
+    assert rt.budget == fr.budget
+    d = json.loads(fr.to_json())
+    assert {e["rule"]["label"] for e in d["ruleset"]} == {"a", "s"}
+
+
+# ------------------------------------------------------------- the guard
+class _FakeSpace:
+    """Scripted rule_stats stream for hysteresis tests."""
+
+    def __init__(self, ruleset):
+        self._ruleset = ruleset
+        self.faults = {r.label: 0 for _, r in ruleset.entries}
+        self.swaps = []
+
+    @property
+    def ruleset(self):
+        return self._ruleset
+
+    def rule_stats(self):
+        return {
+            label: {"nan_found": n, "inf_found": 0, "events": n}
+            for label, n in self.faults.items()
+        }
+
+    def set_rules(self, ruleset):
+        self._ruleset = ruleset
+        self.swaps.append(ruleset)
+        return self
+
+
+def _guarded(window=2, patience=2, cooldown=1, expected=(("g", 0.0),),
+             rule=None):
+    rule = rule or RepairRule(
+        detect=Detector(nan=True), fill="zero", trigger="boundary",
+        label="g",
+    )
+    space = _FakeSpace(RuleSet((("g/", rule),)))
+    cfg = AutopilotConfig(
+        window=window, tolerance=1.0, floor=0.5, patience=patience,
+        cooldown=cooldown, expected=expected,
+    )
+    return space, OnlineGuard(space, cfg)
+
+
+def test_guard_needs_patience_consecutive_bad_windows():
+    space, guard = _guarded(patience=2)
+    space.faults["g"] += 5
+    assert guard.observe() == []                  # strike 1: no trip
+    space.faults["g"] += 5
+    decisions = guard.observe()                   # strike 2: trip
+    assert len(decisions) == 1
+    assert decisions[0]["label"] == "g"
+    assert decisions[0]["action"] == "stricter"
+    assert len(space.swaps) == 1
+
+
+def test_guard_clean_window_resets_strikes():
+    space, guard = _guarded(patience=2)
+    space.faults["g"] += 5
+    assert guard.observe() == []
+    assert guard.observe() == []                  # clean window: reset
+    space.faults["g"] += 5
+    assert guard.observe() == []                  # strike 1 again, no trip
+    assert space.swaps == []
+
+
+def test_guard_cooldown_ignores_windows_after_a_trip():
+    space, guard = _guarded(patience=1, cooldown=2)
+    space.faults["g"] += 5
+    assert len(guard.observe()) == 1              # trip immediately
+    space.faults["g"] += 50
+    assert guard.observe() == []                  # cooldown window 1
+    space.faults["g"] += 50
+    assert guard.observe() == []                  # cooldown window 2
+    space.faults["g"] += 50
+    assert len(guard.observe()) == 1              # armed again
+
+
+def test_guard_ladder_stricter_then_exact():
+    rule = RepairRule(
+        detect=Detector(nan=True), fill="zero", trigger="reactive",
+        label="g",
+    )
+    space, guard = _guarded(patience=1, cooldown=0, rule=rule)
+    space.faults["g"] += 5
+    (d1,) = guard.observe()
+    assert d1["action"] == "stricter" and d1["stage"] == 1
+    tightened = space.ruleset.entries[0][1]
+    assert tightened.detect.nan and tightened.detect.inf
+    assert tightened.trigger == "boundary"
+    space.faults["g"] += 5
+    (d2,) = guard.observe()
+    assert d2["action"] == "exact" and d2["stage"] == 2
+    assert space.ruleset.entries[0][1].exact
+    # fully demoted: further drift has nothing left to tighten
+    space.faults["g"] += 5
+    assert guard.observe() == []
+    assert guard.summary()["trips"] == 2
+
+
+def test_guard_tick_observes_every_window_steps():
+    space, guard = _guarded(window=3, patience=1)
+    space.faults["g"] += 5
+    assert guard.tick() == []
+    assert guard.tick() == []
+    assert len(guard.tick()) == 1                 # 3rd tick closes a window
+
+
+def test_guard_within_expectation_never_trips():
+    space, guard = _guarded(patience=1, expected=(("g", 2.0),))
+    # threshold = 1.0 * 2.0 * 2 + 0.5 = 4.5; 4 faults/window is in budget
+    for _ in range(5):
+        space.faults["g"] += 4
+        assert guard.observe() == []
+    assert space.swaps == []
+
+
+# ------------------------------------------------------------- the wiring
+def test_train_loop_guard_tightens_under_fault_pressure():
+    from repro.launch.train import make_optimizer, train_loop
+
+    model, _ = tiny_transformer()
+    rules = RuleSet((
+        (r"params/|opt/", RepairRule(
+            detect=Detector(nan=True, inf=True), fill="zero",
+            trigger="boundary", label="resident",
+        )),
+    ))
+    space = ApproxSpace(ApproxConfig(
+        mode="memory",
+        rules=rules,
+        autopilot=AutopilotConfig(
+            window=2, tolerance=1.0, floor=0.0, patience=1, cooldown=0,
+            expected=(("resident", 0.0),),
+        ),
+    ))
+    vocab = model.cfg.vocab
+
+    def data(i):
+        return {"tokens": jax.random.randint(
+            jax.random.fold_in(jax.random.PRNGKey(3), i), (2, 8), 1, vocab
+        )}
+
+    state, history = train_loop(
+        model, make_optimizer(warmup=1, total=6), data,
+        steps=6, key=jax.random.PRNGKey(0), ber=2e-3, space=space,
+        log_every=0,
+    )
+    trips = [h for h in history if "autopilot" in h]
+    assert trips, "guard never tripped despite ber=2e-3 vs expected 0"
+    first = trips[0]["autopilot"][0]
+    assert first["label"] == "resident"
+    # the deployed rule is now stricter than the profiled one
+    deployed = dict(space.ruleset.entries)[r"params/|opt/"]
+    assert deployed.exact or deployed.detect.max_magnitude is not None
+    # the loop kept training after the executable rebuild
+    assert "rule_counts" in state
+
+
+def test_engine_guard_trips_and_keeps_serving():
+    from repro.serving import Engine, ServingConfig
+
+    model, params = tiny_transformer()
+    cfg = ServingConfig(
+        page_size=4, n_pages=16, max_batch=2, max_pages_per_request=4,
+        repair="page", paged_decode="off", ber=2e-3, seed=5,
+        autopilot=AutopilotConfig(
+            window=2, tolerance=1.0, floor=0.0, patience=1, cooldown=0,
+            expected=(("default", 0.0),),
+        ),
+    )
+    eng = Engine(model, params, cfg)
+    assert eng.guard is not None
+    eng.add_request([5, 6, 7], max_new=8)
+    results = eng.run()
+    # served to completion: the prompt plus all 8 new tokens
+    assert len(results[0]["tokens"]) == 3 + 8
+    assert eng.metrics()["autopilot_trips"] >= 1
+    assert eng.guard.trips[0]["label"] == "default"
+
+
+def test_engine_without_autopilot_has_no_guard():
+    from repro.serving import Engine, ServingConfig
+
+    model, params = tiny_transformer()
+    eng = Engine(model, params, ServingConfig(
+        page_size=4, n_pages=16, max_batch=2, max_pages_per_request=4,
+    ))
+    assert eng.guard is None
+    assert eng.metrics()["autopilot_trips"] == 0
+
+
+# ------------------------------------------------------- preset acceptance
+def test_presets_exist_for_transformer_and_recurrent():
+    from repro.configs import get_preset, preset_names
+
+    assert set(preset_names()) >= {"transformer", "recurrent"}
+    for name in ("transformer", "recurrent"):
+        p = get_preset(name)
+        assert len(p.campaign.groups) >= 2
+        assert len(p.campaign.refresh_points) >= 2
+        assert p.budget > 0
+    with pytest.raises(KeyError):
+        get_preset("nope")
+
+
+def test_recurrent_smoke_campaign_separates_state_from_weights():
+    """The acceptance asymmetry at smoke scale: 2 groups x 2 refresh points
+    on the xLSTM preset — the recurrent state must land on a strictly
+    shorter (more conservative) refresh than the projection weights."""
+    from repro.configs import get_preset
+
+    p = get_preset("recurrent", steps=6)
+    p = dataclasses.replace(
+        p, campaign=dataclasses.replace(
+            p.campaign, refresh_points=(1.0, 2.0)
+        )
+    )
+    profile = run_campaign(p.build_model(), p.campaign)
+    frontier = solve_frontier(profile, p.budget)
+    weights = frontier.assignment("proj_weights")
+    state = frontier.assignment("recurrent_state")
+    assert not weights.collapsed
+    assert state.refresh_s < weights.refresh_s
+    # and the emitted artifacts carry the assignment
+    assert frontier.refresh_map()[state.pattern] == state.refresh_s
+    auto = frontier.autopilot()
+    assert auto.expected_rate("proj_weights") >= 0.0

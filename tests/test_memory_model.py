@@ -1,0 +1,122 @@
+"""Edge cases of the refresh→BER→energy model and the expected-fault charge
+(`ApproxMemoryModel.from_refresh`, `ApproxConfig.expected_faults`) — the
+numbers the autopilot campaign, the frontier solver, and the prefix cache's
+dwell gate all budget against."""
+import math
+
+import pytest
+
+from repro.core.injection import _ANCHORS, ApproxMemoryModel
+from repro.runtime import ApproxConfig
+
+
+# ------------------------------------------------------------- from_refresh
+def test_from_refresh_hits_every_anchor_exactly():
+    for t, log_ber, saving in _ANCHORS:
+        mm = ApproxMemoryModel.from_refresh(t)
+        assert mm.refresh_interval_s == t
+        assert mm.ber == pytest.approx(10.0 ** log_ber)
+        assert mm.energy_saving == pytest.approx(saving)
+
+
+def test_from_refresh_clamps_below_first_anchor():
+    """Shorter-than-nominal refresh stays at the nominal BER/saving — the
+    model never extrapolates to negative savings or sub-physical BER."""
+    lo = ApproxMemoryModel.from_refresh(1e-6)
+    first = ApproxMemoryModel.from_refresh(_ANCHORS[0][0])
+    assert lo.ber == first.ber
+    assert lo.energy_saving == first.energy_saving == 0.0
+
+
+def test_from_refresh_clamps_above_last_anchor():
+    """A huge dwell window clamps at the last anchor instead of running the
+    log-linear slope off to BER ~1."""
+    hi = ApproxMemoryModel.from_refresh(1e9)
+    last = ApproxMemoryModel.from_refresh(_ANCHORS[-1][0])
+    assert hi.ber == last.ber == pytest.approx(1e-4)
+    assert hi.energy_saving == last.energy_saving == pytest.approx(0.30)
+
+
+def test_from_refresh_monotone_in_refresh_interval():
+    """Relaxing refresh never lowers BER or the energy saving — the
+    monotonicity the frontier solver's 'longest refresh within budget'
+    argmax relies on."""
+    points = [0.01, 0.064, 0.1, 0.256, 0.5, 1.0, 1.7, 2.0, 3.0, 4.0, 10.0]
+    models = [ApproxMemoryModel.from_refresh(t) for t in points]
+    for a, b in zip(models, models[1:]):
+        assert a.ber <= b.ber
+        assert a.energy_saving <= b.energy_saving
+
+
+def test_from_refresh_interpolates_log_linear_between_anchors():
+    """Midpoint (geometric) between the 1 s and 4 s anchors lands on the
+    geometric-mean BER and the arithmetic-mean saving."""
+    mm = ApproxMemoryModel.from_refresh(2.0)
+    assert mm.ber == pytest.approx(1e-5, rel=1e-9)
+    assert mm.energy_saving == pytest.approx((0.225 + 0.30) / 2)
+
+
+def test_from_refresh_fractional_interval():
+    """Fractional windows interpolate smoothly (no int truncation)."""
+    a = ApproxMemoryModel.from_refresh(0.3)
+    b = ApproxMemoryModel.from_refresh(0.31)
+    assert _ANCHORS[1][0] < 0.3 < 0.31 < _ANCHORS[2][0]
+    assert a.ber < b.ber
+    assert 10.0 ** -9 < a.ber < 10.0 ** -6
+
+
+# ---------------------------------------------------------- expected_faults
+def test_expected_faults_zero_bytes_is_zero():
+    cfg = ApproxConfig(mode="memory", refresh_interval_s=4.0)
+    assert cfg.expected_faults(0, 100.0) == 0.0
+
+
+def test_expected_faults_zero_or_negative_windows_clamp_to_zero():
+    cfg = ApproxConfig(mode="memory", refresh_interval_s=4.0)
+    assert cfg.expected_faults(1024, 0.0) == 0.0
+    # a page scrubbed this very step has non-positive dwell — never a
+    # negative expectation
+    assert cfg.expected_faults(1024, -3.0) == 0.0
+
+
+def test_expected_faults_ber_override_beats_resolved_refresh_ber():
+    """The explicit ``ber=`` argument (the serving engine's simulation BER)
+    takes precedence over the config's refresh-resolved BER."""
+    cfg = ApproxConfig(mode="memory", refresh_interval_s=4.0)   # 1e-4
+    assert cfg.resolved_ber == pytest.approx(1e-4)
+    n_bytes, windows, sim_ber = 64, 2.0, 1e-2
+    got = cfg.expected_faults(n_bytes, windows, ber=sim_ber)
+    assert got == pytest.approx(n_bytes * 8 * sim_ber * windows)
+    assert got != pytest.approx(
+        cfg.expected_faults(n_bytes, windows)
+    )
+
+
+def test_expected_faults_linear_in_bytes_and_windows():
+    cfg = ApproxConfig(mode="memory", ber=1e-6)
+    base = cfg.expected_faults(128, 1.0)
+    assert cfg.expected_faults(256, 1.0) == pytest.approx(2 * base)
+    assert cfg.expected_faults(128, 3.5) == pytest.approx(3.5 * base)
+
+
+def test_expected_faults_fractional_and_huge_dwell():
+    """Fractional windows scale linearly; a huge dwell stays finite (a plain
+    product, never an overflow or a capped probability)."""
+    cfg = ApproxConfig(mode="memory", ber=1e-6)
+    frac = cfg.expected_faults(1024, 0.25)
+    assert frac == pytest.approx(1024 * 8 * 1e-6 * 0.25)
+    huge = cfg.expected_faults(1 << 30, 1e12)
+    assert math.isfinite(huge) and huge > 0
+    assert huge == pytest.approx((1 << 30) * 8 * 1e-6 * 1e12, rel=1e-12)
+
+
+def test_expected_faults_zero_ber_override_charges_nothing():
+    """An explicit ``ber=0.0`` silences the charge even though the config's
+    default refresh point (1.0 s) resolves to a nonzero BER — exact-memory
+    deployments must never gate a scrub on dwell."""
+    cfg = ApproxConfig(mode="memory")
+    assert cfg.resolved_ber > 0.0                       # default 1 s point
+    assert cfg.expected_faults(1 << 20, 1e6) > 0.0
+    assert cfg.expected_faults(1 << 20, 1e6, ber=0.0) == 0.0
+    zeroed = ApproxConfig(mode="memory", ber=0.0)
+    assert zeroed.expected_faults(1 << 20, 1e6) == 0.0

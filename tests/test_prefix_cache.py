@@ -155,6 +155,39 @@ def test_cow_fork_inside_partial_page(model_params):
     assert eng.results[rid]["generated"] == eng0.results[r0]["generated"]
 
 
+def test_interior_fragment_forks_again_instead_of_reprefilling(model_params):
+    """Divergence *inside* an already-forked partial page: the second
+    request shares only an interior fraction of the cached tail, so the
+    exact-key probe misses — the fragment index must still match the
+    owner's valid rows and CoW-fork again instead of re-prefilling them."""
+    model, params = model_params
+    prompt = list(range(1, 12))              # 11 tokens: 2 full pages + 3 rows
+    eng = Engine(model, params, _cfg(prefix_cache=True))
+    eng.add_request(prompt, max_new=4)
+    eng.run()
+    # the cached partial tail holds 3 rows; diverge after its first row
+    rB = eng.add_request(prompt[:9] + [99], max_new=4)
+    eng.run()
+    s = eng.cache_stats()
+    assert s["fragment_hits"] == 1
+    assert s["cow_forks"] == 1
+    # 8 full-page tokens + 1 interior row of the partial were reused
+    assert s["hit_tokens"] == 9
+    assert eng.prefill_tokens_saved == 9
+
+    # the fragment-served bits match the no-cache engine exactly
+    eng0 = Engine(model, params, _cfg())
+    eng0.add_request(prompt, max_new=4)
+    eng0.run()
+    rB0 = eng0.add_request(prompt[:9] + [99], max_new=4)
+    eng0.run()
+    assert eng.results[rB]["generated"] == eng0.results[rB0]["generated"]
+
+    # evicting the owner drops its fragment keys with it
+    eng.cache.evict(eng.cfg.n_pages)
+    assert eng.cache._fragments == {}
+
+
 # --------------------------------------------------- refcount balance / LRU
 def test_refcounts_balance_to_zero_after_drain(model_params):
     model, params = model_params

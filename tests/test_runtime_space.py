@@ -360,6 +360,66 @@ def test_legacy_shims_warn():
         )
 
 
+def _bits(x):
+    return np.asarray(detect.bits_of(x))
+
+
+def test_inject_seed_deterministic_compiled_vs_eager():
+    """Same (tree, key, ber) => bit-identical flip masks through the
+    compiled plan and the eager `inject_tree` path, and across repeated
+    compiled calls — the determinism the autopilot campaign's profiles
+    depend on."""
+    tree = {
+        "a": jax.random.normal(jax.random.PRNGKey(0), (64, 64)),
+        "b": jax.random.normal(jax.random.PRNGKey(1), (32, 128)),
+    }
+    key = jax.random.PRNGKey(7)
+    space = ApproxSpace(ApproxConfig(ber=1e-4))
+
+    c1, f1 = space.inject(tree, key, 1e-4, record=False)   # compiled
+    c2, f2 = space.inject(tree, key, 1e-4, record=False)   # cached exec
+    eager, fe = inject_space_eager(space, tree, key, 1e-4)
+    assert int(f1) == int(f2) == int(fe) > 0
+    for name in ("a", "b"):
+        np.testing.assert_array_equal(_bits(c1[name]), _bits(c2[name]))
+        np.testing.assert_array_equal(_bits(c1[name]), _bits(eager[name]))
+
+
+def inject_space_eager(space, tree, key, ber):
+    """The eager reference: the same per-leaf-position key split the
+    compiled plan funnels through."""
+    from repro.runtime.space import inject_tree
+
+    return inject_tree(tree, key, ber, space.regions_for(tree))
+
+
+def test_inject_region_mask_never_shifts_other_leaves_keys():
+    """Masking one leaf EXACT via `regions=` must leave every other leaf's
+    flip mask bit-identical to the unmasked run — keys are split once per
+    leaf *position*, so the campaign's per-group masks can't perturb the
+    flips the other groups would have drawn."""
+    tree = {
+        "a": jax.random.normal(jax.random.PRNGKey(0), (64, 64)),
+        "b": jax.random.normal(jax.random.PRNGKey(1), (64, 64)),
+        "c": jax.random.normal(jax.random.PRNGKey(2), (64, 64)),
+    }
+    key = jax.random.PRNGKey(11)
+    space = ApproxSpace(ApproxConfig(ber=1e-4))
+
+    full, _ = space.inject(tree, key, 1e-4, record=False)
+    masked_regions = dict(space.regions_for(tree))
+    masked_regions["b"] = regions_lib.Region.EXACT
+    part, _ = space.inject(
+        tree, key, 1e-4, record=False, regions=masked_regions
+    )
+    # the masked leaf is untouched...
+    np.testing.assert_array_equal(_bits(part["b"]), _bits(tree["b"]))
+    # ...and the surviving leaves drew the exact same flips as before
+    np.testing.assert_array_equal(_bits(part["a"]), _bits(full["a"]))
+    np.testing.assert_array_equal(_bits(part["c"]), _bits(full["c"]))
+    assert not np.array_equal(_bits(full["a"]), _bits(tree["a"]))
+
+
 def test_schedule_due():
     sched = ScrubSchedule(boundary=False, interval=4)
     assert [t for t in range(9) if sched.due(t)] == [0, 4, 8]
