@@ -44,6 +44,7 @@ from . import (
     roofline,
     serving_engine,
     table3_counts,
+    traffic,
 )
 
 SECTIONS = (
@@ -53,6 +54,7 @@ SECTIONS = (
     ("energy_model (paper §2.1)", energy_model.main),
     ("roofline (assignment §Roofline)", roofline.main),
     ("serving_engine (README §Serving engine)", serving_engine.main),
+    ("traffic (README §Serving engine — load testing)", traffic.main),
     ("prefix_cache (README §Serving engine)", prefix_cache.main),
     ("repair_pipeline (README §Distributed repair)", repair_pipeline.main),
     ("autopilot (README §Autopilot)", autopilot.main),

@@ -129,6 +129,13 @@ def run(smoke: bool = False):
                     "split-K must resolve >1 splits on the bench config"
                 )
             _workload(engine, n_requests, max_new)
+            # the first step pays trace + compile for every executable the
+            # workload touches; timing it apart keeps us_per_token a
+            # steady-state number instead of a compile-time artifact
+            t0 = time.perf_counter()
+            engine.step()
+            warmup_us = 1e6 * (time.perf_counter() - t0)
+            warm_toks = engine.tokens_emitted
             t0 = time.perf_counter()
             results = engine.run()
             dt = time.perf_counter() - t0
@@ -138,11 +145,12 @@ def run(smoke: bool = False):
             per_mode[arm] = {**m, "tokens": {
                 rid: results[rid]["tokens"] for rid in results
             }}
-            us_per_token = 1e6 * dt / max(m["tokens_emitted"], 1)
+            us_per_token = 1e6 * dt / max(m["tokens_emitted"] - warm_toks, 1)
             name = f"serving_{arm}_ber{ber:g}"
             rows.append((
                 name,
                 us_per_token,
+                f"warmup_us={warmup_us:.0f};"
                 f"scrubbed_bytes_per_token={m['scrubbed_bytes_per_token']:.0f};"
                 f"tokens={m['tokens_emitted']};"
                 f"preempt={m['n_preemptions']};events={d['events']};"
@@ -151,6 +159,7 @@ def run(smoke: bool = False):
             ))
             arm_metrics[name] = {
                 "us_per_token": us_per_token,
+                "warmup_us": warmup_us,
                 "scrubbed_bytes_per_token": m["scrubbed_bytes_per_token"],
                 "tokens_emitted": m["tokens_emitted"],
                 "pool_gathers": m["pool_gathers"],
@@ -203,6 +212,12 @@ def run_tiered(smoke: bool = False):
     def one(name: str, ber: float, host_pages: int):
         engine = Engine(model, params, _tiered_engine(ber, host_pages))
         _workload(engine, n_requests, max_new)
+        # same warmup split as the serving rows: the first step carries
+        # trace + compile, us_per_token reports the steady state
+        t0 = time.perf_counter()
+        engine.step()
+        warmup_us = 1e6 * (time.perf_counter() - t0)
+        warm_toks = engine.tokens_emitted
         t0 = time.perf_counter()
         results = engine.run()
         dt = time.perf_counter() - t0
@@ -211,7 +226,8 @@ def run_tiered(smoke: bool = False):
         ts = engine.tier_stats()
         toks = max(m["tokens_emitted"], 1)
         row = {
-            "us_per_token": 1e6 * dt / toks,
+            "us_per_token": 1e6 * dt / max(m["tokens_emitted"] - warm_toks, 1),
+            "warmup_us": warmup_us,
             "tokens_emitted": m["tokens_emitted"],
             "prefill_tokens_recomputed": m["prefill_tokens_recomputed"],
             "boundary_scrub_bytes_per_token":

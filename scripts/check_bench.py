@@ -37,6 +37,7 @@ SECTION_KEYS = (
 SERVING_KEYS = ("rows", "paged_vs_gather_bytes_ok")
 SERVING_ROW_KEYS = (
     "us_per_token",
+    "warmup_us",
     "scrubbed_bytes_per_token",
     "tokens_emitted",
     "pool_gathers",
@@ -46,6 +47,7 @@ SERVING_ROW_KEYS = (
 TIERED_KEYS = ("rows", "swap_beats_recompute_ok")
 TIERED_ROW_KEYS = (
     "us_per_token",
+    "warmup_us",
     "tokens_emitted",
     "prefill_tokens_recomputed",
     "boundary_scrub_bytes_per_token",
@@ -53,6 +55,32 @@ TIERED_ROW_KEYS = (
     "swap_ins",
     "recompute_fallbacks",
     "n_preemptions",
+)
+TRAFFIC_KEYS = (
+    "rows",
+    "seed_deterministic",
+    "desync_token_parity_ok",
+    "desync_fewer_syncs_ok",
+)
+TRAFFIC_ROW_KEYS = (
+    "tokens_per_s",
+    "p50_ms_per_token",
+    "p99_ms_per_token",
+    "ttft_p50_ms",
+    "ttft_p99_ms",
+    "scrubbed_bytes_per_token",
+    "tokens_emitted",
+    "n_preemptions",
+    "n_host_syncs",
+    "host_syncs_per_step",
+)
+# the README quotes the latency/throughput frontier at both BER points,
+# the preemption storm, and the desynchronized-drain comparison arm
+TRAFFIC_ROWS = (
+    "traffic_ber0",
+    "traffic_ber0.001",
+    "traffic_storm_ber0.001",
+    "traffic_desync_ber0.001",
 )
 PREFIX_KEYS = ("rows", "zero_ber_parity_ok", "gated_vs_always_bytes_ok")
 PREFIX_ROW_KEYS = (
@@ -150,6 +178,24 @@ def check(path: str) -> int:
                 checked += 1
                 if key not in row:
                     missing.append(f"sections.tiered_kv.rows.{name}.{key}")
+    traffic = sections.get("traffic")
+    if not isinstance(traffic, dict):
+        missing.append("sections.traffic")
+    else:
+        for key in TRAFFIC_KEYS:
+            checked += 1
+            if key not in traffic:
+                missing.append(f"sections.traffic.{key}")
+        rows = traffic.get("rows") or {}
+        for name in TRAFFIC_ROWS:
+            checked += 1
+            if name not in rows:
+                missing.append(f"sections.traffic.rows.{name}")
+        for name, row in rows.items():
+            for key in TRAFFIC_ROW_KEYS:
+                checked += 1
+                if key not in row:
+                    missing.append(f"sections.traffic.rows.{name}.{key}")
     prefix = sections.get("prefix_cache")
     if not isinstance(prefix, dict):
         missing.append("sections.prefix_cache")

@@ -11,6 +11,9 @@
 #                                 # 2-point campaign + online-guard trip
 #   bash scripts/ci.sh bench      # benchmark sections (--smoke shapes),
 #                                 # records + validates BENCH_repair.json
+#   bash scripts/ci.sh traffic    # traffic smoke lane (8 fake devices):
+#                                 # workload seed-determinism + sharded-vs-
+#                                 # single-device token parity under load
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -68,10 +71,25 @@ if [[ "$what" == "all" || "$what" == "bench" ]]; then
     # benches fail loudly; the repair bench also asserts compiled <= eager
     # and records the trajectory to BENCH_repair.json
     echo "== benchmarks (smoke shapes) =="
-    python -m benchmarks.run --smoke --out BENCH_repair.json
+    # the CI layer stamps the history entry explicitly so the record's
+    # trajectory carries a reproducible label per run
+    python -m benchmarks.run --smoke --out BENCH_repair.json \
+        --timestamp "$(date -u +%Y-%m-%dT%H:%M:%SZ)"
     # the record must keep every key the README quotes (fail loudly if a
     # refactor renames/drops one — the README's perf claims would go stale)
     python scripts/check_bench.py BENCH_repair.json
+fi
+
+if [[ "$what" == "all" || "$what" == "traffic" ]]; then
+    # the load harness under the 8-fake-device topology: the workload must
+    # regenerate bit-equal from its seed and the sharded engine must emit
+    # the same token streams as the single-device engine under real traffic
+    echo "== traffic lane (load harness, 8 fake host devices) =="
+    XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+        REPRO_MULTIDEV=1 \
+        python -m pytest -x -q \
+        tests/test_traffic.py::test_harness_seed_deterministic \
+        "tests/multidev/test_sharded_serving.py::test_traffic_sharded_token_parity"
 fi
 
 echo "CI OK"

@@ -66,17 +66,32 @@ NAN_K, INF_K, EV_K, NAN_V, INF_V, EV_V, EV_TOTAL = range(7)
 # for that operand), so the default cannot be None.
 DEFAULT_DETECTOR = "default"
 
+# per-slot chunk-start sentinel for the sharded prefill walk: a slot whose
+# q_start carries this value belongs to another device's shard — every
+# causal comparison fails (tq is hugely negative) and the count gate is off
+NO_SLOT = -(1 << 30)
+
 
 def _repair_and_count(
     consts_ref, k_ref, v_ref, slot_ref, counts_ref,
     *, policy_k: str, constant_k: float, policy_v: str, constant_v: float,
+    gate=None,
 ):
     """Fused on-read repair of one page's K/V rows (the trap) — shared by
     every kernel in the paged family.  Per-operand fill selection: each
     tile repairs with ITS operand's rule fill (row 0 = K, row 1 = V), so a
     mixed-fill RuleSet compiles into one kernel instead of forcing the
     gathered fallback.  Accumulates the AT_* event counts and writes the
-    per-page-slot fatal count the reactive repair manager consumes."""
+    per-page-slot fatal count the reactive repair manager consumes.
+
+    ``gate`` (int32 0/1, default 1) masks the *counting* side only: under
+    the sharded walk a device visits every block-table slot but owns only
+    the pages of its shard — non-owned slots are remapped to a local row
+    whose faults belong to another device, so their detections must not be
+    reported here (the VMEM repair itself is harmless: the slot's scores
+    are fully masked).  Each page is thus counted by exactly one device."""
+    if gate is None:
+        gate = jnp.int32(1)
     k_fixed, nan_k, inf_k = common.repair_tile(
         k_ref[0, 0], policy=policy_k, constant=constant_k,
         consts=consts_ref[0],
@@ -87,15 +102,46 @@ def _repair_and_count(
     )
     ev_k = ((nan_k + inf_k) > 0).astype(jnp.int32)
     ev_v = ((nan_v + inf_v) > 0).astype(jnp.int32)
-    counts_ref[NAN_K] += nan_k
-    counts_ref[INF_K] += inf_k
-    counts_ref[EV_K] += ev_k
-    counts_ref[NAN_V] += nan_v
-    counts_ref[INF_V] += inf_v
-    counts_ref[EV_V] += ev_v
-    counts_ref[EV_TOTAL] += ((ev_k + ev_v) > 0).astype(jnp.int32)
-    slot_ref[0, 0] = nan_k + inf_k + nan_v + inf_v
+    counts_ref[NAN_K] += gate * nan_k
+    counts_ref[INF_K] += gate * inf_k
+    counts_ref[EV_K] += gate * ev_k
+    counts_ref[NAN_V] += gate * nan_v
+    counts_ref[INF_V] += gate * inf_v
+    counts_ref[EV_V] += gate * ev_v
+    counts_ref[EV_TOTAL] += gate * ((ev_k + ev_v) > 0).astype(jnp.int32)
+    slot_ref[0, 0] = gate * (nan_k + inf_k + nan_v + inf_v)
     return k_fixed, v_fixed
+
+
+def _detector_consts(detector_k, detector_v, dtype, include_inf: bool):
+    """The int32[2, 8] scalar-prefetch constants (row 0 = K, row 1 = V)
+    shared by every kernel in the paged family."""
+
+    def operand_row(det):
+        if det is None:
+            # all detection flags off: the kernel loads, never repairs
+            return jnp.zeros((8,), jnp.int32)
+        if det == DEFAULT_DETECTOR:
+            det = common.resolve_detector(None, include_inf)
+        return common.detector_operand(det, dtype)
+
+    return jnp.stack([operand_row(detector_k), operand_row(detector_v)])
+
+
+def _lse_merge(out_dtype, o_part, m_part, l_part):
+    """Log-sum-exp merge of unnormalized partials along axis 1 — the
+    reduce stage shared by split-K flash decoding (partials = splits) and
+    the sharded walk (partials = devices × splits).  Partials whose slice
+    was pure null padding / not owned carry ``m = -inf``: their exp()
+    weight is forced to zero rather than trusting exp(-inf - m*)
+    arithmetic, which would turn into exp(0) = 1 when every partial of a
+    row is empty."""
+    m_star = jnp.max(m_part, axis=1)                         # (B, H)
+    live = m_part > NEG_INF * 0.5                            # (B, S, H)
+    w = jnp.where(live, jnp.exp(m_part - m_star[:, None, :]), 0.0)
+    l_tot = jnp.sum(w * l_part, axis=1)                      # (B, H)
+    acc = jnp.sum(w[..., None] * o_part, axis=1)             # (B, H, Dh)
+    return (acc / jnp.maximum(l_tot, 1e-30)[..., None]).astype(out_dtype)
 
 
 def _paged_kernel(
@@ -221,16 +267,7 @@ def paged_attention_raw(
     group = H // Kh
     M = block_tables.shape[1]
     sm_scale = 1.0 / math.sqrt(Dh)
-
-    def operand_row(det):
-        if det is None:
-            # all detection flags off: the kernel loads, never repairs
-            return jnp.zeros((8,), jnp.int32)
-        if det == DEFAULT_DETECTOR:
-            det = common.resolve_detector(None, include_inf)
-        return common.detector_operand(det, k_pages.dtype)
-
-    consts = jnp.stack([operand_row(detector_k), operand_row(detector_v)])
+    consts = _detector_consts(detector_k, detector_v, k_pages.dtype, include_inf)
 
     from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe import
 
@@ -325,14 +362,14 @@ def paged_attention(
 def _paged_prefill_kernel(
     consts_ref,      # int32[2, 8]  detector constants: row 0 K, row 1 V
     bt_ref,          # int32[B, M]  block tables (also drives the index maps)
-    qstart_ref,      # int32[B]     context position of chunk row 0
+    qstart_ref,      # int32[B, M]  chunk-row-0 position, per block slot
     layer_ref,       # int32[1]     which L row of the pool leaves
     q_ref, k_ref, v_ref,
-    o_ref, slot_ref, counts_ref,
+    o_ref, mo_ref, lo_ref, slot_ref, counts_ref,
     acc_ref, m_ref, l_ref,
     *, sm_scale: float,
     policy_k: str, constant_k: float, policy_v: str, constant_v: float,
-    pg: int, n_kv: int, group: int, nm: int, nc: int, out_dtype,
+    pg: int, n_kv: int, group: int, nm: int, nc: int,
 ):
     b, j = pl.program_id(0), pl.program_id(1)
     step = b * pl.num_programs(1) + j
@@ -347,10 +384,15 @@ def _paged_prefill_kernel(
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
+    # per-SLOT q_start: on a single device every slot carries the request's
+    # chunk start; under the sharded walk non-owned slots carry NO_SLOT,
+    # which kills every causal comparison below and gates the counts off
+    qs = qstart_ref[b, j]
     k_fixed, v_fixed = _repair_and_count(
         consts_ref, k_ref, v_ref, slot_ref, counts_ref,
         policy_k=policy_k, constant_k=constant_k,
         policy_v=policy_v, constant_v=constant_v,
+        gate=(qs >= 0).astype(jnp.int32),
     )
 
     # ---- online softmax: the whole q chunk against this page ----
@@ -366,7 +408,7 @@ def _paged_prefill_kernel(
     s = s.reshape(n_kv, nc, group, pg)
     # causal mask, per chunk row: row c sits at context position
     # q_start + c and may read keys at positions <= that
-    tq = qstart_ref[b] + jax.lax.broadcasted_iota(
+    tq = qs + jax.lax.broadcasted_iota(
         jnp.int32, (1, nc, 1, 1), 1
     )
     tk = j * pg + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, pg), 3)
@@ -376,7 +418,13 @@ def _paged_prefill_kernel(
 
     m_prev = m_ref[:, 0]                                     # (R,)
     m_new = jnp.maximum(m_prev, jnp.max(s2, axis=-1))
-    p = jnp.exp(s2 - m_new[:, None])                         # (R, pg)
+    # same empty-walk guard as split-K: a shard owning none of a request's
+    # pages keeps (m, l, acc) = (-inf, 0, 0) exactly, which the LSE merge
+    # drops.  For the serial walk this is a bit-exact no-op — slot 0 always
+    # yields a real row max, so masked lanes underflow to 0.0 either way.
+    p = jnp.where(
+        s2 > NEG_INF * 0.5, jnp.exp(s2 - m_new[:, None]), 0.0
+    )                                                        # (R, pg)
     alpha = jnp.exp(m_prev - m_new)
     l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=-1)
     # quantize the softmax weights to the cache dtype before the value
@@ -395,10 +443,101 @@ def _paged_prefill_kernel(
 
     @pl.when(j == nm - 1)
     def _flush():
-        denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
-        o_ref[0] = (acc_ref[...] / denom).astype(out_dtype).reshape(
-            nc, n_kv * group, Dh
-        )
+        # raw partials — normalization happens in the caller / LSE merge
+        o_ref[0] = acc_ref[...].reshape(nc, n_kv * group, Dh)
+        mo_ref[0] = m_ref[:, 0]
+        lo_ref[0] = l_ref[:, 0]
+
+
+def _prefill_partials(
+    q, k_pages, v_pages, block_tables, qs_slot, layer,
+    *, consts, policy_k, constant_k, policy_v, constant_v, interpret,
+):
+    """Unnormalized chunked-q prefill partials over the block-table walk.
+
+    ``qs_slot`` is (B, M) int32 — the chunk-row-0 context position carried
+    *per block slot*.  On a single device every slot of request ``b`` holds
+    the same value; under the sharded walk non-owned slots hold ``NO_SLOT``
+    (fully masked, counts gated).  Returns ``(acc (B, C, H, Dh) f32,
+    m (B, C*H) f32, l (B, C*H) f32, slot_counts, counts)``.
+    """
+    B, C, H, Dh = q.shape
+    P, L, pg, Kh, _ = k_pages.shape
+    assert v_pages.shape == k_pages.shape, (k_pages.shape, v_pages.shape)
+    assert H % Kh == 0, (H, Kh)
+    group = H // Kh
+    M = block_tables.shape[1]
+    sm_scale = 1.0 / math.sqrt(Dh)
+
+    from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe import
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,  # detector consts, block tables, q_start, layer
+        grid=(B, M),
+        in_specs=[
+            pl.BlockSpec((1, C, H, Dh), lambda b, j, c, bt, qs, lay: (b, 0, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, pg, Kh, Dh),
+                lambda b, j, c, bt, qs, lay: (bt[b, j], lay[0], 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, pg, Kh, Dh),
+                lambda b, j, c, bt, qs, lay: (bt[b, j], lay[0], 0, 0, 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, H, Dh), lambda b, j, c, bt, qs, lay: (b, 0, 0, 0)),
+            pl.BlockSpec((1, C * H), lambda b, j, c, bt, qs, lay: (b, 0)),
+            pl.BlockSpec((1, C * H), lambda b, j, c, bt, qs, lay: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, j, c, bt, qs, lay: (b, j)),
+            pl.BlockSpec((8,), lambda b, j, c, bt, qs, lay: (0,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((C * H, Dh), jnp.float32),
+            pltpu.VMEM((C * H, 128), jnp.float32),
+            pltpu.VMEM((C * H, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _paged_prefill_kernel,
+            sm_scale=sm_scale,
+            policy_k=policy_k,
+            constant_k=constant_k,
+            policy_v=policy_v,
+            constant_v=constant_v,
+            pg=pg,
+            n_kv=Kh,
+            group=group,
+            nm=M,
+            nc=C,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, C * H), jnp.float32),
+            jax.ShapeDtypeStruct((B, C * H), jnp.float32),
+            jax.ShapeDtypeStruct((B, M), jnp.int32),
+            jax.ShapeDtypeStruct((8,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        consts,
+        jnp.asarray(block_tables, jnp.int32),
+        jnp.asarray(qs_slot, jnp.int32),
+        jnp.asarray(layer, jnp.int32).reshape(1),
+        q, k_pages, v_pages,
+    )
+
+
+def _prefill_normalize(out_dtype, acc, l):
+    """The serial prefill epilogue: divide the f32 accumulator by the row
+    sums and cast — the same ops, in the same row order, the kernel used to
+    run in its flush, so moving it out of the kernel is bit-transparent."""
+    B, C, H, Dh = acc.shape
+    denom = jnp.maximum(l, 1e-30)                            # (B, C*H)
+    out = acc.reshape(B, C * H, Dh) / denom[..., None]
+    return out.astype(out_dtype).reshape(B, C, H, Dh)
 
 
 @functools.partial(
@@ -447,80 +586,20 @@ def paged_prefill_raw(
     constant_k = constant if constant_k is None else constant_k
     policy_v = policy if policy_v is None else policy_v
     constant_v = constant if constant_v is None else constant_v
-    B, C, H, Dh = q.shape
-    P, L, pg, Kh, _ = k_pages.shape
-    assert v_pages.shape == k_pages.shape, (k_pages.shape, v_pages.shape)
-    assert H % Kh == 0, (H, Kh)
-    group = H // Kh
+    B = q.shape[0]
     M = block_tables.shape[1]
-    sm_scale = 1.0 / math.sqrt(Dh)
-
-    def operand_row(det):
-        if det is None:
-            return jnp.zeros((8,), jnp.int32)
-        if det == DEFAULT_DETECTOR:
-            det = common.resolve_detector(None, include_inf)
-        return common.detector_operand(det, k_pages.dtype)
-
-    consts = jnp.stack([operand_row(detector_k), operand_row(detector_v)])
-
-    from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe import
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,  # detector consts, block tables, q_start, layer
-        grid=(B, M),
-        in_specs=[
-            pl.BlockSpec((1, C, H, Dh), lambda b, j, c, bt, qs, lay: (b, 0, 0, 0)),
-            pl.BlockSpec(
-                (1, 1, pg, Kh, Dh),
-                lambda b, j, c, bt, qs, lay: (bt[b, j], lay[0], 0, 0, 0),
-            ),
-            pl.BlockSpec(
-                (1, 1, pg, Kh, Dh),
-                lambda b, j, c, bt, qs, lay: (bt[b, j], lay[0], 0, 0, 0),
-            ),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, C, H, Dh), lambda b, j, c, bt, qs, lay: (b, 0, 0, 0)),
-            pl.BlockSpec((1, 1), lambda b, j, c, bt, qs, lay: (b, j)),
-            pl.BlockSpec((8,), lambda b, j, c, bt, qs, lay: (0,)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((C * H, Dh), jnp.float32),
-            pltpu.VMEM((C * H, 128), jnp.float32),
-            pltpu.VMEM((C * H, 128), jnp.float32),
-        ],
+    consts = _detector_consts(detector_k, detector_v, k_pages.dtype, include_inf)
+    qs_slot = jnp.broadcast_to(
+        jnp.asarray(q_start, jnp.int32)[:, None], (B, M)
     )
-    out, slot_counts, counts = pl.pallas_call(
-        functools.partial(
-            _paged_prefill_kernel,
-            sm_scale=sm_scale,
-            policy_k=policy_k,
-            constant_k=constant_k,
-            policy_v=policy_v,
-            constant_v=constant_v,
-            pg=pg,
-            n_kv=Kh,
-            group=group,
-            nm=M,
-            nc=C,
-            out_dtype=q.dtype,
-        ),
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((B, C, H, Dh), q.dtype),
-            jax.ShapeDtypeStruct((B, M), jnp.int32),
-            jax.ShapeDtypeStruct((8,), jnp.int32),
-        ],
+    acc, m, l, slot_counts, counts = _prefill_partials(
+        q, k_pages, v_pages, block_tables, qs_slot, layer,
+        consts=consts,
+        policy_k=policy_k, constant_k=constant_k,
+        policy_v=policy_v, constant_v=constant_v,
         interpret=interpret,
-    )(
-        consts,
-        jnp.asarray(block_tables, jnp.int32),
-        jnp.asarray(q_start, jnp.int32),
-        jnp.asarray(layer, jnp.int32).reshape(1),
-        q, k_pages, v_pages,
     )
-    return out, slot_counts, counts
+    return _prefill_normalize(q.dtype, acc, l), slot_counts, counts
 
 
 def paged_prefill(
@@ -554,7 +633,7 @@ def paged_prefill(
 def _paged_splitk_kernel(
     consts_ref,      # int32[2, 8]  detector constants: row 0 K, row 1 V
     bt_ref,          # int32[B, M]  block tables (also drives the index maps)
-    pos_ref,         # int32[B]     last valid position per request
+    pos_ref,         # int32[B, M]  last valid position, per block slot
     layer_ref,       # int32[1]     which L row of the pool leaves
     q_ref, k_ref, v_ref,
     o_ref, mo_ref, lo_ref, slot_ref, counts_ref,
@@ -576,10 +655,15 @@ def _paged_splitk_kernel(
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
+    # per-SLOT position bound: on a single device every slot of request b
+    # carries pos[b]; under the sharded walk non-owned slots carry -1 —
+    # every key position fails `t <= bound` and the count gate is off
+    bound = pos_ref[b, g * ns + jj]
     k_fixed, v_fixed = _repair_and_count(
         consts_ref, k_ref, v_ref, slot_ref, counts_ref,
         policy_k=policy_k, constant_k=constant_k,
         policy_v=policy_v, constant_v=constant_v,
+        gate=(bound >= 0).astype(jnp.int32),
     )
 
     # ---- online softmax over this split's slice of the page walk ----
@@ -593,7 +677,7 @@ def _paged_splitk_kernel(
     t = (g * ns + jj) * pg + jax.lax.broadcasted_iota(
         jnp.int32, (1, 1, pg), 2
     )
-    s = jnp.where(t <= pos_ref[b], s, NEG_INF)
+    s = jnp.where(t <= bound, s, NEG_INF)
     s2 = s.reshape(H, pg)
 
     m_prev = m_ref[:, 0]                                     # (H,)
@@ -625,6 +709,99 @@ def _paged_splitk_kernel(
         o_ref[0, 0] = acc_ref[...]
         mo_ref[0, 0] = m_ref[:, 0]
         lo_ref[0, 0] = l_ref[:, 0]
+
+
+def _splitk_partials(
+    q, k_pages, v_pages, block_tables, pos_slot, layer,
+    *, splits, consts, policy_k, constant_k, policy_v, constant_v, interpret,
+):
+    """Unnormalized split-K decode partials over the block-table walk.
+
+    ``pos_slot`` is (B, M) int32 — the inclusive position bound carried
+    *per block slot*.  On a single device every slot of request ``b`` holds
+    ``positions[b]``; under the sharded walk non-owned slots hold ``-1``
+    (fully masked, counts gated).  Returns ``(o_part (B, splits, H, Dh)
+    f32, m_part (B, splits, H) f32, l_part (B, splits, H) f32,
+    slot_counts, counts)``.
+    """
+    B, H, Dh = q.shape
+    P, L, pg, Kh, _ = k_pages.shape
+    assert v_pages.shape == k_pages.shape, (k_pages.shape, v_pages.shape)
+    assert H % Kh == 0, (H, Kh)
+    group = H // Kh
+    M = block_tables.shape[1]
+    assert splits >= 1 and M % splits == 0, (
+        f"splits={splits} must divide the block-table width M={M}"
+    )
+    ns = M // splits
+    sm_scale = 1.0 / math.sqrt(Dh)
+
+    from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe import
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,  # detector consts, block tables, positions, layer
+        grid=(B, splits, ns),
+        in_specs=[
+            pl.BlockSpec((1, H, Dh), lambda b, g, jj, c, bt, pos, lay: (b, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, pg, Kh, Dh),
+                lambda b, g, jj, c, bt, pos, lay: (
+                    bt[b, g * ns + jj], lay[0], 0, 0, 0
+                ),
+            ),
+            pl.BlockSpec(
+                (1, 1, pg, Kh, Dh),
+                lambda b, g, jj, c, bt, pos, lay: (
+                    bt[b, g * ns + jj], lay[0], 0, 0, 0
+                ),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (1, 1, H, Dh), lambda b, g, jj, c, bt, pos, lay: (b, g, 0, 0)
+            ),
+            pl.BlockSpec((1, 1, H), lambda b, g, jj, c, bt, pos, lay: (b, g, 0)),
+            pl.BlockSpec((1, 1, H), lambda b, g, jj, c, bt, pos, lay: (b, g, 0)),
+            pl.BlockSpec(
+                (1, 1), lambda b, g, jj, c, bt, pos, lay: (b, g * ns + jj)
+            ),
+            pl.BlockSpec((8,), lambda b, g, jj, c, bt, pos, lay: (0,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H, Dh), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _paged_splitk_kernel,
+            sm_scale=sm_scale,
+            policy_k=policy_k,
+            constant_k=constant_k,
+            policy_v=policy_v,
+            constant_v=constant_v,
+            pg=pg,
+            n_kv=Kh,
+            group=group,
+            ns=ns,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, splits, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, splits, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, M), jnp.int32),
+            jax.ShapeDtypeStruct((8,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        consts,
+        jnp.asarray(block_tables, jnp.int32),
+        jnp.asarray(pos_slot, jnp.int32),
+        jnp.asarray(layer, jnp.int32).reshape(1),
+        q, k_pages, v_pages,
+    )
 
 
 @functools.partial(
@@ -673,103 +850,20 @@ def paged_attention_splitk_raw(
     constant_k = constant if constant_k is None else constant_k
     policy_v = policy if policy_v is None else policy_v
     constant_v = constant if constant_v is None else constant_v
-    B, H, Dh = q.shape
-    P, L, pg, Kh, _ = k_pages.shape
-    assert v_pages.shape == k_pages.shape, (k_pages.shape, v_pages.shape)
-    assert H % Kh == 0, (H, Kh)
-    group = H // Kh
+    B = q.shape[0]
     M = block_tables.shape[1]
-    assert splits >= 1 and M % splits == 0, (
-        f"splits={splits} must divide the block-table width M={M}"
+    consts = _detector_consts(detector_k, detector_v, k_pages.dtype, include_inf)
+    pos_slot = jnp.broadcast_to(
+        jnp.asarray(positions, jnp.int32)[:, None], (B, M)
     )
-    ns = M // splits
-    sm_scale = 1.0 / math.sqrt(Dh)
-
-    def operand_row(det):
-        if det is None:
-            return jnp.zeros((8,), jnp.int32)
-        if det == DEFAULT_DETECTOR:
-            det = common.resolve_detector(None, include_inf)
-        return common.detector_operand(det, k_pages.dtype)
-
-    consts = jnp.stack([operand_row(detector_k), operand_row(detector_v)])
-
-    from jax.experimental.pallas import tpu as pltpu  # local: CPU-safe import
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,  # detector consts, block tables, positions, layer
-        grid=(B, splits, ns),
-        in_specs=[
-            pl.BlockSpec((1, H, Dh), lambda b, g, jj, c, bt, pos, lay: (b, 0, 0)),
-            pl.BlockSpec(
-                (1, 1, pg, Kh, Dh),
-                lambda b, g, jj, c, bt, pos, lay: (
-                    bt[b, g * ns + jj], lay[0], 0, 0, 0
-                ),
-            ),
-            pl.BlockSpec(
-                (1, 1, pg, Kh, Dh),
-                lambda b, g, jj, c, bt, pos, lay: (
-                    bt[b, g * ns + jj], lay[0], 0, 0, 0
-                ),
-            ),
-        ],
-        out_specs=[
-            pl.BlockSpec(
-                (1, 1, H, Dh), lambda b, g, jj, c, bt, pos, lay: (b, g, 0, 0)
-            ),
-            pl.BlockSpec((1, 1, H), lambda b, g, jj, c, bt, pos, lay: (b, g, 0)),
-            pl.BlockSpec((1, 1, H), lambda b, g, jj, c, bt, pos, lay: (b, g, 0)),
-            pl.BlockSpec(
-                (1, 1), lambda b, g, jj, c, bt, pos, lay: (b, g * ns + jj)
-            ),
-            pl.BlockSpec((8,), lambda b, g, jj, c, bt, pos, lay: (0,)),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((H, Dh), jnp.float32),
-            pltpu.VMEM((H, 128), jnp.float32),
-            pltpu.VMEM((H, 128), jnp.float32),
-        ],
-    )
-    o_part, m_part, l_part, slot_counts, counts = pl.pallas_call(
-        functools.partial(
-            _paged_splitk_kernel,
-            sm_scale=sm_scale,
-            policy_k=policy_k,
-            constant_k=constant_k,
-            policy_v=policy_v,
-            constant_v=constant_v,
-            pg=pg,
-            n_kv=Kh,
-            group=group,
-            ns=ns,
-        ),
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((B, splits, H, Dh), jnp.float32),
-            jax.ShapeDtypeStruct((B, splits, H), jnp.float32),
-            jax.ShapeDtypeStruct((B, splits, H), jnp.float32),
-            jax.ShapeDtypeStruct((B, M), jnp.int32),
-            jax.ShapeDtypeStruct((8,), jnp.int32),
-        ],
+    o_part, m_part, l_part, slot_counts, counts = _splitk_partials(
+        q, k_pages, v_pages, block_tables, pos_slot, layer,
+        splits=splits, consts=consts,
+        policy_k=policy_k, constant_k=constant_k,
+        policy_v=policy_v, constant_v=constant_v,
         interpret=interpret,
-    )(
-        consts,
-        jnp.asarray(block_tables, jnp.int32),
-        jnp.asarray(positions, jnp.int32),
-        jnp.asarray(layer, jnp.int32).reshape(1),
-        q, k_pages, v_pages,
     )
-    # ---- log-sum-exp merge reduce stage ----
-    # empty splits (m == -inf) must contribute NOTHING: their exp() weight
-    # is forced to zero rather than trusting exp(-inf - m*) arithmetic,
-    # which would turn into exp(0) = 1 when every split of a row is empty
-    m_star = jnp.max(m_part, axis=1)                         # (B, H)
-    live = m_part > NEG_INF * 0.5                            # (B, G, H)
-    w = jnp.where(live, jnp.exp(m_part - m_star[:, None, :]), 0.0)
-    l_tot = jnp.sum(w * l_part, axis=1)                      # (B, H)
-    acc = jnp.sum(w[..., None] * o_part, axis=1)             # (B, H, Dh)
-    out = (acc / jnp.maximum(l_tot, 1e-30)[..., None]).astype(q.dtype)
+    out = _lse_merge(q.dtype, o_part, m_part, l_part)
     return out, slot_counts, counts
 
 
@@ -797,3 +891,314 @@ def paged_attention_splitk(
         jnp.asarray(block_tables, jnp.int32)
     ].add(slot_counts)
     return out, page_counts, counts
+
+
+# --------------------------------------------------------------------------
+# Device-local sharded walk: page ownership follows the pool's "page"→axis
+# sharding rule, so decode/prefill/split-K reads never cross device
+# boundaries (the scrub_sharded pattern, applied to the serving hot path).
+# --------------------------------------------------------------------------
+#
+#   global block table (B, M)       device d owns pool rows [lo, lo + P/nd)
+#   ┌──────────────────────┐
+#   │ 5  2  9  null  ...   │ ──►  d0: slots with page ∈ [0, P/nd)   others
+#   └──────────────────────┘       d1: slots with page ∈ [P/nd, …)  masked
+#                                   ⋮   (bound/-qstart sentinel, gate off)
+#   each device walks its OWN shard rows only → partials (acc, m, l)
+#   all_gather(device-major) → LSE merge;  psum(slot_counts, counts)
+#
+# Every block-table slot is owned by exactly one device (the null page by
+# the device holding the pool's last row), so the psum'd integer counts are
+# bit-identical to the serial kernel's, and the merged output is
+# bit-identical to `paged_*_shard_ref` — the same partition computed shard
+# by shard on one device.
+
+
+def _owned_remap(block_tables, lo, p_local):
+    """Ownership mask + shard-local row remap for one device's page range.
+    Non-owned slots are remapped to local row 0: their DMA and VMEM repair
+    still run (harmless — scores fully masked, counts gated), which keeps
+    the grid walk shape identical on every device."""
+    owned = (block_tables >= lo) & (block_tables < lo + p_local)
+    return owned, jnp.where(owned, block_tables - lo, 0)
+
+
+def _device_major_merge(out_dtype, o, m, l, axis):
+    """all_gather each device's partials and LSE-merge them device-major:
+    device d's partial s lands at merge slot ``d * splits + s`` — the same
+    order `paged_*_shard_ref` concatenates, so parity is bitwise."""
+    B = o.shape[0]
+    o_all = jnp.moveaxis(jax.lax.all_gather(o, axis), 0, 1)
+    m_all = jnp.moveaxis(jax.lax.all_gather(m, axis), 0, 1)
+    l_all = jnp.moveaxis(jax.lax.all_gather(l, axis), 0, 1)
+    nd = o_all.shape[1]
+    s = o_all.shape[2]
+    o_all = o_all.reshape(B, nd * s, *o.shape[2:])
+    m_all = m_all.reshape(B, nd * s, m.shape[-1])
+    l_all = l_all.reshape(B, nd * s, l.shape[-1])
+    return _lse_merge(out_dtype, o_all, m_all, l_all)
+
+
+def paged_attention_sharded(
+    q: jax.Array,              # (B, H, Dh)
+    k_pages: jax.Array,        # (P, L, pg, Kh, Dh), page axis sharded
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, M) int32 — GLOBAL page ids
+    positions: jax.Array,      # (B,) int32, inclusive
+    layer: jax.Array,          # int32 scalar
+    *,
+    mesh,
+    axis: str,
+    splits: int = 1,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    interpret: Optional[bool] = None,
+    detector_k=DEFAULT_DETECTOR,
+    detector_v=DEFAULT_DETECTOR,
+    policy_k: Optional[str] = None,
+    constant_k: Optional[float] = None,
+    policy_v: Optional[str] = None,
+    constant_v: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Device-local paged decode over a page-axis-sharded pool.
+
+    Each device walks the full (B, M) block table but attends only to the
+    slots whose page lives in its shard (non-owned slots: position bound
+    ``-1`` → fully masked, counts gated off, local row 0 DMA'd as a
+    placeholder).  ``splits > 1`` composes split-K *within* each device's
+    walk, yielding ``nd × splits`` partials.  Counts are psum'd (each slot
+    counted exactly once, bit-identical to the serial kernel); the output
+    is the device-major LSE merge (bit-identical to
+    ``paged_attention_shard_ref``).  Returns the same triple as
+    ``paged_attention_raw``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    if interpret is None:
+        interpret = common.default_interpret()
+    policy_k = policy if policy_k is None else policy_k
+    constant_k = constant if constant_k is None else constant_k
+    policy_v = policy if policy_v is None else policy_v
+    constant_v = constant if constant_v is None else constant_v
+    P_pages = k_pages.shape[0]
+    nd = mesh.shape[axis]
+    assert P_pages % nd == 0, (
+        f"page axis {P_pages} must divide the '{axis}' mesh axis ({nd})"
+    )
+    consts = _detector_consts(detector_k, detector_v, k_pages.dtype, include_inf)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    pos = jnp.asarray(positions, jnp.int32)
+    lay = jnp.asarray(layer, jnp.int32)
+
+    def local(qd, kl, vl, btd, posd, layd, cd):
+        p_local = kl.shape[0]
+        lo = jax.lax.axis_index(axis) * p_local
+        owned, bt_local = _owned_remap(btd, lo, p_local)
+        pos_slot = jnp.where(owned, posd[:, None], -1)
+        o, m, l, slot, counts = _splitk_partials(
+            qd, kl, vl, bt_local, pos_slot, layd,
+            splits=splits, consts=cd,
+            policy_k=policy_k, constant_k=constant_k,
+            policy_v=policy_v, constant_v=constant_v,
+            interpret=interpret,
+        )
+        out = _device_major_merge(qd.dtype, o, m, l, axis)
+        return out, jax.lax.psum(slot, axis), jax.lax.psum(counts, axis)
+
+    spec = PartitionSpec(axis)
+    rep = PartitionSpec()
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(rep, spec, spec, rep, rep, rep, rep),
+        out_specs=(rep, rep, rep),
+        check_rep=False,
+    )(q, k_pages, v_pages, bt, pos, lay, consts)
+
+
+def paged_attention_shard_ref(
+    q, k_pages, v_pages, block_tables, positions, layer,
+    *, n_shards: int, splits: int = 1,
+    policy: str = "zero", constant: float = 0.0, include_inf: bool = True,
+    interpret: Optional[bool] = None,
+    detector_k=DEFAULT_DETECTOR, detector_v=DEFAULT_DETECTOR,
+    policy_k=None, constant_k=None, policy_v=None, constant_v=None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-device oracle of ``paged_attention_sharded``: the identical
+    ownership partition and device-major merge, computed shard by shard on
+    one device.  The sharded entry must match this bit for bit — it is the
+    parity target of the multidev lane (the *serial* kernel differs in
+    accumulation grouping, so its float output is only allclose)."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    policy_k = policy if policy_k is None else policy_k
+    constant_k = constant if constant_k is None else constant_k
+    policy_v = policy if policy_v is None else policy_v
+    constant_v = constant if constant_v is None else constant_v
+    P_pages = k_pages.shape[0]
+    assert P_pages % n_shards == 0, (P_pages, n_shards)
+    p_local = P_pages // n_shards
+    consts = _detector_consts(detector_k, detector_v, k_pages.dtype, include_inf)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    pos = jnp.asarray(positions, jnp.int32)
+    lay = jnp.asarray(layer, jnp.int32)
+    os_, ms_, ls_ = [], [], []
+    slot_tot = None
+    counts_tot = None
+    for d in range(n_shards):
+        lo = d * p_local
+        owned, bt_local = _owned_remap(bt, lo, p_local)
+        pos_slot = jnp.where(owned, pos[:, None], -1)
+        o, m, l, slot, counts = _splitk_partials(
+            q, k_pages[lo:lo + p_local], v_pages[lo:lo + p_local],
+            bt_local, pos_slot, lay,
+            splits=splits, consts=consts,
+            policy_k=policy_k, constant_k=constant_k,
+            policy_v=policy_v, constant_v=constant_v,
+            interpret=interpret,
+        )
+        os_.append(o)
+        ms_.append(m)
+        ls_.append(l)
+        slot_tot = slot if slot_tot is None else slot_tot + slot
+        counts_tot = counts if counts_tot is None else counts_tot + counts
+    out = _lse_merge(
+        q.dtype,
+        jnp.concatenate(os_, axis=1),
+        jnp.concatenate(ms_, axis=1),
+        jnp.concatenate(ls_, axis=1),
+    )
+    return out, slot_tot, counts_tot
+
+
+def paged_prefill_sharded(
+    q: jax.Array,              # (B, C, H, Dh)
+    k_pages: jax.Array,        # (P, L, pg, Kh, Dh), page axis sharded
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, M) int32 — GLOBAL page ids
+    q_start: jax.Array,        # (B,) int32
+    layer: jax.Array,          # int32 scalar
+    *,
+    mesh,
+    axis: str,
+    policy: str = "zero",
+    constant: float = 0.0,
+    include_inf: bool = True,
+    interpret: Optional[bool] = None,
+    detector_k=DEFAULT_DETECTOR,
+    detector_v=DEFAULT_DETECTOR,
+    policy_k: Optional[str] = None,
+    constant_k: Optional[float] = None,
+    policy_v: Optional[str] = None,
+    constant_v: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Device-local chunked-q paged prefill over a page-axis-sharded pool.
+
+    The sharded analogue of ``paged_prefill_raw``: non-owned block slots
+    carry the ``NO_SLOT`` q_start sentinel (every causal comparison fails,
+    counts gated), each device emits one unnormalized chunk partial, and
+    the device-major LSE merge normalizes — bit-identical to
+    ``paged_prefill_shard_ref``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    if interpret is None:
+        interpret = common.default_interpret()
+    policy_k = policy if policy_k is None else policy_k
+    constant_k = constant if constant_k is None else constant_k
+    policy_v = policy if policy_v is None else policy_v
+    constant_v = constant if constant_v is None else constant_v
+    B, C, H, Dh = q.shape
+    P_pages = k_pages.shape[0]
+    nd = mesh.shape[axis]
+    assert P_pages % nd == 0, (
+        f"page axis {P_pages} must divide the '{axis}' mesh axis ({nd})"
+    )
+    consts = _detector_consts(detector_k, detector_v, k_pages.dtype, include_inf)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    qs = jnp.asarray(q_start, jnp.int32)
+    lay = jnp.asarray(layer, jnp.int32)
+
+    def local(qd, kl, vl, btd, qsd, layd, cd):
+        p_local = kl.shape[0]
+        lo = jax.lax.axis_index(axis) * p_local
+        owned, bt_local = _owned_remap(btd, lo, p_local)
+        qs_slot = jnp.where(owned, qsd[:, None], NO_SLOT)
+        acc, m, l, slot, counts = _prefill_partials(
+            qd, kl, vl, bt_local, qs_slot, layd,
+            consts=cd,
+            policy_k=policy_k, constant_k=constant_k,
+            policy_v=policy_v, constant_v=constant_v,
+            interpret=interpret,
+        )
+        # one partial per device: rows are the (C, H) chunk rows
+        merged = _device_major_merge(
+            qd.dtype,
+            acc.reshape(B, 1, C * H, Dh), m[:, None], l[:, None], axis,
+        )
+        out = merged.reshape(B, C, H, Dh)
+        return out, jax.lax.psum(slot, axis), jax.lax.psum(counts, axis)
+
+    spec = PartitionSpec(axis)
+    rep = PartitionSpec()
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(rep, spec, spec, rep, rep, rep, rep),
+        out_specs=(rep, rep, rep),
+        check_rep=False,
+    )(q, k_pages, v_pages, bt, qs, lay, consts)
+
+
+def paged_prefill_shard_ref(
+    q, k_pages, v_pages, block_tables, q_start, layer,
+    *, n_shards: int,
+    policy: str = "zero", constant: float = 0.0, include_inf: bool = True,
+    interpret: Optional[bool] = None,
+    detector_k=DEFAULT_DETECTOR, detector_v=DEFAULT_DETECTOR,
+    policy_k=None, constant_k=None, policy_v=None, constant_v=None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-device oracle of ``paged_prefill_sharded`` (see
+    ``paged_attention_shard_ref``)."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    policy_k = policy if policy_k is None else policy_k
+    constant_k = constant if constant_k is None else constant_k
+    policy_v = policy if policy_v is None else policy_v
+    constant_v = constant if constant_v is None else constant_v
+    B, C, H, Dh = q.shape
+    P_pages = k_pages.shape[0]
+    assert P_pages % n_shards == 0, (P_pages, n_shards)
+    p_local = P_pages // n_shards
+    consts = _detector_consts(detector_k, detector_v, k_pages.dtype, include_inf)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    qs = jnp.asarray(q_start, jnp.int32)
+    lay = jnp.asarray(layer, jnp.int32)
+    os_, ms_, ls_ = [], [], []
+    slot_tot = None
+    counts_tot = None
+    for d in range(n_shards):
+        lo = d * p_local
+        owned, bt_local = _owned_remap(bt, lo, p_local)
+        qs_slot = jnp.where(owned, qs[:, None], NO_SLOT)
+        acc, m, l, slot, counts = _prefill_partials(
+            q, k_pages[lo:lo + p_local], v_pages[lo:lo + p_local],
+            bt_local, qs_slot, lay,
+            consts=consts,
+            policy_k=policy_k, constant_k=constant_k,
+            policy_v=policy_v, constant_v=constant_v,
+            interpret=interpret,
+        )
+        os_.append(acc.reshape(B, 1, C * H, Dh))
+        ms_.append(m[:, None])
+        ls_.append(l[:, None])
+        slot_tot = slot if slot_tot is None else slot_tot + slot
+        counts_tot = counts if counts_tot is None else counts_tot + counts
+    merged = _lse_merge(
+        q.dtype,
+        jnp.concatenate(os_, axis=1),
+        jnp.concatenate(ms_, axis=1),
+        jnp.concatenate(ls_, axis=1),
+    )
+    return merged.reshape(B, C, H, Dh), slot_tot, counts_tot

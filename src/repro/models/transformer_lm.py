@@ -232,6 +232,7 @@ class TransformerLM(Model):
         constant: float = 0.0,
         fills=None,              # {"k": (policy, constant), "v": (...)}
         split_k: int = 1,
+        shard=None,              # (mesh, axis) — device-local sharded walk
     ):
         """One decode step straight off the paged pool (no gathered view):
         each layer writes its new K/V into one page slot per request and
@@ -261,6 +262,7 @@ class TransformerLM(Model):
                 policy_k=fill_k[0], constant_k=fill_k[1],
                 policy_v=fill_v[0], constant_v=fill_v[1],
                 split_k=split_k,
+                shard=shard,
             )
             h = h + a
             y = self.mlp(p_l["mlp"], self.norm2(p_l["norm2"], h))
@@ -301,6 +303,7 @@ class TransformerLM(Model):
         policy: str = "zero",
         constant: float = 0.0,
         fills=None,              # {"k": (policy, constant), "v": (...)}
+        shard=None,              # (mesh, axis) — device-local sharded walk
     ):
         """One prompt chunk straight off the paged pool — the admission-side
         twin of ``serve_step_paged``: each layer scatters the chunk's K/V
@@ -325,6 +328,7 @@ class TransformerLM(Model):
                 detector_k=detectors.get("k"), detector_v=detectors.get("v"),
                 policy_k=fill_k[0], constant_k=fill_k[1],
                 policy_v=fill_v[0], constant_v=fill_v[1],
+                shard=shard,
             )
             h = h + a
             y = self.mlp(p_l["mlp"], self.norm2(p_l["norm2"], h))

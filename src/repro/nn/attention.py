@@ -248,6 +248,7 @@ class Attention:
         constant_v=None,
         split_k: int = 1,
         update_cache: bool = True,
+        shard=None,
     ):
         """Decode straight off the paged pool — no gathered view.
 
@@ -263,6 +264,13 @@ class Attention:
         ``split_k > 1`` partitions the page walk across that many grid
         cells (flash decoding) with a log-sum-exp merge; per-page counts
         stay bit-identical to the serial walk.
+
+        ``shard`` is ``(mesh, axis)`` when the pool's page axis is
+        genuinely sharded over a mesh axis: the kernel then runs under
+        ``shard_map`` with per-device block-table ownership, so the page
+        walk never crosses device boundaries (README §Serving engine,
+        "Sharded decode & load testing").  The new-K/V slot write above
+        stays a plain GSPMD scatter.
 
         Returns ``(out (B,1,D), k_pages', v_pages', slot_counts (B,M),
         counts int32[8])``.
@@ -288,7 +296,17 @@ class Attention:
                 v_new[:, 0].astype(v_pages.dtype)
             )
 
-        if split_k > 1:
+        if shard is not None:
+            mesh, axis = shard
+            ctx, slot_counts, counts = paged_kernel.paged_attention_sharded(
+                q[:, 0], k_pages, v_pages, block_tables, pos, layer,
+                mesh=mesh, axis=axis, splits=max(split_k, 1),
+                policy=policy, constant=constant,
+                detector_k=detector_k, detector_v=detector_v,
+                policy_k=policy_k, constant_k=constant_k,
+                policy_v=policy_v, constant_v=constant_v,
+            )
+        elif split_k > 1:
             ctx, slot_counts, counts = paged_kernel.paged_attention_splitk_raw(
                 q[:, 0], k_pages, v_pages, block_tables, pos, layer,
                 splits=split_k,
@@ -328,6 +346,7 @@ class Attention:
         policy_v=None,
         constant_v=None,
         update_cache: bool = True,
+        shard=None,
     ):
         """Chunked prefill straight off the paged pool — no gathered view.
 
@@ -382,13 +401,24 @@ class Attention:
                 dedup(v_new).astype(v_pages.dtype)
             )
 
-        ctx, slot_counts, counts = paged_kernel.paged_prefill_raw(
-            q, k_pages, v_pages, block_tables, qs, layer,
-            policy=policy, constant=constant,
-            detector_k=detector_k, detector_v=detector_v,
-            policy_k=policy_k, constant_k=constant_k,
-            policy_v=policy_v, constant_v=constant_v,
-        )
+        if shard is not None:
+            mesh, axis = shard
+            ctx, slot_counts, counts = paged_kernel.paged_prefill_sharded(
+                q, k_pages, v_pages, block_tables, qs, layer,
+                mesh=mesh, axis=axis,
+                policy=policy, constant=constant,
+                detector_k=detector_k, detector_v=detector_v,
+                policy_k=policy_k, constant_k=constant_k,
+                policy_v=policy_v, constant_v=constant_v,
+            )
+        else:
+            ctx, slot_counts, counts = paged_kernel.paged_prefill_raw(
+                q, k_pages, v_pages, block_tables, qs, layer,
+                policy=policy, constant=constant,
+                detector_k=detector_k, detector_v=detector_v,
+                policy_k=policy_k, constant_k=constant_k,
+                policy_v=policy_v, constant_v=constant_v,
+            )
         out = self._out(p, ctx)                               # (B, C, D)
         return out, k_pages, v_pages, slot_counts, counts
 

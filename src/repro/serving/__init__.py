@@ -16,6 +16,8 @@ pool with page-granular reactive repair (README §Serving engine).
   TierManager       swap orchestration across the device/host tiers with a
                     detector scrub at every device→host boundary crossing
   Engine            the facade: add_request / step / run, unified stats
+  WorkloadConfig    seed-deterministic synthetic traffic (Poisson arrivals,
+                    bimodal prompt mix, bursts) for benchmarks/traffic.py
 
 The engine is the subsystem later scaling PRs (sharded pools, async decode,
 multi-tenant QoS) build on; ``launch.serve.generate(..., paged=True)`` is
@@ -28,8 +30,10 @@ from .prefix_cache import CacheHit, PrefixCache  # noqa: F401
 from .repair import PageRepairManager  # noqa: F401
 from .scheduler import Request, RequestState, Scheduler  # noqa: F401
 from .tiers import HostPageStore, SwapHandle, TierManager  # noqa: F401
+from .workload import Arrival, WorkloadConfig, generate_arrivals  # noqa: F401
 
 __all__ = [
+    "Arrival",
     "CacheHit",
     "Engine",
     "HostPageStore",
@@ -42,5 +46,7 @@ __all__ = [
     "ServingConfig",
     "SwapHandle",
     "TierManager",
+    "WorkloadConfig",
     "engine_space",
+    "generate_arrivals",
 ]

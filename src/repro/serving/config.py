@@ -78,6 +78,24 @@ class ServingConfig:
                              1 — always serial (comparison arm)
                              N — split into (the largest divisor of the
                                  block-table width <=) N grid cells
+      drain_interval         desynchronized stats drain (README §Serving
+                             engine — "Sharded decode & load testing"):
+                             0 — legacy lockstep: every fused lane reads its
+                                 per-page fatal counts back to the host and
+                                 scrubs within the same engine step
+                             N — the fused kernels' counter vectors stay
+                                 resident on device and accumulate across
+                                 steps; every N steps ONE readback drains
+                                 them and the reactive scrub covers the
+                                 union of flagged pages.  Token streams are
+                                 unchanged (the fused kernels repair on
+                                 read with a value-independent fill, so
+                                 deferring the HBM scrub never changes what
+                                 attention consumes); ``N == 1`` replays
+                                 the legacy scrub trajectory exactly while
+                                 still batching each step's readbacks into
+                                 one.  Requires the fused paged path;
+                                 ignored on the gathered fallback.
 
     Prefix cache (README §Serving engine):
       prefix_cache           share KV pages between requests with a common
@@ -131,6 +149,7 @@ class ServingConfig:
     paged_prefill: str = "auto"
     prefill_chunk: int = 0
     split_k: int = 0
+    drain_interval: int = 0
 
     prefix_cache: bool = False
     max_cached_pages: int = 0
@@ -159,6 +178,10 @@ class ServingConfig:
             raise ValueError(f"prefill_chunk must be >= 0 ({self.prefill_chunk})")
         if self.split_k < 0:
             raise ValueError(f"split_k must be >= 0 ({self.split_k})")
+        if self.drain_interval < 0:
+            raise ValueError(
+                f"drain_interval must be >= 0 ({self.drain_interval})"
+            )
         if self.page_size < 1 or self.n_pages < 1:
             raise ValueError("page_size and n_pages must be >= 1")
         if self.max_pages_per_request > self.n_pages:

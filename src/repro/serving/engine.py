@@ -47,12 +47,34 @@ chunk width (a fixed ``prefill_chunk`` means one compiled prefill step for
 the whole run; 0 retraces per distinct remaining-prompt length, like the
 gathered path).
 
+Two serving-scale mechanisms ride the same fused path (README §Serving
+engine — "Sharded decode & load testing"):
+
+* **Device-local sharded walk** — when the engine's space carries a mesh
+  and the pool's page axis is genuinely sharded over one mesh axis
+  (``pool.page_shard_axis()``), the fused decode/prefill executables run
+  the kernels under ``shard_map``: each device walks only the block-table
+  slots whose pages it owns, repairs them in its own VMEM, and the partial
+  softmax states merge with one ``all_gather`` + log-sum-exp combine.  No
+  KV page ever crosses a device boundary.  Indivisible pool geometries
+  degrade to the single-device walk transparently.
+
+* **Desynchronized stats drain** — ``ServingConfig.drain_interval > 0``
+  keeps the kernels' per-page fatal counts resident on device,
+  accumulating across steps; every N steps one readback drains them and
+  the reactive scrub covers the union of flagged pages.  The fused kernels
+  repair on read with a value-independent fill, so deferring the HBM
+  scrub never changes the tokens.  ``Engine.metrics()`` reports
+  ``n_host_syncs`` — the blocking device→host readback count the drain
+  exists to shrink — plus per-stage wall-clock totals.
+
 ``launch.serve.generate(..., paged=True)`` is the single-request degenerate
 case of this engine.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -220,6 +242,20 @@ class Engine:
             params = jax.device_put(params, self.params_shardings)
         self.params = params
         self.pool = PagedKVPool(model, self.space, self.cfg)
+        # observation counters the hot path reports through (must exist
+        # before any helper that syncs is first called)
+        self.n_host_syncs = 0
+        self.stage_wall_s: Dict[str, float] = {
+            "admit": 0.0, "prefill": 0.0, "decode": 0.0,
+            "repair": 0.0, "guard": 0.0,
+        }
+        # device-local sharded hot path: engaged only when the pool's page
+        # axis is genuinely sharded over exactly one mesh axis (divisible
+        # row count) — otherwise the single-device kernel walk stays
+        axis = self.pool.page_shard_axis()
+        self._kernel_shard = (
+            (self.space.mesh, axis) if axis is not None else None
+        )
         # tiered KV (README §Serving engine — "Tiered KV"): a host-memory
         # exact tier preemption swaps to (boundary scrub on the way out)
         # and prefix-cache eviction demotes into
@@ -234,7 +270,10 @@ class Engine:
         self.sched = Scheduler(
             self.pool, self.cfg, cache=self.cache, tiers=self.tiers
         )
-        self.repair = PageRepairManager(self.pool, self.space, self.cfg)
+        self.repair = PageRepairManager(
+            self.pool, self.space, self.cfg,
+            on_host_sync=self._note_host_sync,
+        )
         # the one greedy step builder (shared with launch.serve.generate, so
         # the engine-vs-generate token-parity contract cannot drift)
         self._step_fn = jax.jit(
@@ -261,6 +300,16 @@ class Engine:
         )
         self._prefilling: List[Request] = []   # mid-prefill (chunk) lane
         self.kernel_counts = np.zeros(8, np.int64)   # fused AT_* totals
+        # desynchronized stats drain (drain_interval > 0): fused-lane
+        # counters accumulate on device; one concatenated readback per
+        # drain window feeds the reactive scrub
+        self._desync = (
+            self.cfg.drain_interval > 0 and self._paged_fn is not None
+        )
+        self._pending = None            # device (n_pages+1+8,) accumulator
+        self._pending_covered: set = set()
+        self._pending_attr: List[Tuple[List[int], Any]] = []
+        self._steps_since_drain = 0
         self._stream = stats_lib.zeros()
         self._requests: Dict[int, Request] = {}
         self.results: Dict[int, Dict[str, Any]] = {}
@@ -312,6 +361,13 @@ class Engine:
         # entries could point at pages since freed and reallocated
         self._last_touched = []
 
+        # (0) deferred stats drain: runs BEFORE this step's flips land, so
+        # a drain_interval=1 engine scrubs exactly the pages the lockstep
+        # engine scrubbed inside the previous step — the pool bits entering
+        # stage (1) are identical and the token trajectory replays
+        if self._desync and self._steps_since_drain >= self.cfg.drain_interval:
+            self._drain_pending()
+
         # (1) simulation boundary: one window of flips strikes the pool —
         # the same stats-threading injection entry point the train loop's
         # inject_state uses (flips land in the engine's functional stream,
@@ -326,6 +382,9 @@ class Engine:
         # (2) admission.  A preempted lane member leaves the lane here: a
         # recompute victim restarts from scratch when re-admitted, a swap
         # victim rejoins the lane at its saved chunk position on swap-in.
+        # (On the gathered fallback the whole-prompt prefill rides inside
+        # admission, so its wall time lands in the "admit" bucket.)
+        t_admit = time.perf_counter()
         self._prefilling = [
             r for r in self._prefilling if r.state is RequestState.RUNNING
         ]
@@ -384,19 +443,24 @@ class Engine:
                 self.cache.insert(req)
             if req.state is RequestState.RUNNING and self._maybe_finish(req):
                 finished.append(req.rid)
+        self.stage_wall_s["admit"] += time.perf_counter() - t_admit
 
         # (3) the fused prefill lane: one prompt chunk per mid-prefill
         # request, straight off the pool, then ONE reactive pass from the
         # summed per-page fatal counts (per-request passes would scrub a
         # faulty shared/null page once per request — the gathered path
-        # charges it once per step)
+        # charges it once per step).  The counter vectors stay on device
+        # through the lane; `_flush_lane` reads them back (lockstep) or
+        # parks them in the pending accumulator (desync).
         if self._prefilling:
-            page_counts = np.zeros((self.cfg.n_pages + 1,), np.int64)
+            t_pre = time.perf_counter()
+            page_counts = counts = None
             covered = {self.pool.null_page}
             still: List[Request] = []
             for req in self._prefilling:
-                counts_r, done = self._prefill_paged(req, emitted)
-                page_counts += counts_r
+                pc_r, cnt_r, done = self._prefill_paged(req, emitted)
+                page_counts = pc_r if page_counts is None else page_counts + pc_r
+                counts = cnt_r if counts is None else counts + cnt_r
                 covered.update(req.pages)
                 if not done:
                     still.append(req)
@@ -409,9 +473,8 @@ class Engine:
             self._last_touched = sorted(
                 set(self._last_touched) | (covered - {self.pool.null_page})
             )
-            self._stream = self.repair.repair_counts(
-                page_counts, covered, self._stream
-            )
+            self.stage_wall_s["prefill"] += time.perf_counter() - t_pre
+            self._flush_lane(page_counts, counts, covered)
 
         # (4) one decode step + the reactive repair pass.  Reserving a page
         # for one request may preempt another — both one that hasn't
@@ -434,27 +497,34 @@ class Engine:
                 # fused path: the kernel repairs fatal lanes on read and IS
                 # the detector — decode first, then scrub the resident pool
                 # pages its per-page counts flagged (reactive write-back)
-                page_counts = self._decode_paged(decodable, emitted)
-                self._stream = self.repair.repair_counts(
-                    page_counts,
-                    set(touched) | {self.pool.null_page},
-                    self._stream,
+                t_dec = time.perf_counter()
+                page_counts, counts = self._decode_paged(decodable, emitted)
+                self.stage_wall_s["decode"] += time.perf_counter() - t_dec
+                self._flush_lane(
+                    page_counts, counts, set(touched) | {self.pool.null_page}
                 )
             else:
+                t_rep = time.perf_counter()
                 self._stream = self.repair.repair_step(touched, self._stream)
+                self.stage_wall_s["repair"] += time.perf_counter() - t_rep
+                t_dec = time.perf_counter()
                 self._decode(decodable, emitted)
+                self.stage_wall_s["decode"] += time.perf_counter() - t_dec
             for req in decodable:
                 if self._maybe_finish(req):
                     finished.append(req.rid)
 
         # (5) background sweep tick
+        t_rep = time.perf_counter()
         self._stream = self.repair.sweep_step(t, self._stream)
+        self.stage_wall_s["repair"] += time.perf_counter() - t_rep
 
         # (6) autopilot guard: close the observation window; a trip swapped
         # the pool RuleSet, so the fused executables that closed over the
         # old rules' detectors/fills must be rebuilt (the gathered _step_fn
         # is rules-independent — the engine space never scrubs in-step)
         if self.guard is not None:
+            t_grd = time.perf_counter()
             decisions = self.guard.tick()
             if decisions:
                 self.autopilot_trips += len(decisions)
@@ -473,7 +543,17 @@ class Engine:
                     if self.paged_plan is not None and self.paged_plan.prefill
                     else None
                 )
+                # a trip may have forced the gathered fallback — flush any
+                # deferred counters before the fused path goes away
+                self._desync = (
+                    self.cfg.drain_interval > 0 and self._paged_fn is not None
+                )
+                if not self._desync:
+                    self.drain()
+            self.stage_wall_s["guard"] += time.perf_counter() - t_grd
 
+        if self._desync:
+            self._steps_since_drain += 1
         self._t += 1
         for rid, toks in emitted.items():
             self.tokens_emitted += len(toks)
@@ -492,7 +572,80 @@ class Engine:
                 raise RuntimeError(
                     f"engine made no progress in {max_idle_steps} steps"
                 )
+        self.drain()        # park nothing: scrub what the last window flagged
         return self.results
+
+    # ----------------------------------------------------- stats drain
+    def _note_host_sync(self) -> None:
+        self.n_host_syncs += 1
+
+    def _host(self, x) -> np.ndarray:
+        """Blocking device→host readback — every hot-path sync funnels
+        through here so ``metrics()["n_host_syncs"]`` audits them all."""
+        self.n_host_syncs += 1
+        return np.asarray(x)
+
+    def _flush_lane(self, page_counts, counts, covered) -> None:
+        """One fused lane's kernel counters.  Lockstep: read both vectors
+        back now and run the reactive pass.  Desync: fold them into the
+        resident pending accumulator — ONE concatenated device array, so a
+        later drain costs a single readback no matter how many lanes and
+        steps it covers."""
+        if page_counts is None:
+            return
+        if self._desync:
+            pending = jnp.concatenate(
+                [jnp.asarray(page_counts, jnp.int32),
+                 jnp.asarray(counts, jnp.int32)]
+            )
+            self._pending = (
+                pending if self._pending is None else self._pending + pending
+            )
+            self._pending_covered |= set(covered)
+            return
+        pc = self._host(page_counts)
+        self.kernel_counts += self._host(counts).astype(np.int64)
+        t0 = time.perf_counter()
+        self._stream = self.repair.repair_counts(pc, covered, self._stream)
+        self.stage_wall_s["repair"] += time.perf_counter() - t0
+
+    def _resolve_attr(self) -> None:
+        """Charge the per-page ledger with the event deltas a drain-time
+        scrub deferred (device scalars by now long computed)."""
+        attrs, self._pending_attr = self._pending_attr, []
+        for pages, delta in attrs:
+            d = int(self._host(delta))
+            if d > 0:
+                self.pool.attribute(pages, d)
+
+    def _drain_pending(self) -> None:
+        """One deferred drain: resolve the previous drain's attribution,
+        read the whole pending accumulator back in ONE sync, and scrub the
+        union of flagged pages (its own attribution deferred in turn)."""
+        self._resolve_attr()
+        self._steps_since_drain = 0
+        if self._pending is None:
+            return
+        pend = self._host(self._pending)
+        n_rows = self.cfg.n_pages + 1
+        page_counts, counts = pend[:n_rows], pend[n_rows:]
+        self.kernel_counts += counts.astype(np.int64)
+        covered = self._pending_covered
+        self._pending = None
+        self._pending_covered = set()
+        t0 = time.perf_counter()
+        self._stream = self.repair.repair_counts(
+            page_counts, covered, self._stream, defer=self._pending_attr
+        )
+        self.stage_wall_s["repair"] += time.perf_counter() - t0
+
+    def drain(self) -> None:
+        """Flush every deferred readback: the pending kernel counters, the
+        reactive scrub they drive, and that scrub's ledger attribution.
+        ``metrics()`` and the end of ``run()`` call this; a lockstep
+        (``drain_interval == 0``) engine no-ops."""
+        self._drain_pending()
+        self._resolve_attr()
 
     # -------------------------------------------------------------- internals
     def _build_paged_step(self, spec: _PagedDecodePlan):
@@ -501,11 +654,13 @@ class Engine:
         tree is donated — the in-place write-back of the one resident."""
         model, n_rows = self.model, self.cfg.n_pages + 1
         split_k = self._split_k
+        shard = self._kernel_shard
 
         def paged_step(params, pool_tree, batch, bt, pos, stats):
             logits, pool_tree, slot_counts, counts = model.serve_step_paged(
                 params, pool_tree, batch, bt, pos,
                 detectors=spec.detectors, fills=spec.fills, split_k=split_k,
+                shard=shard,
             )
             nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
             page_counts = jnp.zeros((n_rows,), jnp.int32).at[bt].add(
@@ -522,11 +677,13 @@ class Engine:
         distinct chunk width (``q_len`` is a traced operand — ragged tails
         share the executable with full chunks)."""
         model, n_rows = self.model, self.cfg.n_pages + 1
+        shard = self._kernel_shard
 
         def prefill_step(params, pool_tree, batch, bt, q_start, q_len, stats):
             logits, pool_tree, slot_counts, counts = model.prefill_paged(
                 params, pool_tree, batch, bt, q_start, q_len,
                 detectors=spec.detectors, fills=spec.fills,
+                shard=shard,
             )
             last = jnp.maximum(q_len - 1, 0)
             nxt = jnp.argmax(
@@ -569,20 +726,22 @@ class Engine:
             # work the engine already did once — the recompute bill the
             # tier swap exists to avoid
             self.prefill_tokens_recomputed += len(toks) - n_cached
-        tok = int(np.asarray(nxt)[0])
+        tok = int(self._host(nxt)[0])
         req.tokens.append(tok)
         emitted.setdefault(req.rid, []).append(tok)
 
     def _prefill_paged(
         self, req: Request, emitted: Dict[int, List[int]]
-    ) -> Tuple[np.ndarray, bool]:
+    ) -> Tuple[jax.Array, jax.Array, bool]:
         """One fused prompt chunk straight off the pool: write the chunk's
         K/V into the request's pages and attend via the chunked-q paged
         kernel — zero full-view copies.  ``prefill_chunk == 0`` consumes
         the whole remaining context in one chunk.  Returns the kernel's
-        per-page fatal counts and whether the prefill completed (the first
-        generated token is emitted only then — greedy readout at the last
-        prompt position, same as the gathered path)."""
+        per-page fatal counts and AT_* counter vector as DEVICE arrays
+        (the caller's lane flush decides when to read them back), plus
+        whether the prefill completed (the first generated token is
+        emitted only then — greedy readout at the last prompt position,
+        same as the gathered path)."""
         toks = req.prefill_tokens()
         start = req.cached_tokens + req.prefill_pos
         rest = toks[start:]
@@ -600,7 +759,6 @@ class Engine:
                 jnp.asarray([q_len], jnp.int32), self._stream,
             )
         )
-        self.kernel_counts += np.asarray(counts, np.int64)
         req.prefill_pos += q_len
         done = start + q_len >= len(toks)
         if done:
@@ -609,10 +767,10 @@ class Engine:
             self.prefill_tokens_saved += req.cached_tokens
             if req.n_preempted:
                 self.prefill_tokens_recomputed += len(toks) - req.cached_tokens
-            tok = int(np.asarray(nxt)[0])
+            tok = int(self._host(nxt)[0])
             req.tokens.append(tok)
             emitted.setdefault(req.rid, []).append(tok)
-        return np.asarray(page_counts), done
+        return page_counts, counts, done
 
     def _decode_batch(
         self, reqs: List[Request]
@@ -629,7 +787,7 @@ class Engine:
         return bt, tokens, pos
 
     def _emit(self, reqs, nxt, emitted) -> None:
-        nxt = np.asarray(nxt)
+        nxt = self._host(nxt)
         for req in reqs:
             tok = int(nxt[req.slot])
             req.tokens.append(tok)
@@ -651,10 +809,12 @@ class Engine:
 
     def _decode_paged(
         self, reqs: List[Request], emitted: Dict[int, List[int]]
-    ) -> np.ndarray:
+    ) -> Tuple[jax.Array, jax.Array]:
         """Fused decode straight off the pool: zero full-view copies.  The
         donated pool tree is replaced in place; returns the kernel's
-        per-page fatal counts (the reactive detector's input)."""
+        per-page fatal counts and AT_* counter vector as DEVICE arrays
+        (the reactive detector's input — read back by the lane flush or a
+        later drain, never here)."""
         bt, tokens, pos = self._decode_batch(reqs)
         nxt, self.pool.tree, page_counts, counts, self._stream = (
             self._paged_fn(
@@ -662,9 +822,8 @@ class Engine:
                 jnp.asarray(bt), jnp.asarray(pos), self._stream,
             )
         )
-        self.kernel_counts += np.asarray(counts, np.int64)
         self._emit(reqs, nxt, emitted)
-        return np.asarray(page_counts)
+        return page_counts, counts
 
     def _maybe_finish(self, req: Request) -> bool:
         if req.done or req.n_context >= self.cfg.max_seq:
@@ -726,9 +885,16 @@ class Engine:
         return out
 
     def metrics(self) -> Dict[str, Any]:
+        self.drain()        # metrics reflect a fully flushed engine
         toks = max(self.tokens_emitted, 1)
+        steps = max(self._t, 1)
         return {
             "tokens_emitted": self.tokens_emitted,
+            "n_host_syncs": self.n_host_syncs,
+            "host_syncs_per_step": self.n_host_syncs / steps,
+            "drain_interval": self.cfg.drain_interval,
+            "sharded_kernels": self._kernel_shard is not None,
+            "stage_wall_s": dict(self.stage_wall_s),
             "prefill_tokens_saved": self.prefill_tokens_saved,
             "prefill_tokens_recomputed": self.prefill_tokens_recomputed,
             "n_preemptions": self.sched.n_preemptions,

@@ -209,6 +209,34 @@ class PagedKVPool:
         self.n_scatters = 0
 
     # -------------------------------------------------------------- geometry
+    def page_shard_axis(self) -> Optional[str]:
+        """The mesh axis the pool's page axis is genuinely sharded over —
+        or None.  Non-None iff EVERY leaf's leading (page) dimension is
+        partitioned over the same single mesh axis AND the page count
+        divides that axis's size (shard_map needs equal shards; the
+        ``spec_for_leaf`` rule degrades to replicated otherwise).  The
+        engine uses this to decide whether the fused kernels can run the
+        device-local sharded walk (README §Serving engine, "Sharded decode
+        & load testing")."""
+        if self.shardings is None or self.space.mesh is None:
+            return None
+        axes = set()
+        for s in jax.tree.leaves(self.shardings):
+            part = s.spec[0] if len(s.spec) > 0 else None
+            if isinstance(part, (tuple, list)):
+                if len(part) != 1:
+                    return None
+                part = part[0]
+            axes.add(part)
+        if len(axes) != 1:
+            return None
+        axis = axes.pop()
+        if axis is None:
+            return None
+        if (self.cfg.n_pages + 1) % self.space.mesh.shape[axis] != 0:
+            return None
+        return axis
+
     @property
     def total_bytes(self) -> int:
         """Bytes of the whole pool (what a whole-cache scrub processes)."""

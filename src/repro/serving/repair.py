@@ -30,7 +30,7 @@ granularity:
 """
 from __future__ import annotations
 
-from typing import Iterable, List, Sequence, Set
+from typing import Callable, Iterable, List, Optional, Sequence, Set
 
 import numpy as np
 
@@ -45,7 +45,11 @@ class PageRepairManager:
     """Owns the dirty set, the sweep cursor, and the repair-mode dispatch."""
 
     def __init__(
-        self, pool: PagedKVPool, space: ApproxSpace, cfg: ServingConfig
+        self,
+        pool: PagedKVPool,
+        space: ApproxSpace,
+        cfg: ServingConfig,
+        on_host_sync: Optional[Callable[[], None]] = None,
     ):
         self.pool = pool
         self.space = space
@@ -55,6 +59,10 @@ class PageRepairManager:
         self._sweep_cursor = 0
         self.n_reactive_scrubs = 0
         self.n_sweep_scrubs = 0
+        # the engine's device->host readback counter: every point where this
+        # manager forces a blocking device read reports through it, so the
+        # desynchronized drain's "strictly fewer syncs" claim is auditable
+        self._on_host_sync = on_host_sync or (lambda: None)
 
     # ----------------------------------------------------------- kernel route
     def note_kernel(self, counts, touched: Iterable[int]) -> None:
@@ -88,6 +96,7 @@ class PageRepairManager:
         if scope == "none":
             return stats
         candidates = set(touched) | self._dirty | {self.pool.null_page}
+        self._on_host_sync()          # the probe blocks on a device read
         faulty = self.pool._probe_fatal_pages(candidates)
         return self._scrub_faulty(scope, faulty, stats)
 
@@ -96,6 +105,7 @@ class PageRepairManager:
         page_counts,
         covered: Sequence[int],
         stats: stats_lib.Stats,
+        defer: Optional[List] = None,
     ) -> stats_lib.Stats:
         """Reactive repair driven by the fused paged kernels' per-page
         fatal counts — the replacement for the ``fatal_pages`` probe on
@@ -113,6 +123,13 @@ class PageRepairManager:
         resident afterwards, never counted.  The probe (which ran before
         the write) counted it.  Repairing only what a read would consume
         is the paper's thesis; the probe was strictly more conservative.
+
+        ``defer`` is the desynchronized engine's attribution queue: instead
+        of blocking twice on ``stats["events"]`` to charge the per-page
+        ledger, the scrub's event delta stays a device scalar and is
+        appended as ``(faulty_pages, delta)`` for the *next* drain to
+        resolve — the drain-time scrub itself then costs zero extra host
+        syncs.
         """
         scope = serving_scope(self.cfg.repair)
         if scope == "none":
@@ -121,13 +138,18 @@ class PageRepairManager:
         faulty = [int(p) for p in np.nonzero(counts > 0)[0]]
         stale = self._dirty - set(covered)
         if stale:
+            self._on_host_sync()
             faulty = sorted(
                 set(faulty) | set(self.pool._probe_fatal_pages(stale))
             )
-        return self._scrub_faulty(scope, faulty, stats)
+        return self._scrub_faulty(scope, faulty, stats, defer=defer)
 
     def _scrub_faulty(
-        self, scope: str, faulty: Sequence[int], stats: stats_lib.Stats
+        self,
+        scope: str,
+        faulty: Sequence[int],
+        stats: stats_lib.Stats,
+        defer: Optional[List] = None,
     ) -> stats_lib.Stats:
         """Shared tail of the probe- and kernel-driven reactive passes:
         scrub faulty ∪ dirty, clear the dirty set, attribute events."""
@@ -135,13 +157,20 @@ class PageRepairManager:
         self._dirty.clear()
         if not scrub_set:
             return stats
-        events0 = int(stats["events"])
+        events0 = stats["events"]
+        if defer is None:
+            self._on_host_sync()
+            events0 = int(events0)
         stats = self.pool.scrub_scope(
             scope, scrub_set, stats, trigger="reactive"
         )
         self.n_reactive_scrubs += 1
         # the ledger charges only pages that actually held a fatal lane —
         # dirty-but-clean pages (kernel routing false positives) stay clean
+        if defer is not None:
+            defer.append((list(faulty), stats["events"] - events0))
+            return stats
+        self._on_host_sync()
         delta = int(stats["events"]) - events0
         if delta > 0:
             self.pool.attribute(faulty, delta)
